@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, table formatting, result capture."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench")
+
+
+def save_result(name: str, payload: Dict) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timeit(fn: Callable, *args, repeat: int = 3, **kw):
+    """(result, best_seconds) — best-of-N wall time."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def table(headers: List[str], rows: List[List]) -> str:
+    w = [max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+         for i, h in enumerate(headers)]
+    out = ["  ".join(str(h).rjust(w[i]) for i, h in enumerate(headers))]
+    out.append("  ".join("-" * w[i] for i in range(len(headers))))
+    for r in rows:
+        out.append("  ".join(str(c).rjust(w[i]) for i, c in enumerate(r)))
+    return "\n".join(out)

@@ -1,0 +1,80 @@
+"""Beyond-paper benchmark: the paper's balancer as MoE expert placement.
+
+Simulates deepseek-style routing drift (a skewed expert popularity that
+shifts over time) and compares three placement policies on (a) max/avg
+token load across EP ranks, (b) expert-migration traffic, (c) cross-rank
+co-activation (token duplication proxy — the ext/int analogue):
+
+  static      — never move experts (the default in most MoE systems)
+  greedy      — re-place all experts by load every period (GreedyLB analog)
+  diff-comm   — the paper's three-stage balancer on the expert graph
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result, table
+from repro.distributed import ep_balance as eb
+
+
+def _route(E, T, k, phase, rng):
+    """Skewed routing with drifting hotspot: popularity ∝ zipf rotated by
+    ``phase``."""
+    ranks = (np.arange(E) - phase) % E
+    p = 1.0 / (1 + ranks.astype(np.float64)) ** 1.2
+    p /= p.sum()
+    flat = rng.choice(E, size=T * k, p=p)
+    return flat.reshape(T, k)
+
+
+def _ext_coact(stats: eb.ExpertStats, placement) -> float:
+    E = stats.num_experts
+    same = stats.coact * (placement[:, None] == placement[None, :])
+    tot = stats.coact.sum()
+    return float((tot - same.sum()) / max(same.sum(), 1e-9))
+
+
+def run(E: int = 64, R: int = 8, periods: int = 12, T: int = 4096,
+        k: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    bytes_per_expert = 3 * 4096 * 14336 * 2 / 2**20   # MiB, llama-ish
+
+    results = {}
+    for policy in ["static", "greedy", "diff-comm"]:
+        stats = eb.ExpertStats(E, ema=0.7)
+        placement = (np.arange(E) * R // E).astype(np.int32)
+        ma, moved, ext = [], 0, []
+        for t in range(periods):
+            ids = _route(E, T, k, phase=t * 3, rng=rng)
+            stats.update(ids)
+            if policy != "static" and t % 2 == 1:
+                new, info = eb.plan_placement(
+                    stats, placement, R,
+                    strategy="greedy" if policy == "greedy" else "diff-comm")
+                moved += int((new != placement).sum())
+                placement = new
+            loads = np.bincount(ids.reshape(-1), minlength=E)
+            rank_load = np.bincount(placement, weights=loads, minlength=R)
+            ma.append(rank_load.max() / rank_load.mean())
+            ext.append(_ext_coact(stats, placement))
+        results[policy] = dict(
+            mean_max_avg=float(np.mean(ma)),
+            moved_experts=moved,
+            migration_mib=moved * bytes_per_expert,
+            mean_ext_coact=float(np.mean(ext)),
+        )
+
+    rows = [[p, f"{r['mean_max_avg']:.3f}", r["moved_experts"],
+             f"{r['migration_mib']:.0f}", f"{r['mean_ext_coact']:.2f}"]
+            for p, r in results.items()]
+    print(f"EP balance — {E} experts / {R} ranks, drifting zipf routing")
+    print(table(["policy", "max/avg", "moved", "migr MiB", "ext coact"],
+                rows))
+    assert results["diff-comm"]["mean_max_avg"] < results["static"]["mean_max_avg"]
+    assert results["diff-comm"]["moved_experts"] <= results["greedy"]["moved_experts"]
+    save_result("ep_balance", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig 2: 2D stencil, 16 PEs, tiled init, ±40% synthetic noise, K=4.
+
+Paper values: comm-based  max/avg 1.04, ext/int 0.06;
+              coord-based max/avg 1.02, ext/int 0.072.
+
+The paper's ext/int of ~0.06 at 16 PEs implies a large grid (surface/volume
+→ 4/side per tile); we use 64×64 (256 objects/PE, tile side 16 ⇒ tiled
+ext/int = 4·16/(2·16·16 - 4·16) ≈ 0.14 before noise... the paper's exact
+grid size is unstated, so we report 32..96 and compare the *relations*:
+both variants restore balance to ≤1.05 while keeping ext/int within ~20%
+of the tiled optimum, coord slightly better balance / slightly worse
+locality than comm (the paper's observation §V.A)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result, table
+from repro.core import api, metrics
+from repro.sim import stencil, synthetic, viz
+
+
+def run(grid: int = 64, pes: int = 16, k: int = 4, noise: float = 0.4,
+        seed: int = 1):
+    prob = stencil.stencil_2d(grid, grid, pes, mapping="tiled")
+    prob = synthetic.random_pm(prob, noise, seed=seed)
+    before = metrics.evaluate(prob)
+    rows = [["initial", f"{before['max_avg_load']:.3f}",
+             f"{before['ext_int_comm']:.3f}", "-", "-"]]
+    out = dict(before=before)
+    for variant in ("diff-comm", "diff-coord"):
+        plan = api.run_strategy(variant, prob, k=k)
+        out[variant] = plan.info
+        rows.append([
+            variant, f"{plan.info['max_avg_load']:.3f}",
+            f"{plan.info['ext_int_comm']:.3f}",
+            f"{plan.info['pct_migrations']*100:.1f}%",
+            f"{plan.info['plan_seconds']:.2f}s",
+        ])
+        a = plan.assignment
+        out[variant + "_locality"] = viz.locality_summary(a, grid, grid)
+    print(f"Fig 2 — {grid}x{grid} stencil, {pes} PEs, ±{noise:.0%}, K={k}")
+    print(table(["strategy", "max/avg", "ext/int", "%migr", "plan"], rows))
+    print("paper: comm 1.04/.06, coord 1.02/.072 (relations: both balance; "
+          "coord trades locality for roundness)")
+    save_result("fig2_stencil", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

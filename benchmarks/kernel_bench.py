@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: oracle wall time at simulator scale + the
+structural (VMEM/roofline) accounting for the Pallas kernels.
+
+Interpret-mode Pallas is Python-slow, so wall time is measured on the jnp
+oracle (numerically identical); the Pallas path is validated for
+correctness in tests/test_kernels.py and characterized here structurally:
+bytes touched per sweep, VMEM working set per block, arithmetic intensity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_result, table, timeit
+from repro.core.virtual_lb import reference_sweep, reverse_slots
+
+
+def diffusion_numbers(P: int, K: int, block_p: int = 512):
+    bytes_hbm = (P * 4 * 2          # x, own read
+                 + P * K * (4 + 1 + 4)   # nbr idx, mask, rev
+                 + P * K * 4 * 2    # push write+read
+                 + P * 4 * 2 + P * K * 4)
+    flops = P * K * 6
+    vmem = (P * 4 * 2 + block_p * K * (4 + 1 + 4) + block_p * K * 4)
+    return dict(bytes=bytes_hbm, flops=flops, intensity=flops / bytes_hbm,
+                vmem_block=vmem)
+
+
+def run():
+    rows = []
+    out = {}
+    for P, K in [(4096, 4), (65536, 8), (1_048_576, 8)]:
+        rng = np.random.default_rng(0)
+        cols = [(np.arange(P) + h) % P for h in range(1, K // 2 + 1)]
+        cols += [(np.arange(P) - h) % P for h in range(1, K - len(cols) + 1)]
+        nbr = jnp.asarray(np.stack(cols[:K], 1).astype(np.int32))
+        mask = jnp.ones((P, K), bool)
+        rev = reverse_slots(nbr, mask)
+        x = jnp.asarray(rng.random(P).astype(np.float32))
+
+        sweep = jax.jit(lambda x, own: reference_sweep(
+            x, own, nbr, mask, rev, jnp.float32(1.0 / (K + 1)), True))
+        sweep(x, x)[0].block_until_ready()            # compile
+        _, sec = timeit(lambda: sweep(x, x)[0].block_until_ready())
+        n = diffusion_numbers(P, K)
+        tpu_est_us = n["bytes"] / 819e9 * 1e6         # HBM-bound estimate
+        rows.append([f"P={P:>8} K={K}", f"{sec*1e3:.2f}ms",
+                     f"{n['bytes']/2**20:.1f}", f"{n['intensity']:.2f}",
+                     f"{n['vmem_block']/2**10:.0f}KiB", f"{tpu_est_us:.0f}us"])
+        out[f"P{P}_K{K}"] = dict(cpu_oracle_s=sec, **n,
+                                 tpu_hbm_bound_us=tpu_est_us)
+    print("diffusion sweep (the balancer's hot loop at simulator scale)")
+    print(table(["config", "cpu oracle", "MiB/sweep", "flop/byte",
+                 "VMEM/blk", "TPU est"], rows))
+    save_result("kernel_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one entry per paper table/figure + the
+beyond-paper framework benchmarks.
+
+  python -m benchmarks.run            # everything (≈ a few minutes on CPU)
+  python -m benchmarks.run fig4 roofline    # a subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (ep_balance_bench, fig2_stencil, fig4_pic_lb,
+                        fig5_scaling, kernel_bench, roofline,
+                        table1_neighbor_count, table2_strategies)
+
+ALL = {
+    "fig2": fig2_stencil.run,
+    "table1": table1_neighbor_count.run,
+    "table2": table2_strategies.run,
+    "fig4": fig4_pic_lb.run,
+    "fig5": fig5_scaling.run,
+    "ep_balance": ep_balance_bench.run,
+    "kernels": kernel_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    failures = []
+    t0 = time.time()
+    for name in names:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+        try:
+            t1 = time.time()
+            ALL[name]()
+            print(f"-- {name} OK ({time.time()-t1:.1f}s)", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\n{'='*72}")
+    print(f"benchmarks done in {time.time()-t0:.0f}s; "
+          f"{len(names)-len(failures)}/{len(names)} OK"
+          + (f"; FAILED: {failures}" if failures else ""))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table I: ring of processors, single 10× hotspot, K ∈ {1,2,4,8}.
+
+Paper values:    K:        1      2      4      8
+  max/avg load         4.9    1.7    1.3    1.1
+  ext/int comm (MB)   .142   .151   .25    .26
+
+Claims validated: (1) balance improves monotonically with K (the hotspot
+can shed to more neighbors); (2) external/internal communication *rises*
+with K (distant/no-comm neighbors accept load — §V.B)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result, table
+from repro.core import api, metrics
+from repro.sim import stencil, synthetic
+
+PAPER = {1: (4.9, 0.142), 2: (1.7, 0.151), 4: (1.3, 0.25), 8: (1.1, 0.26)}
+
+
+def run(nx: int = 64, ny: int = 16, pes: int = 16, factor: float = 10.0):
+    prob = stencil.stencil_2d(nx, ny, pes, mapping="ring")
+    prob = synthetic.hotspot(prob, node=0, factor=factor)
+    before = metrics.evaluate(prob)
+    rows = []
+    out = dict(before=before, cells={})
+    for k in (1, 2, 4, 8):
+        info = api.run_strategy("diff-comm", prob, k=k).info
+        out["cells"][k] = info
+        pm, pe = PAPER[k]
+        rows.append([k, f"{info['max_avg_load']:.2f}", f"{pm}",
+                     f"{info['ext_int_comm']:.3f}", f"{pe}",
+                     f"{info['diffusion_iters']}"])
+    print(f"Table I — ring, one {factor:.0f}x hotspot "
+          f"(initial max/avg {before['max_avg_load']:.2f})")
+    print(table(["K", "max/avg", "paper", "ext/int", "paper", "iters"],
+                rows))
+    ks = sorted(out["cells"])
+    ma = [out["cells"][k]["max_avg_load"] for k in ks]
+    ei = [out["cells"][k]["ext_int_comm"] for k in ks]
+    assert all(a >= b - 0.05 for a, b in zip(ma, ma[1:])), "balance vs K"
+    assert ei[-1] > ei[0], "locality degrades with K (paper §V.B)"
+    save_result("table1_neighbor_count", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

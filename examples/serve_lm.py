@@ -1,0 +1,8 @@
+"""Batched serving example: continuous batching + diffusion scheduling.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

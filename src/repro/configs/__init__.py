@@ -1,0 +1,10 @@
+"""Assigned-architecture configs (``--arch <id>``) + shape registry."""
+from repro.configs.base import (
+    ARCHS, SHAPES, ArchSpec, Shape, get_arch, input_specs, list_archs,
+    materialize_batch, reduced_config, shape_applicable,
+)
+
+__all__ = [
+    "ARCHS", "SHAPES", "ArchSpec", "Shape", "get_arch", "input_specs",
+    "list_archs", "materialize_batch", "reduced_config", "shape_applicable",
+]

@@ -1,0 +1,167 @@
+"""Architecture registry and per-shape input specs.
+
+Every assigned architecture registers an ``ArchSpec`` with its exact
+published config, a reduced same-family smoke config, and the set of
+applicable input shapes.  ``input_specs`` returns ShapeDtypeStruct stand-ins
+(no allocation — the dry-run path), including stacked-cache structs for the
+decode shapes via ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    config: ModelConfig
+    reduced: ModelConfig
+    family: str                          # dense | moe | hybrid | ssm | audio | vlm
+    long_context: bool                   # sub-quadratic ⇒ long_500k applies
+    source: str
+    notes: str = ""
+
+
+_MODULES = [
+    "llama4_scout_17b_a16e",
+    "deepseek_v3_671b",
+    "smollm_135m",
+    "qwen1_5_110b",
+    "gemma3_1b",
+    "gemma3_27b",
+    "hymba_1_5b",
+    "musicgen_medium",
+    "xlstm_125m",
+    "paligemma_3b",
+]
+
+ARCHS: Dict[str, ArchSpec] = {}
+
+
+def _load():
+    if ARCHS:
+        return
+    for m in _MODULES:
+        mod = importlib.import_module(f"repro.configs.{m}")
+        spec: ArchSpec = mod.SPEC
+        ARCHS[spec.name] = spec
+
+
+def list_archs():
+    _load()
+    return sorted(ARCHS)
+
+
+def get_arch(name: str) -> ArchSpec:
+    _load()
+    return ARCHS[name]
+
+
+def reduced_config(name: str) -> ModelConfig:
+    return get_arch(name).config and get_arch(name).reduced
+
+
+def shape_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    """(applicable?, reason-if-not) — per the assignment's skip rules."""
+    a = get_arch(arch)
+    s = SHAPES[shape]
+    if s.name == "long_500k" and not a.long_context:
+        return False, ("pure full-attention arch: 500k decode needs "
+                       "sub-quadratic state (see DESIGN.md shape skips)")
+    return True, ""
+
+
+# ------------------------------------------------------------ input specs --
+
+
+def input_specs(cfg: ModelConfig, shape: Shape,
+                compute_dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStruct stand-ins for one (arch, shape) cell.
+
+    train:   {batch: {tokens/embeds, positions, labels}}
+    prefill: {batch: {tokens/embeds, positions}}
+    decode:  {tokens, index, cache}  (cache structs via eval_shape)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict = dict(positions=tok((B, S)))
+        if cfg.frontend == "audio_stub":
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   compute_dtype)
+            batch["tokens"] = None
+        elif cfg.frontend == "vision_stub":
+            p = cfg.vision_prefix
+            batch["embeds"] = jax.ShapeDtypeStruct((B, p, cfg.d_model),
+                                                   compute_dtype)
+            batch["tokens"] = tok((B, S - p))
+        else:
+            batch["tokens"] = tok((B, S))
+        if shape.kind == "train":
+            batch["labels"] = tok((B, S))
+            return dict(batch=batch)
+        return dict(batch=batch)
+
+    # decode: one new token against a seq_len-deep cache
+    from repro.models import transformer
+
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S, compute_dtype))
+    return dict(
+        tokens=tok((B, 1)),
+        index=jax.ShapeDtypeStruct((), i32),
+        cache=cache,
+    )
+
+
+def materialize_batch(cfg: ModelConfig, shape: Shape, seed: int = 0,
+                      compute_dtype=jnp.bfloat16) -> Dict:
+    """Small-scale concrete inputs (smoke tests / examples) matching
+    ``input_specs`` structure."""
+    specs = input_specs(cfg, shape, compute_dtype)
+    key = jax.random.PRNGKey(seed)
+
+    def fill(sds, k):
+        if sds.dtype == jnp.int32:
+            return jax.random.randint(k, sds.shape, 0,
+                                      max(2, min(cfg.vocab_size, 1000)), jnp.int32)
+        return jax.random.normal(k, sds.shape, jnp.float32).astype(sds.dtype)
+
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: x is None)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [None if l is None else fill(l, k) for l, k in zip(leaves, keys)]
+    mat = jax.tree.unflatten(treedef, out)
+    if "batch" in mat:
+        B, S = shape.global_batch, shape.seq_len
+        mat["batch"]["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S)).copy()
+    if "index" in mat:
+        mat["index"] = jnp.int32(shape.seq_len - 1)
+    return mat

@@ -1,0 +1,24 @@
+"""Core library: communication-aware diffusion load balancing (the paper's
+contribution), its coordinate variant, baselines, and metrics."""
+from repro.core.api import LBPlan, STRATEGIES, diffusion_lb, run_strategy
+from repro.core.comm_graph import (
+    LBProblem,
+    make_problem,
+    node_comm_matrix,
+    node_loads,
+    object_node_bytes,
+)
+from repro.core.metrics import evaluate
+
+__all__ = [
+    "LBPlan",
+    "LBProblem",
+    "STRATEGIES",
+    "diffusion_lb",
+    "evaluate",
+    "make_problem",
+    "node_comm_matrix",
+    "node_loads",
+    "object_node_bytes",
+    "run_strategy",
+]

@@ -1,0 +1,111 @@
+"""Public API: the three-stage communication-aware diffusion balancer.
+
+``diffusion_lb(problem)`` composes the stages of §III (plus the §IV
+coordinate variant) and returns a new assignment with planning stats.
+``STRATEGIES`` is the registry the simulator / benchmarks / framework
+integrations use.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, comm_graph, metrics
+from repro.core import neighbor_selection as ns
+from repro.core import object_selection as osel
+from repro.core import virtual_lb as vlb
+
+
+class LBPlan(NamedTuple):
+    assignment: np.ndarray
+    info: Dict
+
+
+def diffusion_lb(
+    problem: comm_graph.LBProblem,
+    *,
+    k: int = 4,
+    variant: str = "comm",          # "comm" (§III) | "coord" (§IV)
+    tol: float = 0.02,
+    max_iters: int = 512,
+    max_rounds: int = 64,
+    single_hop: bool = True,
+    step_fn: Optional[Callable] = None,
+) -> LBPlan:
+    t0 = time.perf_counter()
+
+    # -- stage 1: neighbor selection ------------------------------------
+    if variant == "comm":
+        node_comm = comm_graph.node_comm_matrix(problem)
+        pref = ns.comm_preference(node_comm)
+    elif variant == "coord":
+        assert problem.coords is not None, "coordinate variant needs coords"
+        cent = osel.centroids(
+            problem.coords, problem.assignment, problem.num_nodes
+        )
+        pref = ns.coordinate_preference(cent)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    nres = ns.select_neighbors(pref, k=k, max_rounds=max_rounds)
+
+    # -- stage 2: virtual load balancing ---------------------------------
+    nloads = comm_graph.node_loads(problem)
+    vres = vlb.virtual_balance(
+        nloads, nres.nbr_idx, nres.nbr_mask,
+        tol=tol, max_iters=max_iters, single_hop=single_hop, step_fn=step_fn,
+    )
+
+    # -- stage 3: object selection ----------------------------------------
+    sres = osel.select_objects(
+        problem, nres.nbr_idx, nres.nbr_mask, vres.flows,
+        metric="comm" if variant == "comm" else "coord",
+    )
+
+    info = dict(
+        strategy=f"diff-{variant}",
+        k=k,
+        protocol_rounds=int(nres.rounds),
+        mean_degree=float(np.mean(np.asarray(nres.degree))),
+        diffusion_iters=int(vres.iters),
+        diffusion_residual=float(vres.residual),
+        unrealized_flow=float(np.abs(np.asarray(sres.residual)).sum()),
+        plan_seconds=time.perf_counter() - t0,
+    )
+    return LBPlan(np.asarray(sres.assignment), info)
+
+
+# --------------------------------------------------------------- registry --
+
+
+def _wrap(fn):
+    def run(problem: comm_graph.LBProblem, **kw) -> LBPlan:
+        t0 = time.perf_counter()
+        a = fn(problem, **kw)
+        return LBPlan(np.asarray(a),
+                      dict(strategy=fn.__name__,
+                           plan_seconds=time.perf_counter() - t0))
+    return run
+
+
+def _none(problem: comm_graph.LBProblem) -> np.ndarray:
+    return np.asarray(problem.assignment)
+
+
+STRATEGIES: Dict[str, Callable[..., LBPlan]] = {
+    "none": _wrap(_none),
+    "diff-comm": lambda p, **kw: diffusion_lb(p, variant="comm", **kw),
+    "diff-coord": lambda p, **kw: diffusion_lb(p, variant="coord", **kw),
+    "greedy": _wrap(baselines.greedy),
+    "greedy-refine": _wrap(baselines.greedy_refine),
+    "metis": _wrap(baselines.metis_like),
+    "parmetis": _wrap(baselines.parmetis_like),
+}
+
+
+def run_strategy(name: str, problem: comm_graph.LBProblem, **kw) -> LBPlan:
+    plan = STRATEGIES[name](problem, **kw)
+    plan.info.update(metrics.evaluate(problem, jnp.asarray(plan.assignment)))
+    return plan

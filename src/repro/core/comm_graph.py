@@ -1,0 +1,150 @@
+"""Problem representation for the load balancer.
+
+Mirrors the paper's simulator input (§V): per-object loads, optional logical
+coordinates, a sparse weighted object-communication graph, and the current
+object→node assignment.  Everything is a fixed-shape JAX array so the whole
+planning pipeline is jit-able and usable inside the training framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LBProblem:
+    """A load-balancing problem instance.
+
+    Attributes:
+      loads:       (N,) f32 — per-object computational load.
+      assignment:  (N,) i32 — current object→node map, values in [0, P).
+      edges_src:   (E,) i32 — object comm graph, directed half (symmetrized
+                   on use).  Padded entries use src == dst == -1, bytes == 0.
+      edges_dst:   (E,) i32
+      edges_bytes: (E,) f32 — bytes exchanged per LB period on this edge.
+      coords:      (N, D) f32 or None — logical positions (coordinate variant).
+      num_nodes:   static int P.
+    """
+
+    loads: jax.Array
+    assignment: jax.Array
+    edges_src: jax.Array
+    edges_dst: jax.Array
+    edges_bytes: jax.Array
+    num_nodes: int = dataclasses.field(metadata=dict(static=True))
+    coords: Optional[jax.Array] = None
+
+    @property
+    def num_objects(self) -> int:
+        return int(self.loads.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges_src.shape[0])
+
+    def with_assignment(self, assignment: jax.Array) -> "LBProblem":
+        return dataclasses.replace(self, assignment=assignment)
+
+    def validate(self) -> None:
+        """Host-side sanity checks (tests / debugging, not in jit paths)."""
+        a = np.asarray(self.assignment)
+        assert a.ndim == 1 and a.shape[0] == self.num_objects
+        assert (a >= 0).all() and (a < self.num_nodes).all(), "bad assignment"
+        s, d = np.asarray(self.edges_src), np.asarray(self.edges_dst)
+        pad = s < 0
+        assert (s[~pad] < self.num_objects).all()
+        assert (d[~pad] < self.num_objects).all()
+        assert (np.asarray(self.edges_bytes)[pad] == 0).all()
+
+
+def node_loads(problem: LBProblem) -> jax.Array:
+    """(P,) total load per node."""
+    return jax.ops.segment_sum(
+        problem.loads, problem.assignment, num_segments=problem.num_nodes
+    )
+
+
+def node_comm_matrix(problem: LBProblem) -> jax.Array:
+    """(P, P) symmetric inter-node communication volume in bytes.
+
+    Aggregates the object comm graph up to node granularity.  The diagonal
+    holds *intra-node* bytes (used by the external/internal metric).  Dense
+    P×P is the simulator-scale representation; the distributed runtime keeps
+    only the local row block (see core/distributed.py).
+    """
+    P = problem.num_nodes
+    valid = problem.edges_src >= 0
+    src_n = jnp.where(valid, problem.assignment[problem.edges_src], 0)
+    dst_n = jnp.where(valid, problem.assignment[problem.edges_dst], 0)
+    w = jnp.where(valid, problem.edges_bytes, 0.0)
+    flat = src_n * P + dst_n
+    m = jax.ops.segment_sum(w, flat, num_segments=P * P).reshape(P, P)
+    m = m + m.T  # symmetrize; diagonal counts both directions of intra edges
+    return m
+
+
+def object_node_bytes(
+    problem: LBProblem,
+    nbr_idx: jax.Array,
+    assignment: Optional[jax.Array] = None,
+) -> jax.Array:
+    """(N, K) bytes each object exchanges with each of its node's neighbors.
+
+    ``nbr_idx`` is the (P, K) neighbor table (padded with -1).  Entry
+    ``[o, k]`` is the total bytes object ``o`` exchanges with objects that
+    currently live on node ``nbr_idx[assignment[o], k]``.
+
+    This is the paper's §III.C selection metric, including the "peers update
+    their patterns when an object moves" rule: callers re-invoke this with the
+    updated assignment between selection phases.
+    """
+    if assignment is None:
+        assignment = problem.assignment
+    N = problem.num_objects
+    K = nbr_idx.shape[1]
+    valid = problem.edges_src >= 0
+    src = jnp.where(valid, problem.edges_src, 0)
+    dst = jnp.where(valid, problem.edges_dst, 0)
+    w = jnp.where(valid, problem.edges_bytes, 0.0)
+
+    def one_direction(a, b):
+        # For edge a->b: add bytes to a's slot for the neighbor that owns b.
+        a_node = assignment[a]
+        b_node = assignment[b]
+        # (E, K) match of b_node against a's neighbor list.
+        a_nbrs = nbr_idx[a_node]  # (E, K)
+        match = (a_nbrs == b_node[:, None]) & (a_nbrs >= 0)
+        # flat scatter-add into (N, K)
+        flat_idx = a[:, None] * K + jnp.arange(K)[None, :]
+        contrib = jnp.where(match, w[:, None], 0.0)
+        return jax.ops.segment_sum(
+            contrib.reshape(-1), flat_idx.reshape(-1), num_segments=N * K
+        ).reshape(N, K)
+
+    return one_direction(src, dst) + one_direction(dst, src)
+
+
+def make_problem(
+    loads,
+    assignment,
+    edges,  # (E, 2) int array of object pairs
+    edge_bytes,
+    num_nodes: int,
+    coords=None,
+) -> LBProblem:
+    """Convenience constructor from host arrays."""
+    edges = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
+    return LBProblem(
+        loads=jnp.asarray(loads, jnp.float32),
+        assignment=jnp.asarray(assignment, jnp.int32),
+        edges_src=jnp.asarray(edges[:, 0], jnp.int32),
+        edges_dst=jnp.asarray(edges[:, 1], jnp.int32),
+        edges_bytes=jnp.asarray(edge_bytes, jnp.float32),
+        num_nodes=int(num_nodes),
+        coords=None if coords is None else jnp.asarray(coords, jnp.float32),
+    )

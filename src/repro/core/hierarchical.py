@@ -1,0 +1,43 @@
+"""Within-node (across-thread) refinement — paper §III.D.
+
+After the inter-node stages commit (via "proxy tokens" in Charm++; via the
+final assignment array here), load is balanced across the ``T`` threads of
+each node considering *load only*, no communication.  We use exact LPT
+(longest-processing-time-first) per node — the planning set per node is
+small, so a host loop is appropriate; this phase is not jitted in Charm++
+either.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def within_node_lpt(
+    loads: np.ndarray,
+    assignment: np.ndarray,
+    num_nodes: int,
+    threads_per_node: int,
+) -> np.ndarray:
+    """Return (N,) thread index in [0, T) for every object.
+
+    Global PE id of an object is then ``assignment * T + thread``.
+    """
+    loads = np.asarray(loads, np.float64)
+    assignment = np.asarray(assignment)
+    thread = np.zeros(assignment.shape[0], np.int32)
+    for node in range(num_nodes):
+        idx = np.nonzero(assignment == node)[0]
+        if idx.size == 0:
+            continue
+        order = idx[np.argsort(-loads[idx])]
+        tl = np.zeros(threads_per_node)
+        for o in order:
+            t = int(np.argmin(tl))
+            tl[t] += loads[o]
+            thread[o] = t
+    return thread
+
+
+def flatten_hierarchy(assignment, thread, threads_per_node: int):
+    """Object→global-PE map from (node, thread)."""
+    return np.asarray(assignment) * threads_per_node + np.asarray(thread)

@@ -1,0 +1,46 @@
+"""Cost metrics from the paper's problem definition (§II).
+
+  (1) load imbalance      — max / average node load;
+  (2) communication cost  — external / internal bytes ratio;
+  (3) migration cost      — fraction of objects that moved;
+  (4) strategy cost       — wall time of computing the mapping (recorded by
+      the simulator, not here).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_graph
+
+
+def evaluate(
+    problem: comm_graph.LBProblem,
+    assignment: Optional[jax.Array] = None,
+) -> Dict[str, float]:
+    a = problem.assignment if assignment is None else assignment
+    nl = jax.ops.segment_sum(problem.loads, a, num_segments=problem.num_nodes)
+    nl = np.asarray(nl)
+    avg = nl.mean() + 1e-30
+
+    valid = np.asarray(problem.edges_src) >= 0
+    src_n = np.asarray(a)[np.asarray(problem.edges_src) * valid]
+    dst_n = np.asarray(a)[np.asarray(problem.edges_dst) * valid]
+    w = np.asarray(problem.edges_bytes) * valid
+    ext = w[src_n != dst_n].sum()
+    internal = w[src_n == dst_n].sum()
+
+    moved = float(np.mean(np.asarray(a) != np.asarray(problem.assignment)))
+    return dict(
+        max_avg_load=float(nl.max() / avg),
+        ext_int_comm=float(ext / (internal + 1e-30)),
+        ext_bytes=float(ext),
+        int_bytes=float(internal),
+        pct_migrations=moved,
+        node_load_std=float(nl.std() / avg),
+        max_load=float(nl.max()),
+        avg_load=float(avg),
+    )

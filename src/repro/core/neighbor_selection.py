@@ -1,0 +1,173 @@
+"""Stage 1 — distributed K-neighbor selection (paper §III.A).
+
+The paper's protocol is asynchronous message passing; on TPU we realize the
+same fixed point as *synchronous vectorized rounds* (see DESIGN.md §2):
+
+  round:
+    1. every node with l = K - confirmed missing neighbors sends requests to
+       its top ceil(l/2) untried candidates, ordered by decreasing
+       communication volume (or any caller-provided preference score);
+    2. request targets grant up to  K - confirmed - granted  incoming
+       requests (the paper's `holds` bookkeeping), preferring high-comm
+       requesters;
+    3. requesters confirm grants up to their remaining budget
+       K - confirmed - (grants they handed out this round) and send the final
+       ack — only acked pairs become edges, un-acked grants release their
+       hold, exactly as in the paper.
+
+Rounds iterate until every node has min(K, #candidates) neighbors or
+``max_rounds`` is hit.  The degree bound (≤ K) holds by construction at every
+round — see tests/test_neighbor_selection.py property tests.
+
+Representation: dense (P, P) preference/state matrices — this is the
+simulator-scale path (the paper's simulator is also centralized).  The
+distributed runtime shards rows; see core/distributed.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e30)
+
+
+class NeighborResult(NamedTuple):
+    nbr_idx: jax.Array     # (P, K) neighbor node ids, -1 padded
+    nbr_mask: jax.Array    # (P, K) bool
+    degree: jax.Array      # (P,) confirmed neighbor count
+    rounds: jax.Array      # scalar i32 — protocol rounds executed
+
+
+def _topk_mask(score: jax.Array, k: jax.Array) -> jax.Array:
+    """Row-wise boolean mask of the k(row) highest-scoring valid entries.
+
+    ``score`` is (P, P) with invalid entries already set to NEG; ``k`` is a
+    per-row (P,) count.  O(P^2 log P) via argsort — fine at simulator scale.
+    """
+    order = jnp.argsort(-score, axis=1)                      # descending
+    ranks = jnp.argsort(order, axis=1)                       # rank of each col
+    valid = score > NEG / 2
+    return valid & (ranks < k[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds"))
+def select_neighbors(
+    preference: jax.Array,
+    *,
+    k: int,
+    max_rounds: int = 64,
+) -> NeighborResult:
+    """Run the handshake protocol.
+
+    Args:
+      preference: (P, P) symmetric-ish score matrix; entry [i, j] is how much
+        node i wants node j as a neighbor (comm volume for the
+        communication variant, negated centroid distance for the coordinate
+        variant).  Non-candidates (zero comm) must be <= 0; the diagonal is
+        ignored.
+      k: desired degree K.
+      max_rounds: protocol round bound (paper's "upper-bound number of
+        iterations").
+    """
+    P = preference.shape[0]
+    eye = jnp.eye(P, dtype=bool)
+    candidate = (preference > 0) & ~eye
+    pref = jnp.where(candidate, preference, NEG)
+    # Number of neighbors a node can ever confirm.
+    max_possible = jnp.minimum(candidate.sum(axis=1), k)
+
+    class S(NamedTuple):
+        edges: jax.Array   # (P, P) bool, symmetric confirmed pairs
+        tried: jax.Array   # (P, P) bool, requests already issued by row node
+        rounds: jax.Array
+        stall: jax.Array   # consecutive rounds without a new confirmed pair
+
+    def degree(edges):
+        return edges.sum(axis=1)
+
+    def cond(s: S):
+        return (
+            (s.rounds < max_rounds)
+            & (s.stall < 4)  # give a couple of tried-reset retries, then stop
+            & jnp.any(degree(s.edges) < max_possible)
+        )
+
+    def body(s: S) -> S:
+        deg = degree(s.edges)
+        need = jnp.maximum(k - deg, 0)
+        # -- 1. requests: top ceil(need/2) untried, unconfirmed candidates.
+        n_req = jnp.where(need > 0, (need + 1) // 2, 0)
+        req_score = jnp.where(s.tried | s.edges, NEG, pref)
+        req = _topk_mask(req_score, n_req)                    # req[i, j]: i→j
+        # -- 1b. mutual requests pair directly (in the async protocol one
+        # side's request arrives first and is simply granted; the symmetric
+        # special case must not double-count both nodes' budgets).
+        mutual = req & req.T
+        mut_take = _topk_mask(jnp.where(mutual, pref, NEG), need)
+        mut_edge = mut_take & mut_take.T
+        edges = s.edges | mut_edge
+        deg = degree(edges)
+        req = req & ~mutual
+        # -- 2. grants: target j takes top (K - deg_j) incoming requests.
+        inc_score = jnp.where(req.T, pref, NEG)               # [j, i] view
+        grant_budget = jnp.maximum(k - deg, 0)
+        grant_t = _topk_mask(inc_score, grant_budget)         # [j, i]: j grants i
+        grant = grant_t.T                                     # [i, j]
+        granted_out = grant_t.sum(axis=1)                     # grants j handed out
+        # -- 3. acks: requester i confirms top (K - deg_i - granted_i) grants.
+        ack_budget = jnp.maximum(k - deg - granted_out, 0)
+        ack_score = jnp.where(grant, pref, NEG)
+        ack = _topk_mask(ack_score, ack_budget)               # [i, j] confirmed
+        edges = edges | ack | ack.T
+        # A node whose untried candidate list is exhausted but who is still
+        # under-degree gets its tried set cleared (retry next round — the
+        # rejections were due to transient `holds`).
+        tried = s.tried | req
+        untried_left = (jnp.where(tried | edges, NEG, pref) > NEG / 2).sum(axis=1)
+        exhausted = (untried_left == 0) & (degree(edges) < max_possible)
+        tried = jnp.where(exhausted[:, None], False, tried)
+        progressed = edges.sum() > s.edges.sum()
+        stall = jnp.where(progressed, 0, s.stall + 1)
+        return S(edges, tried, s.rounds + 1, stall)
+
+    init = S(jnp.zeros((P, P), bool), jnp.zeros((P, P), bool), jnp.int32(0),
+             jnp.int32(0))
+    final = jax.lax.while_loop(cond, body, init)
+
+    deg = final.edges.sum(axis=1)
+    # Extract padded (P, K) neighbor table, highest-preference first.
+    nbr_score = jnp.where(final.edges, pref, NEG)
+    order = jnp.argsort(-nbr_score, axis=1)[:, :k]            # (P, K)
+    taken = jnp.take_along_axis(final.edges, order, axis=1)
+    nbr_idx = jnp.where(taken, order, -1).astype(jnp.int32)
+    return NeighborResult(nbr_idx, taken, deg.astype(jnp.int32), final.rounds)
+
+
+def comm_preference(node_comm: jax.Array) -> jax.Array:
+    """Preference matrix for the communication variant.
+
+    Candidates are ordered by decreasing communication volume.  Nodes with
+    zero communication remain *last-resort* candidates (tiny epsilon floor):
+    the paper observes that under-filled nodes "may choose to migrate objects
+    to a neighbor with which [they have] no communication in an attempt to
+    distribute load" (§V.B) — that is what raises ext/int comm at high K in
+    Table I.
+    """
+    P = node_comm.shape[0]
+    eps = jnp.float32(1e-6) * (1.0 + node_comm.max())
+    return jnp.where(jnp.eye(P, dtype=bool), 0.0, node_comm + eps)
+
+
+def coordinate_preference(centroids: jax.Array) -> jax.Array:
+    """Preference for the coordinate variant (§IV): inverse centroid distance.
+
+    Note the paper's caveat: every node scores *all* others (O(P^2)), which is
+    the variant's scalability limit; kept faithful here.
+    """
+    d2 = jnp.sum(
+        (centroids[:, None, :] - centroids[None, :, :]) ** 2, axis=-1
+    )
+    return 1.0 / (d2 + 1e-9)

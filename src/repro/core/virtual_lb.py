@@ -1,0 +1,146 @@
+"""Stage 2 — virtual load balancing (paper §III.B).
+
+First-order diffusion (Cybenko [3], Hu-Blake [15]) restricted to the stage-1
+neighbor graph.  Only load *magnitudes* are exchanged; the output is the
+per-edge net transfer each node should realize with objects in stage 3.
+
+Paper constraint — **single-hop migrations**: load received during the
+iteration is frozen (it may not be re-sent), so every unit of transferred
+load traverses exactly one edge from its originating node.  This is the
+default; ``single_hop=False`` gives the classic unconstrained scheme.
+
+Representation: padded neighbor lists ``nbr_idx/nbr_mask (P, K)``.  Because
+the graph is symmetric, "receive" is also a gather: node i receives from
+neighbor j exactly what j's row pushed toward i, located via the precomputed
+reverse-slot table.  This keeps the sweep gather-only (no scatters), which is
+what the Pallas kernel (kernels/diffusion) exploits.
+
+The inner sweep is pluggable: ``step_fn=None`` uses the pure-jnp reference;
+the production path passes ``kernels.diffusion.ops.diffusion_sweep``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class VirtualLBResult(NamedTuple):
+    target_loads: jax.Array  # (P,) converged virtual node loads
+    flows: jax.Array         # (P, K) net load to send to each neighbor (+=send)
+    iters: jax.Array         # scalar i32
+    residual: jax.Array      # scalar f32 — final neighborhood imbalance
+
+
+def reverse_slots(nbr_idx: jax.Array, nbr_mask: jax.Array) -> jax.Array:
+    """(P, K) i32: rev[i, k] = slot of node i in the list of nbr_idx[i, k].
+
+    Defined only where nbr_mask; padded slots get 0 (masked out by callers).
+    """
+    j = jnp.where(nbr_mask, nbr_idx, 0)                 # (P, K)
+    their_lists = nbr_idx[j]                            # (P, K, K)
+    me = jnp.arange(nbr_idx.shape[0])[:, None, None]
+    hit = their_lists == me                             # (P, K, K)
+    return jnp.where(nbr_mask, jnp.argmax(hit, axis=-1), 0).astype(jnp.int32)
+
+
+def reference_sweep(x, own, nbr_idx, nbr_mask, rev, alpha, single_hop):
+    """One diffusion sweep.  Returns (x_new, own_new, net_flow_step (P,K)).
+
+    Pure-jnp oracle for the Pallas kernel (kernels/diffusion/ref.py re-exports
+    this).  Gather-only; see module docstring.
+    """
+    safe_nbr = jnp.where(nbr_mask, nbr_idx, 0)
+    xn = jnp.where(nbr_mask, x[safe_nbr], x[:, None])
+    push = jnp.maximum(alpha * (x[:, None] - xn), 0.0) * nbr_mask
+    if single_hop:
+        tot = push.sum(axis=1)
+        scale = jnp.where(tot > 0, jnp.minimum(1.0, own / (tot + 1e-30)), 1.0)
+        push = push * scale[:, None]
+    # recv[i, k]: what neighbor j = nbr_idx[i,k] pushed toward i this sweep.
+    recv = jnp.where(nbr_mask, push[safe_nbr, rev], 0.0)
+    x_new = x - push.sum(axis=1) + recv.sum(axis=1)
+    own_new = own - push.sum(axis=1)
+    return x_new, own_new, push - recv
+
+
+def neighborhood_residual(x, nbr_idx, nbr_mask):
+    """max over nodes of (max deviation in {i}∪N(i)) / global mean load."""
+    safe_nbr = jnp.where(nbr_mask, nbr_idx, 0)
+    xn = jnp.where(nbr_mask, x[safe_nbr], x[:, None])
+    allx = jnp.concatenate([x[:, None], xn], axis=1)       # (P, K+1)
+    m = jnp.concatenate([jnp.ones_like(x[:, None], bool), nbr_mask], axis=1)
+    cnt = m.sum(axis=1)
+    mean = jnp.where(cnt > 0, (allx * m).sum(axis=1) / cnt, x)
+    dev = jnp.where(m, jnp.abs(allx - mean[:, None]), 0.0).max(axis=1)
+    gmean = x.mean() + 1e-30
+    return (dev / gmean).max()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_iters", "single_hop", "step_fn"),
+)
+def virtual_balance(
+    node_loads: jax.Array,
+    nbr_idx: jax.Array,
+    nbr_mask: jax.Array,
+    *,
+    alpha: Optional[float] = None,
+    tol: float = 0.02,
+    max_iters: int = 512,
+    single_hop: bool = True,
+    step_fn: Optional[Callable] = None,
+) -> VirtualLBResult:
+    """Iterate diffusion sweeps until every neighborhood is balanced.
+
+    Args:
+      node_loads: (P,) current per-node load.
+      nbr_idx / nbr_mask: (P, K) stage-1 neighbor table.
+      alpha: diffusion coefficient; default 1/(K+1) (stable first-order
+        scheme for max degree K).
+      tol: convergence threshold on max neighborhood deviation / mean load
+        (the paper's "load variance in each neighborhood below a threshold").
+      single_hop: freeze received load (paper default).
+      step_fn: sweep implementation (defaults to :func:`reference_sweep`).
+    """
+    P, K = nbr_idx.shape
+    if alpha is None:
+        alpha = 1.0 / (K + 1.0)
+    alpha = jnp.float32(alpha)
+    sweep = step_fn or reference_sweep
+    rev = reverse_slots(nbr_idx, nbr_mask)
+
+    class S(NamedTuple):
+        x: jax.Array
+        own: jax.Array
+        flows: jax.Array
+        it: jax.Array
+        res: jax.Array
+        stall: jax.Array   # consecutive sweeps with negligible load movement
+
+    def cond(s: S):
+        # Stop on convergence, iteration cap, or stall: under the single-hop
+        # constraint the scheme can freeze (all "own" load spent) while the
+        # residual is still above tol — further sweeps are no-ops.
+        return (s.it < max_iters) & (s.res > tol) & (s.stall < 3)
+
+    def body(s: S):
+        x, own, df = sweep(
+            s.x, s.own, nbr_idx, nbr_mask, rev, alpha, single_hop
+        )
+        moved = jnp.abs(x - s.x).sum()
+        stalled = moved <= 1e-6 * (jnp.abs(x).mean() + 1e-30)
+        return S(x, own, s.flows + df, s.it + 1,
+                 neighborhood_residual(x, nbr_idx, nbr_mask),
+                 jnp.where(stalled, s.stall + 1, 0))
+
+    x0 = node_loads.astype(jnp.float32)
+    init = S(
+        x0, x0, jnp.zeros_like(nbr_mask, jnp.float32), jnp.int32(0),
+        neighborhood_residual(x0, nbr_idx, nbr_mask), jnp.int32(0),
+    )
+    s = jax.lax.while_loop(cond, body, init)
+    return VirtualLBResult(s.x, s.flows, s.it, s.res)

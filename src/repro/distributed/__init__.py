@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, the paper's balancer wired into MoE
+expert placement / data sharding / serving, and gradient compression."""

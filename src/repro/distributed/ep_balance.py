@@ -1,0 +1,208 @@
+"""MoE expert placement via communication-aware diffusion (DESIGN.md §3.1).
+
+Experts are the canonical "persistently interacting objects" of an LM
+system: top-k routing keeps co-activating the same expert groups for a
+given data distribution, expert loads (tokens/expert) drift slowly, and
+migrating an expert between EP ranks costs real weight traffic
+(E × (3·D·F) bytes).  This module runs the paper's three-stage balancer on
+the expert→rank placement:
+
+  * objects   = experts;  object load = EMA tokens routed per expert
+  * comm edge (i, j) = co-activation count: tokens selecting experts i and
+    j together under top-k.  Colocating co-activated experts means one
+    dispatched token copy serves both — exactly the "external bytes" the
+    paper's metric minimizes (a token sent to a rank is sent once
+    regardless of how many local experts consume it);
+  * nodes     = EP ranks (the "model" mesh axis)
+  * migration = expert weight transfer (minimized by the diffusion design)
+
+Output is a **placement permutation**: physical slot s on rank r holds
+logical expert ``perm[r·E_loc + s]``.  The MoE layer applies it as a gather
+over the stacked expert weights plus an index remap in the router — no
+resharding of anything else.  A post-pass repairs diffusion's approximate
+counts to exactly E/R experts per rank (slot capacity is rigid), moving the
+lightest experts first along neighbor edges only.
+
+Baseline for comparison: ``greedy_placement`` (sorted load → least-loaded
+rank, ignores co-activation — the GreedyLB analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as core_api
+from repro.core import comm_graph, metrics
+
+
+@dataclasses.dataclass
+class ExpertStats:
+    """EMA routing statistics collected from the router over train steps."""
+
+    num_experts: int
+    ema: float = 0.9
+    tokens: Optional[np.ndarray] = None        # (E,) EMA tokens per expert
+    coact: Optional[np.ndarray] = None         # (E, E) EMA co-activations
+
+    def __post_init__(self):
+        E = self.num_experts
+        if self.tokens is None:
+            self.tokens = np.zeros(E)
+        if self.coact is None:
+            self.coact = np.zeros((E, E))
+
+    def update(self, expert_ids: np.ndarray) -> None:
+        """``expert_ids``: (T, k) routed expert ids for one step's tokens."""
+        E = self.num_experts
+        ids = np.asarray(expert_ids)
+        counts = np.bincount(ids.reshape(-1), minlength=E).astype(np.float64)
+        co = np.zeros((E, E))
+        k = ids.shape[1]
+        for a in range(k):
+            for b in range(a + 1, k):
+                np.add.at(co, (ids[:, a], ids[:, b]), 1.0)
+        co = co + co.T
+        self.tokens = self.ema * self.tokens + (1 - self.ema) * counts
+        self.coact = self.ema * self.coact + (1 - self.ema) * co
+
+    def imbalance(self, placement: np.ndarray, num_ranks: int) -> float:
+        rank_load = np.bincount(placement, weights=self.tokens,
+                                minlength=num_ranks)
+        return float(rank_load.max() / (rank_load.mean() + 1e-30))
+
+
+def build_problem(stats: ExpertStats, placement: np.ndarray,
+                  num_ranks: int) -> comm_graph.LBProblem:
+    E = stats.num_experts
+    iu, ju = np.triu_indices(E, k=1)
+    w = stats.coact[iu, ju]
+    keep = w > 0
+    edges = np.stack([iu[keep], ju[keep]], axis=1)
+    if edges.size == 0:                        # no co-activation yet: ring
+        edges = np.stack([np.arange(E), (np.arange(E) + 1) % E], axis=1)
+        w = np.full(E, 1e-3)
+        keep = slice(None)
+    return comm_graph.make_problem(
+        loads=np.maximum(stats.tokens, 1e-3),
+        assignment=np.asarray(placement, np.int32),
+        edges=edges,
+        edge_bytes=np.asarray(w[keep], np.float32),
+        num_nodes=num_ranks,
+    )
+
+
+def _repair_counts(assignment: np.ndarray, loads: np.ndarray,
+                   num_ranks: int, cap: int) -> np.ndarray:
+    """Enforce exactly ``cap`` experts per rank, moving light experts from
+    over-full to under-full ranks."""
+    a = assignment.copy()
+    counts = np.bincount(a, minlength=num_ranks)
+    over = [r for r in range(num_ranks) if counts[r] > cap]
+    under = [r for r in range(num_ranks) if counts[r] < cap]
+    for r in over:
+        movable = np.nonzero(a == r)[0]
+        movable = movable[np.argsort(loads[movable])]      # lightest first
+        i = 0
+        while counts[r] > cap and i < len(movable):
+            dst = min(under, key=lambda q: counts[q])
+            a[movable[i]] = dst
+            counts[r] -= 1
+            counts[dst] += 1
+            if counts[dst] >= cap:
+                under.remove(dst)
+            i += 1
+    return a
+
+
+def plan_placement(
+    stats: ExpertStats,
+    placement: np.ndarray,
+    num_ranks: int,
+    *,
+    k: int = 4,
+    strategy: str = "diff-comm",
+) -> Tuple[np.ndarray, Dict]:
+    """New expert→rank placement (exactly E/R per rank) + plan info."""
+    E = stats.num_experts
+    assert E % num_ranks == 0
+    cap = E // num_ranks
+    prob = build_problem(stats, placement, num_ranks)
+    if strategy == "greedy":
+        new = greedy_placement(stats, num_ranks)
+        info: Dict = dict(strategy="greedy")
+    else:
+        plan = core_api.diffusion_lb(
+            prob, k=min(k, num_ranks - 1),
+            variant="comm", tol=0.05)
+        new, info = plan.assignment, plan.info
+    new = _repair_counts(np.asarray(new), stats.tokens, num_ranks, cap)
+    info.update(metrics.evaluate(prob, jnp.asarray(new)))
+    info["moved_experts"] = int((new != placement).sum())
+    return new.astype(np.int32), info
+
+
+def greedy_placement(stats: ExpertStats, num_ranks: int) -> np.ndarray:
+    """Load-only greedy (ignores co-activation) — the comparison baseline."""
+    E = stats.num_experts
+    cap = E // num_ranks
+    order = np.argsort(-stats.tokens)
+    rank_load = np.zeros(num_ranks)
+    rank_cnt = np.zeros(num_ranks, np.int64)
+    out = np.zeros(E, np.int32)
+    for e in order:
+        open_ = np.nonzero(rank_cnt < cap)[0]
+        r = open_[np.argmin(rank_load[open_])]
+        out[e] = r
+        rank_load[r] += stats.tokens[e]
+        rank_cnt[r] += 1
+    return out
+
+
+# ----------------------------------------------------------- permutation --
+
+
+def placement_to_perm(placement: np.ndarray, num_ranks: int) -> np.ndarray:
+    """(E,) physical-slot → logical-expert permutation.
+
+    Slot ``r·cap + i`` (the i-th expert slice held by EP rank r in the
+    stacked weight layout) receives logical expert ``perm[r·cap + i]``."""
+    E = len(placement)
+    cap = E // num_ranks
+    perm = np.zeros(E, np.int64)
+    for r in range(num_ranks):
+        mine = np.sort(np.nonzero(placement == r)[0])
+        assert len(mine) == cap, "placement must be capacity-exact"
+        perm[r * cap:(r + 1) * cap] = mine
+    return perm
+
+
+def apply_perm_to_params(moe_params: Dict, perm: np.ndarray) -> Dict:
+    """Gather stacked expert weights into the new physical layout, and remap
+    the router's output columns so logical expert ids keep working."""
+    perm = jnp.asarray(perm)
+    inv = jnp.argsort(perm)
+    out = dict(moe_params)
+    for key in ("wi", "wg", "wo"):
+        out[key] = jnp.take(moe_params[key], perm, axis=0)
+    # router produces logits over *logical* experts; routing to physical
+    # slot s must pick logical perm[s] ⇒ permute logit columns by perm.
+    out["router"] = jnp.take(moe_params["router"], perm, axis=1)
+    return out
+
+
+def migration_bytes(perm_old: np.ndarray, perm_new: np.ndarray,
+                    bytes_per_expert: float, num_ranks: int) -> float:
+    """Weight bytes that cross rank boundaries realizing the new layout."""
+    E = len(perm_old)
+    cap = E // num_ranks
+    rank_of_slot = np.arange(E) // cap
+    old_rank = np.zeros(E, np.int64)
+    new_rank = np.zeros(E, np.int64)
+    old_rank[np.asarray(perm_old)] = rank_of_slot
+    new_rank[np.asarray(perm_new)] = rank_of_slot
+    return float((old_rank != new_rank).sum() * bytes_per_expert)

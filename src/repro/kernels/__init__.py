@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+  diffusion/  — virtual-LB diffusion sweep (paper §III.B inner loop)
+  pic_push/   — PIC PRK particle push (paper §VI hot loop)
+  histogram/  — per-chare load measurement (segment histogram)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with backend dispatch) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle in interpret mode.
+"""

@@ -1,0 +1,11 @@
+from repro.kernels.diffusion.ops import (
+    diffusion_sweep,
+    diffusion_sweep_reference,
+)
+from repro.kernels.diffusion.kernel import diffusion_sweep_pallas
+
+__all__ = [
+    "diffusion_sweep",
+    "diffusion_sweep_pallas",
+    "diffusion_sweep_reference",
+]

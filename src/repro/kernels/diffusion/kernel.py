@@ -1,0 +1,140 @@
+"""Pallas TPU kernel for the virtual-LB diffusion sweep (paper §III.B).
+
+The sweep is the iterated hot loop of the balancer: at simulator scale
+(P ~ 10^5-10^6 nodes, K ≤ 16 neighbors) hundreds of sweeps run per LB round.
+
+TPU adaptation (HBM→VMEM→VREG):
+  * the load vector ``x`` (P f32 ≤ 4 MB at P = 10^6) and ``own`` stay fully
+    VMEM-resident for every grid step — they are the gather targets;
+  * the per-node neighbor tables (P×K idx/mask/rev) stream through VMEM in
+    node blocks (``block_p`` rows per grid step) — they are touched once;
+  * all compute is VPU element-wise math over (block_p, K) tiles; there is
+    deliberately no scatter: the symmetric-graph identity
+        recv[i, k] = push[nbr[i, k], rev[i, k]]
+    turns "receive" into a second gather, so each sweep is gather-only
+    (scatters serialize on TPU; gathers vectorize).
+
+The kernel computes *one* sweep; the fixed-point loop lives in
+``core/virtual_lb.py`` (jax.lax.while_loop) and passes
+``kernels.diffusion.ops.diffusion_sweep`` as ``step_fn``.
+
+Two-pass structure within a sweep (both passes tile over node blocks):
+  pass A computes the scaled ``push`` matrix (needs the single-hop row scale);
+  pass B gathers ``recv`` from the completed push matrix and forms outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _push_kernel(x_ref, own_ref, nbr_ref, mask_ref, alpha_ref,
+                 push_ref, *, single_hop: bool):
+    """Pass A: push[i, k] = alpha * (x_i - x_nbr) clamped ≥ 0, row-rescaled
+    so a node never ships more than its remaining own load (single-hop)."""
+    x = x_ref[...]                       # (P,) — whole vector in VMEM
+    nbr = nbr_ref[...]                   # (bp, K) node block
+    mask = mask_ref[...]
+    alpha = alpha_ref[0]
+    i0 = pl.program_id(0) * nbr.shape[0]
+    xi = jax.lax.dynamic_slice(x, (i0,), (nbr.shape[0],))      # (bp,)
+    xn = jnp.where(mask, jnp.take(x, jnp.where(mask, nbr, 0), axis=0,
+                                  mode="clip"), xi[:, None])
+    push = jnp.maximum(alpha * (xi[:, None] - xn), 0.0)
+    push = jnp.where(mask, push, 0.0)
+    if single_hop:
+        own = jax.lax.dynamic_slice(own_ref[...], (i0,), (nbr.shape[0],))
+        tot = push.sum(axis=1)
+        scale = jnp.where(tot > 0.0,
+                          jnp.minimum(1.0, own / (tot + 1e-30)), 1.0)
+        push = push * scale[:, None]
+    push_ref[...] = push
+
+
+def _recv_kernel(x_ref, own_ref, push_ref, nbr_ref, mask_ref, rev_ref,
+                 x_out_ref, own_out_ref, flow_ref):
+    """Pass B: recv[i,k] = push[nbr[i,k], rev[i,k]]; form outputs."""
+    nbr = nbr_ref[...]                   # (bp, K)
+    mask = mask_ref[...]
+    rev = rev_ref[...]
+    K = nbr.shape[1]
+    i0 = pl.program_id(0) * nbr.shape[0]
+    push_all = push_ref[...]             # (P, K) VMEM-resident
+    my_push = jax.lax.dynamic_slice(
+        push_all, (i0, 0), (nbr.shape[0], K))
+    flat = jnp.where(mask, nbr, 0) * K + jnp.where(mask, rev, 0)
+    recv = jnp.where(
+        mask, jnp.take(push_all.reshape(-1), flat, axis=0, mode="clip"), 0.0)
+    sent = my_push.sum(axis=1)
+    xi = jax.lax.dynamic_slice(x_ref[...], (i0,), (nbr.shape[0],))
+    own = jax.lax.dynamic_slice(own_ref[...], (i0,), (nbr.shape[0],))
+    x_out_ref[...] = xi - sent + recv.sum(axis=1)
+    own_out_ref[...] = own - sent
+    flow_ref[...] = my_push - recv
+
+
+def _pad_to(a, n, axis=0):
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, n - a.shape[axis])
+    return jnp.pad(a, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("single_hop", "block_p", "interpret"),
+)
+def diffusion_sweep_pallas(
+    x: jax.Array,          # (P,) f32 current virtual loads
+    own: jax.Array,        # (P,) f32 remaining own (originating) load
+    nbr_idx: jax.Array,    # (P, K) i32, -1 padded
+    nbr_mask: jax.Array,   # (P, K) bool
+    rev: jax.Array,        # (P, K) i32 reverse slots
+    alpha,
+    single_hop: bool = True,
+    *,
+    block_p: int = 512,
+    interpret: bool = False,
+):
+    """One diffusion sweep. Returns (x_new, own_new, net_flow (P,K))."""
+    P, K = nbr_idx.shape
+    Pp = -(-P // block_p) * block_p
+    xp = _pad_to(x.astype(jnp.float32), Pp)
+    ownp = _pad_to(own.astype(jnp.float32), Pp)
+    nbrp = _pad_to(nbr_idx, Pp)
+    maskp = _pad_to(nbr_mask, Pp)
+    revp = _pad_to(rev, Pp)
+    alpha_arr = jnp.full((1,), alpha, jnp.float32)
+    grid = (Pp // block_p,)
+
+    vec_full = pl.BlockSpec((Pp,), lambda i: (0,))          # VMEM-resident
+    tab_full = pl.BlockSpec((Pp, K), lambda i: (0, 0))
+    tab_blk = pl.BlockSpec((block_p, K), lambda i: (i, 0))
+    vec_blk = pl.BlockSpec((block_p,), lambda i: (i,))
+
+    push = pl.pallas_call(
+        functools.partial(_push_kernel, single_hop=single_hop),
+        grid=grid,
+        in_specs=[vec_full, vec_full, tab_blk, tab_blk,
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=tab_blk,
+        out_shape=jax.ShapeDtypeStruct((Pp, K), jnp.float32),
+        interpret=interpret,
+    )(xp, ownp, nbrp, maskp, alpha_arr)
+
+    x_new, own_new, flow = pl.pallas_call(
+        _recv_kernel,
+        grid=grid,
+        in_specs=[vec_full, vec_full, tab_full, tab_blk, tab_blk, tab_blk],
+        out_specs=[vec_blk, vec_blk, tab_blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((Pp,), jnp.float32),
+            jax.ShapeDtypeStruct((Pp,), jnp.float32),
+            jax.ShapeDtypeStruct((Pp, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, ownp, push, nbrp, maskp, revp)
+
+    return x_new[:P], own_new[:P], flow[:P]

@@ -1,0 +1,29 @@
+"""Jitted wrapper selecting the diffusion-sweep implementation.
+
+``diffusion_sweep`` matches the ``step_fn`` signature expected by
+``core.virtual_lb.virtual_balance``.  On CPU (this container) the Pallas
+kernel runs in interpret mode; on TPU it compiles natively.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.diffusion.kernel import diffusion_sweep_pallas
+from repro.kernels.diffusion.ref import diffusion_sweep_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def diffusion_sweep(x, own, nbr_idx, nbr_mask, rev, alpha, single_hop=True):
+    return diffusion_sweep_pallas(
+        x, own, nbr_idx, nbr_mask, rev, alpha, single_hop,
+        interpret=not _on_tpu(),
+    )
+
+
+def diffusion_sweep_reference(x, own, nbr_idx, nbr_mask, rev, alpha,
+                              single_hop=True):
+    return diffusion_sweep_ref(x, own, nbr_idx, nbr_mask, rev, alpha,
+                               single_hop)

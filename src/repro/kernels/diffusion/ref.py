@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the diffusion sweep kernel.
+
+This is exactly the reference implementation the balancer uses by default
+(core/virtual_lb.py); re-exported here so the kernel test sweep has a single
+canonical oracle path.
+"""
+from repro.core.virtual_lb import reference_sweep
+
+
+def diffusion_sweep_ref(x, own, nbr_idx, nbr_mask, rev, alpha,
+                        single_hop: bool = True):
+    return reference_sweep(x, own, nbr_idx, nbr_mask, rev, alpha, single_hop)

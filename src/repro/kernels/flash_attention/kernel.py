@@ -1,0 +1,151 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+Why a kernel: the dry-run HLO shows attention probability tensors
+(B, KV, G, qc, kc) round-tripping HBM between the QK-softmax fusion and the
+PV dot — ~70% of the memory-roofline term for the 32k-prefill cells
+(EXPERIMENTS.md §Perf).  A fused flash kernel keeps the score block in VMEM
+for its whole lifetime; HBM attention traffic drops from O(S²) to O(S·d).
+
+TPU adaptation (HBM→VMEM→VREG, MXU):
+  * grid = (batch·kv_head, q_blocks): each program owns one (b, kv-head)
+    slice and one q block — q/o blocks are VMEM-resident across the inner
+    loop; K/V stream in kv-blocks via manual dynamic slices so the causal
+    upper triangle is never read (the index_map trick doesn't allow a
+    data-dependent number of blocks; we bound the loop with
+    ``lax.fori_loop`` over ceil((q_hi+1)/kb) blocks).
+  * block shapes: q (qb, G·hd), kv (kb, hd) with qb, kb multiples of 128 —
+    MXU-aligned on the contraction dims; fp32 accumulators for m/l/o
+    (online softmax), bf16 streams.
+  * no transposes: scores = q·kᵀ via dot_general on the last dims.
+
+The pure-jnp oracle is models/attention.py::chunked_attention (re-exported
+in ref.py) — the exact module the model calls when the kernel is off, so
+kernel == model semantics by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                  *, kb: int, window: int, prefix_len: int, scale: float):
+    """One (batch·kv-head, q-block) program.
+
+    q_ref:   (1, qb, G, hd) — this q block, all query groups of the kv head
+    k_ref:   (1, T, hd)     — full K for this (b, kv head) (streamed blocks)
+    v_ref:   (1, T, hd)
+    qpos/kpos: (1, qb), (1, T) i32 positions (sentinel = unwritten slot)
+    o_ref:   (1, qb, G, hd)
+    """
+    _, qb, G, hd = q_ref.shape
+    T = k_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32) * scale             # (qb, G, hd)
+    qpos = qpos_ref[0]
+
+    m0 = jnp.full((qb, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((qb, G), jnp.float32)
+    o0 = jnp.zeros((qb, G, hd), jnp.float32)
+
+    # causal bound: kv blocks beyond max(qpos) are all masked.  qpos is a
+    # runtime value, so bound the loop count dynamically with fori_loop.
+    hi = jnp.max(jnp.where(qpos < 2 ** 29, qpos, -1))
+    n_blocks = jnp.minimum((hi + kb) // kb + 1, (T + kb - 1) // kb)
+
+    def body(i, carry):
+        m, l, o = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (i * kb, 0), (kb, hd))
+        v = jax.lax.dynamic_slice(v_ref[0], (i * kb, 0), (kb, hd))
+        kpos = jax.lax.dynamic_slice(kpos_ref[0], (i * kb,), (kb,))
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32),
+            dimension_numbers=(((2,), (1,)), ((), ())),
+        )                                                # (qb, G, kb)
+        ok = kpos[None, :] <= qpos[:, None]              # causal+valid
+        if window:
+            ok &= (qpos[:, None] - kpos[None, :]) < window
+        if prefix_len:
+            ok |= (kpos[None, :] < prefix_len) & (kpos[None, :] < 2 ** 29)
+        s = jnp.where(ok[:, None, :], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v,
+            dimension_numbers=(((2,), (0,)), ((), ())),
+        ).astype(jnp.float32)                            # (qb, G, hd)
+        o_new = o * corr[..., None] + pv
+        return m_new, l_new, o_new
+
+    m, l, o = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, o0))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "prefix_len", "q_block", "kv_block",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,       # (B, Sq, KV, G, hd)
+    k: jax.Array,       # (B, T, KV, hd)
+    v: jax.Array,       # (B, T, KV, hd)
+    q_pos: jax.Array,   # (B, Sq)
+    kv_pos: jax.Array,  # (B, T)
+    *,
+    window: int = 0,
+    prefix_len: int = 0,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, KV, G, hd = q.shape
+    T = k.shape[1]
+    qb = min(q_block, Sq)
+    kb = min(kv_block, T)
+    Sp = -(-Sq // qb) * qb
+    Tp = -(-T // kb) * kb
+    if Sp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sp - Sq)) + ((0, 0),) * 3)
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, Sp - Sq)),
+                        constant_values=2 ** 30)
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T)) + ((0, 0),) * 2)
+        v = jnp.pad(v, ((0, 0), (0, Tp - T)) + ((0, 0),) * 2)
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, Tp - T)),
+                         constant_values=2 ** 30)
+
+    # layout: merge (B, KV) into the grid's first axis
+    qr = q.transpose(0, 2, 1, 3, 4).reshape(B * KV, Sp, G, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Tp, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Tp, hd)
+    qpr = jnp.repeat(q_pos, KV, axis=0)                  # (B·KV, Sp)
+    kpr = jnp.repeat(kv_pos, KV, axis=0)
+
+    grid = (B * KV, Sp // qb)
+    scale = 1.0 / float(hd) ** 0.5
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kb=kb, window=window,
+                          prefix_len=prefix_len, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, G, hd), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, Tp, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Tp, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, qb), lambda b, i: (b, i)),
+            pl.BlockSpec((1, Tp), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, G, hd), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, Sp, G, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr, qpr, kpr)
+
+    out = out.reshape(B, KV, Sp, G, hd).transpose(0, 2, 1, 3, 4)
+    return out[:, :Sq]

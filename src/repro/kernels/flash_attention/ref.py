@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: the exact chunked-attention path the model uses when
+the kernel is off (models/attention.py) — kernel == model semantics."""
+from repro.models.attention import chunked_attention
+
+
+def flash_attention_ref(q, k, v, q_pos, kv_pos, *, window=0, prefix_len=0):
+    return chunked_attention(q, k, v, q_pos, kv_pos, window=window,
+                             prefix_len=prefix_len)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: segment histogram (per-chare load measurement).
+
+Counts (or load-weighted sums) of particles per chare — the measurement the
+PIC driver feeds the balancer every LB period.  TPU adaptation: scatter-add
+serializes on TPU, so each particle block is binned with a compare-matmul
+(one-hot (block_n × C) mask contracted against the weights on the
+MXU-friendly path) and accumulated into a VMEM-resident (C,) accumulator
+across sequential grid steps (standard revisited-output pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(ids_ref, w_ref, out_ref, *, C: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]                     # (bn,) i32, -1 = padding
+    w = w_ref[...]                         # (bn,) f32
+    onehot = (ids[:, None] == jax.lax.iota(jnp.int32, C)[None, :])
+    contrib = jnp.sum(jnp.where(onehot, w[:, None], 0.0), axis=0)
+    out_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("C", "block_n", "interpret"))
+def histogram_pallas(
+    ids: jax.Array,           # (N,) i32 bin ids in [0, C); negatives ignored
+    weights: jax.Array,       # (N,) f32
+    *,
+    C: int,
+    block_n: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    N = ids.shape[0]
+    Np = -(-N // block_n) * block_n
+    ids_p = jnp.pad(ids.astype(jnp.int32), (0, Np - N), constant_values=-1)
+    w_p = jnp.pad(weights.astype(jnp.float32), (0, Np - N))
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, C=C),
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((C,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+        interpret=interpret,
+    )(ids_p, w_p)

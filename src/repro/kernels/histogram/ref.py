@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the segment histogram."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("C",))
+def histogram_ref(ids, weights, *, C: int):
+    valid = ids >= 0
+    return jax.ops.segment_sum(
+        jnp.where(valid, weights.astype(jnp.float32), 0.0),
+        jnp.where(valid, ids, 0),
+        num_segments=C,
+    )

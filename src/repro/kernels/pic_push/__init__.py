@@ -1,0 +1,5 @@
+from repro.kernels.pic_push.kernel import pic_push_pallas
+from repro.kernels.pic_push.ops import pic_push
+from repro.kernels.pic_push.ref import pic_push_ref
+
+__all__ = ["pic_push", "pic_push_pallas", "pic_push_ref"]

@@ -1,0 +1,293 @@
+"""Loop-aware HLO analysis: flops, HBM traffic, collective bytes.
+
+The compiled per-device module text is the dry-run's "profile".  XLA's
+``cost_analysis()`` counts a ``while`` body **once**, so anything under
+``lax.scan`` (layers, attention chunks, loss chunks) is under-counted by the
+trip count.  This module parses the module into computations, reads each
+``while`` op's static trip count (XLA records it as
+``backend_config={"known_trip_count":{"n":...}}``; fallback: the constant in
+the condition computation), and recursively weights body costs — nested
+scans (attention chunks inside the layer scan) multiply out.
+
+Per-op metrics (operand shapes resolved through a per-computation symbol
+table — compiled HLO references operands by name only):
+
+  * flops       — ``dot`` ops: 2 · prod(result dims) · prod(lhs contracting
+                  dims).  Matmul-only by construction (element-wise flops
+                  are negligible for these models).
+  * traffic     — HBM bytes: operands + result of every *compute* op at
+                  fusion boundaries (fusion interiors don't round-trip HBM,
+                  so called fusion computations contribute flops but not
+                  traffic).  A static over-approximation (assumes no cache
+                  residency between ops); validated against
+                  ``cost_analysis`` on scan-free modules in tests/test_hlo.py.
+  * collectives — wire bytes per kind:
+        all-gather         → result bytes (each device receives the gather)
+        all-reduce         → 2× operand (ring reduce-scatter + all-gather)
+        reduce-scatter / all-to-all / collective-permute → operand bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(
+    r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+fn?)?|pred)\[([0-9,]*)\]")
+
+# ops whose boundary operand/result bytes count as HBM traffic
+_TRAFFIC_SKIP = frozenset((
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "reshape",
+))
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ------------------------------------------------------- module splitting --
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*([\w\-]+)\((.*)$")
+_WHILE_ATTR_RE = re.compile(
+    r"condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{]+n["\s:]+"?(\d+)')
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def split_computations(hlo_text: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if line.rstrip().endswith("{") and "=" not in line.split("(")[0]:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    if not entry and comps:
+        entry = max(comps, key=lambda k: len(comps[k]))
+    return comps, entry
+
+
+class _Comp:
+    """Parsed computation: op lines + result-shape symbol table."""
+
+    def __init__(self, lines: List[str]):
+        self.ops: List[Tuple[str, str, str, str]] = []   # name, result, op, rest
+        self.shape: Dict[str, List[Tuple[str, List[int]]]] = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, result, op, rest = m.groups()
+            self.ops.append((name, result, op, rest))
+            self.shape[name] = _shapes_in(result)
+
+    def operand_bytes(self, rest: str) -> int:
+        """Bytes of the %name operands inside the call parens."""
+        depth = 0
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        names = _OPERAND_RE.findall(rest[:end])
+        return sum(_shape_bytes_of(self.shape.get(n, [])) for n in names)
+
+    def operand_shapes(self, rest: str) -> List[List[Tuple[str, List[int]]]]:
+        end = rest.find(")")
+        names = _OPERAND_RE.findall(rest[:end if end >= 0 else len(rest)])
+        return [self.shape.get(n, []) for n in names]
+
+
+def _trip_count_from_cond(comp: Optional[_Comp]) -> int:
+    if comp is None:
+        return 1
+    consts = [1]
+    for _, _, op, rest in comp.ops:
+        if op == "constant":
+            m = re.match(r"(\d+)\)", rest)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts)
+
+
+def _dot_flops(comp: _Comp, result: str, rest: str, line: str) -> float:
+    shapes = _shapes_in(result)
+    if not shapes:
+        return 0.0
+    rn = 1
+    for d in shapes[0][1]:
+        rn *= d
+    opshapes = comp.operand_shapes(rest)
+    lhs_dims = opshapes[0][0][1] if opshapes and opshapes[0] else []
+    cdim = 1
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if cm and cm.group(1):
+        for i in cm.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                cdim *= lhs_dims[idx]
+    return 2.0 * rn * cdim
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware module metrics (see module docstring)."""
+    raw, entry = split_computations(hlo_text)
+    comps = {k: _Comp(v) for k, v in raw.items()}
+    if entry not in comps:
+        comps = {"__all__": _Comp(hlo_text.splitlines())}
+        entry = "__all__"
+    memo: Dict[Tuple[str, bool], Dict[str, float]] = {}
+
+    def add(a, b, scale=1.0):
+        for k, v in b.items():
+            a[k] = a.get(k, 0.0) + scale * v
+
+    def walk(name: str, fused: bool, depth: int = 0) -> Dict[str, float]:
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        memo[key] = {}
+        out: Dict[str, float] = {}
+        comp = comps.get(name)
+        if comp is None or depth > 48:
+            return out
+        for opname, result, op, rest in comp.ops:
+            full = f"{result} {op}({rest}"
+            base = op.replace("-start", "")
+            if op.endswith("-done"):
+                continue
+            if op == "while":
+                wm = _WHILE_ATTR_RE.search(rest)
+                if wm:
+                    cond, body = wm.groups()
+                    tm = _TRIP_RE.search(rest)
+                    trip = (int(tm.group(1)) if tm
+                            else _trip_count_from_cond(comps.get(cond)))
+                    add(out, walk(body, fused, depth + 1), trip)
+                continue
+            if base in COLLECTIVES:
+                ob = comp.operand_bytes(rest)
+                rb = _shape_bytes_of(_shapes_in(result))
+                if base == "all-gather":
+                    b = float(rb)
+                elif base == "all-reduce":
+                    b = 2.0 * ob
+                else:
+                    b = float(ob)
+                out[f"coll:{base}:bytes"] = out.get(f"coll:{base}:bytes", 0.0) + b
+                out[f"coll:{base}:count"] = out.get(f"coll:{base}:count", 0.0) + 1
+                continue
+            if op == "dot":
+                out["flops"] = out.get("flops", 0.0) + _dot_flops(
+                    comp, result, rest, full)
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "sort", "scatter", "select-and-scatter", "conditional"):
+                cm = _CALL_RE.search(rest)
+                if cm:
+                    # fused interiors: flops + collectives yes, traffic no
+                    add(out, walk(cm.group(1), True, depth + 1))
+            if not fused and op not in _TRAFFIC_SKIP:
+                ob = comp.operand_bytes(rest)
+                rb = _shape_bytes_of(_shapes_in(result))
+                out["traffic"] = out.get("traffic", 0.0) + ob + rb
+                key = f"traffic:{op}"
+                out[key] = out.get(key, 0.0) + ob + rb
+        memo[key] = out
+        return out
+
+    flat = walk(entry, False)
+    flat.setdefault("flops", 0.0)
+    flat.setdefault("traffic", 0.0)
+    flat["collective_bytes"] = sum(
+        v for k, v in flat.items()
+        if k.startswith("coll:") and k.endswith(":bytes"))
+    return flat
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    flat = analyze(hlo_text)
+    return {k: dict(count=flat.get(f"coll:{k}:count", 0.0),
+                    bytes=flat.get(f"coll:{k}:bytes", 0.0))
+            for k in COLLECTIVES}
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return analyze(hlo_text)["collective_bytes"]
+
+
+def op_census(hlo_text: str, ops: Tuple[str, ...] = ("fusion", "dot",
+                                                     "convolution", "copy",
+                                                     "transpose")) -> Dict[str, int]:
+    census = {o: 0 for o in ops}
+    for line in hlo_text.splitlines():
+        for o in ops:
+            if re.search(rf"= .*\b{o}\(", line):
+                census[o] += 1
+    return census
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    raw, _ = split_computations(hlo_text)
+    comps = {k: _Comp(v) for k, v in raw.items()}
+    trips = []
+    for comp in comps.values():
+        for _, _, op, rest in comp.ops:
+            if op == "while":
+                tm = _TRIP_RE.search(rest)
+                if tm:
+                    trips.append(int(tm.group(1)))
+                else:
+                    wm = _WHILE_ATTR_RE.search(rest)
+                    trips.append(_trip_count_from_cond(
+                        comps.get(wm.group(1))) if wm else 1)
+    return sorted(trips, reverse=True)
+
+
+def format_stats(stats: Dict[str, Dict[str, float]]) -> str:
+    rows = [f"{'collective':>20} {'count':>8} {'MiB':>12}"]
+    for k, v in stats.items():
+        if v["count"]:
+            rows.append(
+                f"{k:>20} {v['count']:>8.0f} {v['bytes']/2**20:>12.2f}")
+    return "\n".join(rows)

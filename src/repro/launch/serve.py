@@ -1,0 +1,63 @@
+"""Serving launcher: batched requests against a small model.
+
+``python -m repro.launch.serve --arch smollm-135m --requests 8`` spins up a
+ServeEngine on the reduced config, feeds it a batch of prompts through the
+diffusion scheduler (multi-replica placement simulated at host scale), and
+reports throughput + scheduling metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer
+from repro.models.params import init_params
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.scheduler import DiffusionScheduler, Session
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=2)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.reduced
+    params = init_params(transformer.model_specs(cfg), 0)
+
+    sched = DiffusionScheduler(args.replicas)
+    engines = [ServeEngine(cfg, params, ServeConfig(num_slots=args.slots))
+               for _ in range(args.replicas)]
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 12))
+        sess = Session(uid=i, replica=0, tokens_per_s=1.0,
+                       prefix_group=i % max(args.requests // 4, 1))
+        r = sched.place_new(sess)
+        engines[r].submit(Request(uid=i, prompt=prompt,
+                                  max_new_tokens=args.max_new))
+    info = sched.rebalance()
+    done = []
+    for e in engines:
+        done += e.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s)")
+    print(f"scheduler: max/avg load {info.get('max_avg_load', 1):.3f}, "
+          f"ext/int {info.get('ext_int_comm', 0):.3f}")
+    for r in done[:4]:
+        print(f"  req {r.uid}: {len(r.out)} tokens {r.out[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

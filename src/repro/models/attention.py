@@ -1,0 +1,373 @@
+"""Attention: GQA (full / sliding-window / prefix-LM) and MLA (DeepSeek).
+
+All softmax attention goes through one chunked online-softmax implementation
+(`chunked_attention`) — a pure-JAX flash-attention equivalent.  Nested
+``lax.scan`` over query/key chunks keeps HLO size O(1) in sequence length and
+peak memory O(q_chunk × kv_chunk), which is what makes the 32k-prefill and
+500k-decode dry-run cells fit (see DESIGN.md §6).
+
+KV caches carry an explicit per-slot position array (``pos``, initialized to
+a huge sentinel): masking derives entirely from positions, so full caches,
+ring-buffer sliding-window caches, and prefix-LM bidirectional reads share
+one code path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import BATCH, MODEL, ParamSpec, apply_rope, shard
+from repro.models.layers import rms_norm, rms_norm_spec
+
+POS_SENTINEL = jnp.int32(2**30)
+
+
+def _tp_size() -> int:
+    """Size of the (profile-translated) tensor-parallel axis, 1 if none."""
+    env = jax.sharding.get_abstract_mesh()
+    if env is None or env.empty:
+        return 1
+    ax = layers.translate(MODEL)
+    sizes = dict(zip(env.axis_names, env.axis_sizes))
+    return sizes.get(ax, 1)
+
+
+# ------------------------------------------------------------ GQA params ----
+
+
+def gqa_specs(cfg: ModelConfig) -> Dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    p = dict(
+        wq=ParamSpec((D, H * hd), ("data", MODEL)),
+        wk=ParamSpec((D, KV * hd), ("data", MODEL)),
+        wv=ParamSpec((D, KV * hd), ("data", MODEL)),
+        wo=ParamSpec((H * hd, D), (MODEL, "data")),
+    )
+    if cfg.qkv_bias:
+        p.update(
+            bq=ParamSpec((H * hd,), (MODEL,), init="zeros"),
+            bk=ParamSpec((KV * hd,), (MODEL,), init="zeros"),
+            bv=ParamSpec((KV * hd,), (MODEL,), init="zeros"),
+        )
+    return p
+
+
+def mla_specs(cfg: ModelConfig) -> Dict:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return dict(
+        wq_a=ParamSpec((D, m.q_lora_rank), ("data", None)),
+        q_norm=rms_norm_spec(m.q_lora_rank),
+        wq_b=ParamSpec((m.q_lora_rank, H * qk), (None, MODEL)),
+        wkv_a=ParamSpec((D, m.kv_lora_rank + m.qk_rope_dim), ("data", None)),
+        kv_norm=rms_norm_spec(m.kv_lora_rank),
+        wk_b=ParamSpec((m.kv_lora_rank, H * m.qk_nope_dim), (None, MODEL)),
+        wv_b=ParamSpec((m.kv_lora_rank, H * m.v_head_dim), (None, MODEL)),
+        wo=ParamSpec((H * m.v_head_dim, D), (MODEL, "data")),
+    )
+
+
+# ----------------------------------------------------- chunked attention ----
+
+
+def _chunk(x, n):
+    """(B, S, ...) -> (S//n, B, n, ...) scan-major chunks."""
+    B, S = x.shape[:2]
+    x = x.reshape(B, S // n, n, *x.shape[2:])
+    return jnp.moveaxis(x, 1, 0)
+
+
+def _mask(q_pos, kv_pos, window, prefix_len):
+    """(..., Sq, Tk) allowed mask from positions (sentinel pos ⇒ masked)."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    ok = kp <= qp                                   # causal + validity
+    if window:
+        ok &= (qp - kp) < window
+    if prefix_len:
+        ok |= (kp < prefix_len) & (kp < POS_SENTINEL // 2)
+    return ok
+
+
+def direct_attention(q, k, v, q_pos, kv_pos, *, window=0, prefix_len=0):
+    """Un-chunked attention for short query blocks (decode: Sq == 1).
+
+    No scan over the KV length ⇒ a length-sharded cache stays sharded: the
+    score tensor is sharded over Tk, the softmax reductions and the PV
+    contraction become GSPMD all-reduces over the "model" axis.
+    """
+    B, Sq, KV, G, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    allowed = _mask(q_pos, kv_pos, window, prefix_len)         # (B, Sq, Tk)
+    s = jnp.where(allowed[:, None, None, :, :], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", (p / jnp.maximum(l, 1e-30)
+                                         ).astype(v.dtype), v)
+    return o.astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,        # (B, Sq, KV, G, hd)
+    k: jax.Array,        # (B, Tk, KV, hd)
+    v: jax.Array,        # (B, Tk, KV, hd)
+    q_pos: jax.Array,    # (B, Sq) i32
+    kv_pos: jax.Array,   # (B, Tk) i32 (POS_SENTINEL for unwritten slots)
+    *,
+    window: int = 0,
+    prefix_len: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention; returns (B, Sq, KV, G, hd)."""
+    B, Sq, KV, G, hd = q.shape
+    Tk = k.shape[1]
+    if Sq <= 8:  # decode path
+        return direct_attention(q, k, v, q_pos, kv_pos, window=window,
+                                prefix_len=prefix_len)
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Tk)
+    # pad S/T to chunk multiples
+    Sp = -(-Sq // qc) * qc
+    Tp = -(-Tk // kc) * kc
+    if Sp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sp - Sq)) + ((0, 0),) * 3)
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, Sp - Sq)))
+    if Tp != Tk:
+        k = jnp.pad(k, ((0, 0), (0, Tp - Tk)) + ((0, 0),) * 2)
+        v = jnp.pad(v, ((0, 0), (0, Tp - Tk)) + ((0, 0),) * 2)
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, Tp - Tk)),
+                         constant_values=POS_SENTINEL)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qs = _chunk(q, qc)            # (nq, B, qc, KV, G, hd)
+    qps = _chunk(q_pos, qc)       # (nq, B, qc)
+    ks = _chunk(k, kc)            # (nk, B, kc, KV, hd)
+    vs = _chunk(v, kc)
+    kps = _chunk(kv_pos, kc)
+
+    def q_body(_, qx):
+        qi, qp = qx               # (B, qc, KV, G, hd), (B, qc)
+
+        def kv_body(carry, kx):
+            o, m, l = carry
+            ki, vi, kp = kx
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            allowed = _mask(qp, kp, window, prefix_len)  # (B, qc, kc)
+            s = jnp.where(allowed[:, None, None, :, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(vi.dtype), vi,
+                            preferred_element_type=jnp.float32)
+            o_new = o * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((B, qc, KV, G, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_body, (o0, m0, l0), (ks, vs, kps))
+        l = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, (o / l).astype(q.dtype)
+
+    # flash-attention memory behavior: recompute per-chunk scores in the
+    # backward instead of saving the (nq, nk, B, KV, G, qc, kc) probability
+    # stacks — composes with (and is required under) the outer layer remat.
+    q_body = jax.checkpoint(
+        q_body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(q_body, None, (qs, qps))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sp, KV, G, hd)
+    return out[:, :Sq]
+
+
+# ----------------------------------------------------------- GQA forward ----
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                   dtype) -> Dict:
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    T = min(window, max_len) if window else max_len
+    return dict(
+        k=jnp.zeros((batch, T, KV, hd), dtype),
+        v=jnp.zeros((batch, T, KV, hd), dtype),
+        pos=jnp.full((batch, T), POS_SENTINEL, jnp.int32),
+    )
+
+
+def gqa_attention(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,                     # (B, S, D)
+    positions: jax.Array,             # (B, S)
+    *,
+    window: int = 0,
+    prefix_len: int = 0,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jax.Array] = None,  # scalar: #tokens already cached
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    dt = x.dtype
+
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = shard(q.reshape(B, S, KV, G, hd), BATCH, None, MODEL, None, None)
+    k = shard(k.reshape(B, S, KV, hd), BATCH, None, MODEL, None)
+    v = shard(v.reshape(B, S, KV, hd), BATCH, None, MODEL, None)
+
+    q = apply_rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta)
+    q = q.reshape(B, S, KV, G, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        T = cache["k"].shape[1]
+        slot = jnp.mod(positions, T) if window else positions  # (B, S)
+        bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+        ck = cache["k"].at[bidx, slot].set(k)
+        cv = cache["v"].at[bidx, slot].set(v)
+        cp = cache["pos"].at[bidx, slot].set(positions)
+        new_cache = dict(k=ck, v=cv, pos=cp)
+        k, v, kv_pos = ck, cv, cp
+    else:
+        kv_pos = positions
+
+    # Head-repeat sharding: when KV doesn't divide the TP axis but H does
+    # (qwen 8kv/64h vs 16), materialize per-query-head K/V and shard the
+    # full head dim — the repeated-but-sharded tensors are *smaller* per
+    # device than replicated KV, and every attention einsum becomes local
+    # (kills the per-chunk all-reduces; EXPERIMENTS.md §Perf qwen).
+    # Gated on KV length: at long T the G×-repeated K/V HBM traffic costs
+    # more than the all-reduces it saves (measured: qwen prefill_32k tm
+    # 69→102s with repeat vs tx 56→33s — net loss; §Perf).
+    tp = _tp_size()
+    T_kv = k.shape[1]
+    if (tp > 1 and KV % tp != 0 and H % tp == 0 and layers.translate(MODEL)
+            and T_kv <= 16384):
+        k = shard(jnp.repeat(k, G, axis=2), BATCH, None, MODEL, None)
+        v = shard(jnp.repeat(v, G, axis=2), BATCH, None, MODEL, None)
+        q = shard(q.reshape(B, S, H, 1, hd), BATCH, None, MODEL, None, None)
+
+    out = chunked_attention(q, k, v, positions, kv_pos,
+                            window=window, prefix_len=prefix_len)
+    out = out.reshape(B, S, H * hd)
+    out = shard(out, BATCH, None, MODEL)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache
+
+
+# ----------------------------------------------------------- MLA forward ----
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    m = cfg.mla
+    return dict(
+        ckv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        krope=jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        pos=jnp.full((batch, max_len), POS_SENTINEL, jnp.int32),
+    )
+
+
+def mla_attention(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    window: int = 0,
+    prefix_len: int = 0,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Multi-head Latent Attention in the *absorbed* form.
+
+    Queries are absorbed into latent space (q_abs = q_nope · W_kb per head),
+    so attention runs against the (kv_lora + rope) latent cache directly —
+    per-head K/V are never materialized (DeepSeek-V3 inference form; also
+    used for training here, where it is flop-equivalent).
+    """
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dt = x.dtype
+
+    qa = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(dt)),
+                  params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", qa, params["wq_b"].astype(dt))
+    q = shard(q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim),
+              BATCH, None, MODEL, None)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dt))
+    ckv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+        cc = cache["ckv"].at[bidx, positions].set(ckv)
+        cr = cache["krope"].at[bidx, positions].set(k_rope)
+        cp = cache["pos"].at[bidx, positions].set(positions)
+        new_cache = dict(ckv=cc, krope=cr, pos=cp)
+        ckv_all, krope_all, kv_pos = cc, cr, cp
+    else:
+        ckv_all, krope_all, kv_pos = ckv, k_rope, positions
+
+    # absorb: q_abs[h] = q_nope[h] @ wk_b[h]^T  → latent-space queries
+    wk_b = params["wk_b"].astype(dt).reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
+    # latent "keys": [ckv | k_rope]; queries: [q_abs | q_rope]
+    q_full = jnp.concatenate([q_abs, q_rope], axis=-1)[:, :, :, None, :]
+    k_full = jnp.concatenate([ckv_all, krope_all], axis=-1)[:, :, None, :]
+    # scale by the *nominal* head dim (qk_nope + rope), not the latent dim
+    nominal = m.qk_nope_dim + m.qk_rope_dim
+    latent = m.kv_lora_rank + m.qk_rope_dim
+    q_full = q_full * jnp.sqrt(jnp.float32(latent) / nominal).astype(dt)
+
+    # attention over latents: heads act as KV=1, G=H.  Shard the *group*
+    # (head) dim — the latent K/V are per-token (headless) and replicate
+    # cheaply, so every score/PV einsum is head-local (no per-chunk
+    # collectives; EXPERIMENTS.md §Perf deepseek).
+    q_r = q_full.transpose(0, 1, 3, 2, 4)                # (B,S,1,H,latent)
+    q_r = shard(q_r, BATCH, None, None, MODEL, None)
+    v_lat = jnp.concatenate(
+        [ckv_all, jnp.zeros_like(krope_all)], -1)[:, :, None, :]
+    if cache is None:
+        # train/prefill: replicate the small per-token latents so every
+        # score/PV einsum is head-local (EXPERIMENTS.md §Perf deepseek)
+        k_full = shard(k_full, BATCH, None, None, None)
+        v_lat = shard(v_lat, BATCH, None, None, None)
+    # decode: leave the latent cache's length sharding untouched —
+    # replicating a 32k-deep cache per step costs more than it saves
+    o = chunked_attention(
+        q_r, k_full, v_lat,
+        positions, kv_pos, window=window, prefix_len=prefix_len,
+    )                                                    # (B,S,1,H,latent)
+    o_latent = o[:, :, 0, :, : m.kv_lora_rank]           # (B,S,H,kv_lora)
+    o_latent = shard(o_latent, BATCH, None, MODEL, None)
+    wv_b = params["wv_b"].astype(dt).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", o_latent, wv_b)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    out = shard(out, BATCH, None, MODEL)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache

@@ -1,0 +1,134 @@
+"""Shared layer primitives: norms, RoPE, MLP, sharding helpers.
+
+Sharding convention (see DESIGN.md §5): activations are annotated with
+logical axes — batch → ("pod","data"), heads/ffn/vocab → "model", everything
+else replicated.  ``shard`` is a no-op when no mesh is active so the same
+code runs single-device smoke tests and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamSpec
+
+BATCH = ("pod", "data")
+MODEL = "model"
+
+# Ambient sharding profile (set by the jitted entry points from
+# ModelConfig.sharding_profile; see config.py for the semantics).
+import contextvars
+
+_PROFILE = contextvars.ContextVar("sharding_profile", default="2d")
+
+
+def set_profile(name: str):
+    return _PROFILE.set(name)
+
+
+def profile() -> str:
+    return _PROFILE.get()
+
+
+def translate(axis):
+    """Map a logical axis (BATCH tuple / MODEL / mesh-axis name) through the
+    active profile.  Under "dp" the model axis joins the batch axes and
+    tensor parallelism is disabled — the right layout for models too small
+    to fill a 16-wide TP axis (EXPERIMENTS.md §Perf)."""
+    if _PROFILE.get() == "dp":
+        if isinstance(axis, (tuple, list)) and "data" in axis:
+            return ("pod", "data", "model")      # batch over everything
+        if axis == MODEL:
+            return None                          # no tensor parallelism
+    return axis
+
+
+def _mesh_axes() -> Sequence[str]:
+    env = jax.sharding.get_abstract_mesh()
+    if env is None or env.empty:
+        return ()
+    return tuple(env.axis_names)
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh, filtering axis
+    names the mesh doesn't have (so single-pod and multi-pod share code)."""
+    env = jax.sharding.get_abstract_mesh()
+    if env is None or env.empty:
+        return x
+    names = tuple(env.axis_names)
+
+    def keep(a):
+        a = translate(a)
+        if a is None:
+            return None
+        ax = tuple(n for n in (a if isinstance(a, tuple) else (a,))
+                   if n in names)
+        if not ax:
+            return None
+        return ax if len(ax) > 1 else ax[0]
+
+    # NOTE: non-divisible dims are deliberately allowed here — GSPMD's
+    # padded layout for e.g. 5 kv-heads on a 16-wide axis measurably beats
+    # replication (hymba train: 5× in the memory term; EXPERIMENTS.md
+    # §Perf).  Divisibility is enforced only at jit argument boundaries
+    # (distributed/sharding.py), where NamedSharding requires it.
+    spec = P(*(keep(a) for a in axes))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (w.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="ones")
+
+
+# ----------------------------------------------------------------- RoPE ----
+
+
+def rope_freqs(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """(..., dim/2) angles for the given positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) — rotate pairs (split-half convention)."""
+    B, S, H, D = x.shape
+    ang = rope_freqs(positions, D, theta)            # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+# ------------------------------------------------------------------ MLP ----
+
+
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return dict(
+        wi=ParamSpec((d_model, d_ff), ((None,), MODEL)),
+        wg=ParamSpec((d_model, d_ff), ((None,), MODEL)),
+        wo=ParamSpec((d_ff, d_model), (MODEL, (None,))),
+    )
+
+
+def mlp(params: dict, x: jax.Array, dtype) -> jax.Array:
+    """Gated SiLU MLP (llama family)."""
+    h = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dtype))
+    h = jax.nn.silu(h) * u
+    h = shard(h, BATCH, None, MODEL)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dtype))
+
+
+def embed_specs(vocab: int, d_model: int) -> ParamSpec:
+    return ParamSpec((vocab, d_model), (MODEL, "data"), scale=0.02)

@@ -1,0 +1,227 @@
+"""Mixture-of-Experts FFN with two execution paths.
+
+  * ``dense`` — one-hot dispatch/combine einsum computing every selected
+    expert exactly (no token dropping).  Used for smoke-scale configs and as
+    the oracle the a2a path is property-tested against.
+  * ``a2a``   — GShard-style expert parallelism under ``shard_map``: tokens
+    are bucketed per expert with a fixed capacity, exchanged with
+    ``all_to_all`` over the "model" mesh axis (the EP axis), processed with
+    one batched einsum per device, and combined on the way back.  This is the
+    production / dry-run path; capacity overflow drops tokens (weight-0
+    combine), the standard GShard behavior — divergence from DeepSeek's
+    dropless dispatch is recorded in DESIGN.md.
+
+The expert→EP-rank placement is *itself* a load-balancing problem with
+persistently interacting objects (experts co-activated by top-k routing keep
+being co-activated); ``distributed/ep_balance.py`` runs the paper's diffusion
+balancer on it and feeds the resulting permutation back in via
+``expert_perm``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import BATCH, MODEL, ParamSpec, shard
+
+
+def moe_specs(cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_expert, m.num_experts
+    ep = tuple(cfg.ep_axes)
+    # experts stacked on a leading E dim, sharded over the EP axes.  With
+    # ep_axes=("data","model") (EP-wide) every chip owns E/chips experts
+    # outright — no FSDP dim left, and no ZeRO-3 gather of expert weights.
+    fsdp = "data" if ep == ("model",) else None
+    p = dict(
+        router=ParamSpec((D, E), ((None,), None), scale=0.006),
+        wi=ParamSpec((E, D, F), (ep, fsdp, None)),
+        wg=ParamSpec((E, D, F), (ep, fsdp, None)),
+        wo=ParamSpec((E, F, D), (ep, None, fsdp)),
+    )
+    if m.num_shared:
+        p.update(
+            shared_wi=ParamSpec((D, m.num_shared * F), ("data", MODEL)),
+            shared_wg=ParamSpec((D, m.num_shared * F), ("data", MODEL)),
+            shared_wo=ParamSpec((m.num_shared * F, D), (MODEL, "data")),
+        )
+    return p
+
+
+def _router(params, cfg: ModelConfig, x2d: jax.Array):
+    """Top-k routing.  Returns (weights (T,k), ids (T,k), aux_loss scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum(
+        "td,de->te", x2d.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)                     # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux + router z-loss.
+    E = m.num_experts
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = jnp.zeros(E).at[ids.reshape(-1)].add(1.0) / ids.size
+    aux = E * jnp.sum(me * ce)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return w.astype(x2d.dtype), ids, aux + 1e-3 * zloss
+
+
+def _shared(params, cfg, x, dt):
+    h = jax.nn.silu(jnp.einsum("tsd,df->tsf", x, params["shared_wg"].astype(dt)))
+    h = h * jnp.einsum("tsd,df->tsf", x, params["shared_wi"].astype(dt))
+    h = shard(h, BATCH, None, MODEL)
+    return jnp.einsum("tsf,fd->tsd", h, params["shared_wo"].astype(dt))
+
+
+# ------------------------------------------------------------- dense path --
+
+
+def moe_dense(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-hot dispatch/combine.  x: (B, S, D) → (y, aux)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    dt = x.dtype
+    x2d = x.reshape(B * S, D)
+    w, ids, aux = _router(params, cfg, x2d)
+    onehot = jax.nn.one_hot(ids, m.num_experts, dtype=dt)       # (T, k, E)
+    comb = jnp.einsum("tk,tke->te", w, onehot)                  # (T, E)
+    hg = jnp.einsum("td,edf->tef", x2d, params["wg"].astype(dt))
+    hi = jnp.einsum("td,edf->tef", x2d, params["wi"].astype(dt))
+    h = jax.nn.silu(hg) * hi
+    ye = jnp.einsum("tef,efd->ted", h, params["wo"].astype(dt))
+    y = jnp.einsum("ted,te->td", ye, comb)
+    y = y.reshape(B, S, D)
+    if m.num_shared:
+        y = y + _shared(params, cfg, x, dt)
+    return y, aux
+
+
+# --------------------------------------------------------------- a2a path --
+
+
+def _a2a_local(x_loc, router, wi, wg, wo, *, cfg: ModelConfig, ep: int,
+               ep_axis: str, tok_axes: Tuple[str, ...]):
+    """shard_map body: x_loc (B_loc, S_loc, D) tokens local to this EP rank."""
+    m = cfg.moe
+    E = m.num_experts
+    E_loc = E // ep
+    B_loc, S_loc, D = x_loc.shape
+    x_loc = x_loc.reshape(B_loc * S_loc, D)      # local reshape — free
+    T_loc = B_loc * S_loc
+    dt = x_loc.dtype
+    k = m.top_k
+    # per-(expert, source) capacity
+    cap = max(1, int(m.capacity_factor * k * T_loc) // E)
+
+    logits = jnp.einsum("td,de->te", x_loc.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, k)                            # (T_loc, k)
+    w = (w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)).astype(dt)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros(E).at[ids.reshape(-1)].add(1.0) / ids.size
+    aux = E * jnp.sum(me * ce) + 1e-3 * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # slot position of each (token, k) pair within its expert bucket
+    flat_e = ids.reshape(-1)                                    # (T_loc*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # (Tk, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot                   # 1-based
+    slot = (pos.sum(axis=1) - 1).astype(jnp.int32)              # (Tk,)
+    keep = slot < cap
+    # dispatch buffer (E, cap, D); dropped slots write to a scratch row
+    buf_idx = jnp.where(keep, flat_e * cap + slot, E * cap)
+    disp = jnp.zeros((E * cap + 1, D), dt).at[buf_idx].set(
+        jnp.repeat(x_loc, k, axis=0))[: E * cap]
+    disp = disp.reshape(E, cap, D)
+
+    # exchange: (E, cap, D) → (ep, E_loc, cap, D) → a2a over EP axis
+    disp = disp.reshape(ep, E_loc, cap, D)
+    recv = jax.lax.all_to_all(disp, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)                      # (ep, E_loc, cap, D)
+    recv = recv.transpose(1, 0, 2, 3).reshape(E_loc, ep * cap, D)
+
+    # expert FFN, batched over local experts
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, wg.astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", recv, wi.astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", h, wo.astype(dt))          # (E_loc, ep*cap, D)
+
+    # return trip
+    out = out.reshape(E_loc, ep, cap, D).transpose(1, 0, 2, 3)  # (ep, E_loc, cap, D)
+    back = jax.lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    back = back.reshape(E * cap, D)
+
+    # combine: gather each kept slot's result, weight, and sum over k
+    gathered = jnp.where(keep[:, None],
+                         back[jnp.where(keep, flat_e * cap + slot, 0)], 0.0)
+    y = jnp.sum(gathered.reshape(T_loc, k, D) * w[:, :, None], axis=1)
+    aux = jax.lax.pmean(jnp.asarray(aux, jnp.float32), tok_axes)
+    return y.reshape(B_loc, S_loc, D), aux
+
+
+def moe_a2a(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE over the ambient mesh's "model" axis.
+
+    Boundary layout: the (B, S, D) activation keeps its factored form —
+    batch over ("pod","data"), *sequence* over "model" (sequence parallelism
+    for the MoE segment).  Entering costs nothing (a slice of the
+    batch-sharded input); leaving costs one S-dim all-gather per layer —
+    the standard GShard SP↔EP transition.  Flattening to (B·S, D) at the
+    boundary instead provokes GSPMD's replicate-and-repartition fallback
+    (full activation rematerialization) — measured in EXPERIMENTS.md §Perf.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or MODEL not in mesh.axis_names:
+        return moe_dense(params, cfg, x)
+    ep_axes = tuple(a for a in cfg.ep_axes if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    ep = 1
+    for a in ep_axes:
+        ep *= sizes[a]
+    if not ep_axes or cfg.moe.num_experts % ep != 0 or x.shape[1] % sizes[MODEL] != 0:
+        return moe_dense(params, cfg, x)
+
+    B, S, D = x.shape
+    dt = x.dtype
+    tok_axes = tuple(a for a in ("pod", "data", MODEL) if a in mesh.axis_names)
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    x = shard(x, BATCH, MODEL, None)              # seq-shard into the block
+
+    # Expert weights enter EP-sharded; with ep_axes=("model",) GSPMD
+    # all-gathers the FSDP ("data") shards at the boundary (ZeRO-3
+    # gather-before-use).  With ep_axes=("data","model") the weights are
+    # fully resident per chip and nothing is gathered (EP-wide).
+    espec = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
+    y, aux = jax.shard_map(
+        lambda xl, r, wi, wg, wo: _a2a_local(
+            xl, r, wi, wg, wo, cfg=cfg, ep=ep, ep_axis=ep_axes,
+            tok_axes=tok_axes),
+        mesh=mesh,
+        in_specs=(P(ba, MODEL, None), P(None, None), espec, espec, espec),
+        out_specs=(P(ba, MODEL, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["wi"], params["wg"], params["wo"])
+
+    y = shard(y, BATCH, None, None)               # S all-gather out
+    if cfg.moe.num_shared:
+        y = y + _shared(params, cfg, x, dt)
+    return y, aux
+
+
+def moe_ffn(params, cfg: ModelConfig, x: jax.Array,
+            impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    impl = impl or cfg.moe.impl
+    if impl == "dense":
+        return moe_dense(params, cfg, x)
+    if impl == "a2a":
+        return moe_a2a(params, cfg, x)
+    # auto: a2a whenever a model-axis mesh is ambient
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is not None and not mesh.empty and MODEL in mesh.axis_names:
+        return moe_a2a(params, cfg, x)
+    return moe_dense(params, cfg, x)

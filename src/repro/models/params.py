@@ -1,0 +1,83 @@
+"""Parameter declaration machinery.
+
+Architectures declare parameters as ``ParamSpec`` trees (shape + sharding
+PartitionSpec + initializer).  From one declaration we derive:
+
+  * ``init_params``      — materialized fp32 weights (smoke tests, examples);
+  * ``shape_dtype_tree`` — jax.ShapeDtypeStruct stand-ins (the dry-run path:
+    no allocation ever happens for the full-size configs);
+  * ``sharding_tree``    — NamedSharding per leaf for a given mesh.
+
+Stacked (scan-over-layers) parameters carry a leading group dimension that
+is always replicated (PartitionSpec prefix None).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    spec: Tuple[Optional[str | Tuple[str, ...]], ...]  # PartitionSpec axes
+    init: str = "normal"        # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def pspec(self) -> P:
+        return P(*self.spec)
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def shape_dtype_tree(tree):
+    return tree_map_specs(lambda s: s.sds(), tree)
+
+
+def sharding_tree(tree, mesh: Mesh):
+    return tree_map_specs(lambda s: NamedSharding(mesh, s.pspec()), tree)
+
+
+def pspec_tree(tree):
+    return tree_map_specs(lambda s: s.pspec(), tree)
+
+
+def init_params(tree, seed: int = 0):
+    """Materialize weights.  Deterministic per-leaf fold-in of the path."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    root = jax.random.PRNGKey(seed)
+    out = []
+    for i, spec in enumerate(leaves):
+        key = jax.random.fold_in(root, i)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        elif spec.init == "normal":
+            out.append(
+                (jax.random.normal(key, spec.shape, jnp.float32)
+                 * spec.scale).astype(spec.dtype)
+            )
+        else:
+            raise ValueError(spec.init)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))

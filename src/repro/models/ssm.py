@@ -1,0 +1,378 @@
+"""State-space / recurrent blocks: Mamba (Hymba's SSM heads), mLSTM and
+sLSTM (xLSTM).
+
+All three expose the same two entry styles the transformer stack needs:
+
+  * full-sequence form for training/prefill — chunkwise scan (mLSTM, mamba)
+    or stepwise scan (sLSTM) over the sequence with O(1) HLO size;
+  * single-step form for decode — the recurrent update on a carried state.
+
+States are small per-head matrices/vectors (this is what makes the
+``long_500k`` decode shape feasible for hymba/xlstm: memory is O(state), not
+O(sequence)).
+
+Sharding: heads are sharded over the "model" axis; states inherit
+(batch→data, heads→model).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import BATCH, MODEL, ParamSpec, shard
+
+
+# ------------------------------------------------------------------ mamba --
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict:
+    """Selective SSM (Mamba-style, diagonal A) with H heads of size hd."""
+    D, H, hd, N = cfg.d_model, cfg.num_heads, cfg.hd, cfg.ssm_state
+    inner = H * hd
+    return dict(
+        wx=ParamSpec((D, inner), ("data", MODEL)),       # value path
+        wz=ParamSpec((D, inner), ("data", MODEL)),       # gate path
+        wB=ParamSpec((D, H * N), ("data", MODEL)),
+        wC=ParamSpec((D, H * N), ("data", MODEL)),
+        wdt=ParamSpec((D, H), ("data", MODEL)),
+        dt_bias=ParamSpec((H,), (MODEL,), init="zeros"),
+        A_log=ParamSpec((H, N), (MODEL, None), init="zeros"),
+        Ddiag=ParamSpec((H,), (MODEL,), init="ones"),
+        wo=ParamSpec((inner, D), (MODEL, "data")),
+    )
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> jax.Array:
+    H, hd, N = cfg.num_heads, cfg.hd, cfg.ssm_state
+    return jnp.zeros((batch, H, N, hd), jnp.float32)
+
+
+def _mamba_inputs(params, cfg, x):
+    dt_ = x.dtype
+    B_, S, D = x.shape
+    H, hd, N = cfg.num_heads, cfg.hd, cfg.ssm_state
+    xv = jnp.einsum("bsd,di->bsi", x, params["wx"].astype(dt_))
+    z = jnp.einsum("bsd,di->bsi", x, params["wz"].astype(dt_))
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(dt_))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    xv = shard(xv.reshape(B_, S, H, hd), BATCH, None, MODEL, None)
+    z = shard(z.reshape(B_, S, H, hd), BATCH, None, MODEL, None)
+    Bm = Bm.reshape(B_, S, H, N).astype(jnp.float32)
+    Cm = Cm.reshape(B_, S, H, N).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))           # (H, N) < 0
+    return xv, z, Bm, Cm, dt, A
+
+
+def mamba_forward(
+    params: Dict, cfg: ModelConfig, x: jax.Array,
+    state: Optional[jax.Array] = None, *, chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence selective scan.  x: (B, S, D) → (y, final_state).
+
+    Chunkwise: scan over S/chunk chunks; within a chunk the recurrence
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t unrolls via cumulative decay
+    products in log space (numerically safe: A < 0 so decays ≤ 1).
+    """
+    B_, S, D = x.shape
+    H, hd, N = cfg.num_heads, cfg.hd, cfg.ssm_state
+    dt_ = x.dtype
+    xv, z, Bm, Cm, dt, A = _mamba_inputs(params, cfg, x)
+    if state is None:
+        state = mamba_init_state(cfg, B_, dt_)
+
+    c = min(chunk, S)
+    Sp = -(-S // c) * c
+    pad = Sp - S
+
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    xv_, z_, Bm_, Cm_, dt_c = map(padt, (xv, z, Bm, Cm, dt))
+
+    def chunk_body(h, inp):
+        xc, Bc, Cc, dtc = inp        # (B, c, H, hd), (B, c, H, N), .., (B, c, H)
+        # log-decay within the chunk: L[t] = sum_{u<=t} dt_u * A   (B,c,H,N)
+        la = dtc[..., None] * A                                  # (B,c,H,N)
+        cum = jnp.cumsum(la, axis=1)                             # (B,c,H,N)
+        # state contribution at each t: exp(cum_t) * h0
+        h_part = jnp.einsum("bchn,bhnd->bchnd", jnp.exp(cum), h)
+        # input contributions: x_u injected at u decays by exp(cum_t - cum_u)
+        inj = (dtc[..., None] * Bc)[..., None] * xc[..., None, :]  # (B,c,H,N,hd)
+        w = jnp.exp(cum)[..., None]
+        inj_scaled = inj / jnp.maximum(w, 1e-30)
+        csum = jnp.cumsum(inj_scaled, axis=1)
+        h_all = h_part + w * csum                                # (B,c,H,N,hd)
+        y = jnp.einsum("bchn,bchnd->bchd", Cc, h_all)
+        h_new = h_all[:, -1]
+        return h_new, y.astype(xc.dtype)
+
+    xs = tuple(
+        jnp.moveaxis(a.reshape(B_, Sp // c, c, *a.shape[2:]), 1, 0)
+        for a in (xv_.astype(jnp.float32), Bm_, Cm_, dt_c)
+    )
+    h_fin, ys = jax.lax.scan(chunk_body, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, Sp, H, hd)[:, :S]
+    y = y.astype(dt_) + params["Ddiag"].astype(dt_)[None, None, :, None] * xv
+    y = y * jax.nn.silu(z)
+    y = shard(y.reshape(B_, S, H * hd), BATCH, None, MODEL)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"].astype(dt_))
+    return out, h_fin
+
+
+def mamba_step(
+    params: Dict, cfg: ModelConfig, x: jax.Array, state: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token decode.  x: (B, 1, D), state: (B, H, N, hd)."""
+    B_, S, D = x.shape
+    H, hd, N = cfg.num_heads, cfg.hd, cfg.ssm_state
+    dt_ = x.dtype
+    xv, z, Bm, Cm, dt, A = _mamba_inputs(params, cfg, x)
+    decay = jnp.exp(dt[:, 0, :, None] * A)                       # (B, H, N)
+    inj = (dt[:, 0, :, None] * Bm[:, 0])[..., None] * \
+        xv[:, 0].astype(jnp.float32)[..., None, :]               # (B,H,N,hd)
+    h = decay[..., None] * state + inj
+    y = jnp.einsum("bhn,bhnd->bhd", Cm[:, 0], h).astype(dt_)
+    y = y + params["Ddiag"].astype(dt_)[None, :, None] * xv[:, 0]
+    y = (y * jax.nn.silu(z[:, 0])).reshape(B_, 1, H * hd)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"].astype(dt_))
+    return out, h
+
+
+# ------------------------------------------------------------------ mLSTM --
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict:
+    """mLSTM (xLSTM matrix-memory cell), H heads of size hd."""
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    inner = H * hd
+    return dict(
+        wq=ParamSpec((D, inner), ("data", MODEL)),
+        wk=ParamSpec((D, inner), ("data", MODEL)),
+        wv=ParamSpec((D, inner), ("data", MODEL)),
+        wi=ParamSpec((D, H), ("data", MODEL)),       # input gate (pre-exp)
+        wf=ParamSpec((D, H), ("data", MODEL)),       # forget gate
+        bi=ParamSpec((H,), (MODEL,), init="zeros"),
+        bf=ParamSpec((H,), (MODEL,), init="ones"),
+        ogate=ParamSpec((D, inner), ("data", MODEL)),
+        norm=ParamSpec((hd,), (None,), init="ones"),
+        wo=ParamSpec((inner, D), (MODEL, "data")),
+    )
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    H, hd = cfg.num_heads, cfg.hd
+    return dict(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),   # matrix memory
+        n=jnp.zeros((batch, H, hd), jnp.float32),       # normalizer
+        m=jnp.full((batch, H), -1e30, jnp.float32),     # log-stabilizer
+    )
+
+
+def _mlstm_inputs(params, cfg, x):
+    dt_ = x.dtype
+    B_, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q = jnp.einsum("bsd,di->bsi", x, params["wq"].astype(dt_))
+    k = jnp.einsum("bsd,di->bsi", x, params["wk"].astype(dt_))
+    v = jnp.einsum("bsd,di->bsi", x, params["wv"].astype(dt_))
+    o = jax.nn.sigmoid(jnp.einsum("bsd,di->bsi", x, params["ogate"].astype(dt_)))
+    q = shard(q.reshape(B_, S, H, hd), BATCH, None, MODEL, None)
+    k = shard(k.reshape(B_, S, H, hd), BATCH, None, MODEL, None) / jnp.sqrt(
+        jnp.float32(hd)).astype(dt_)
+    v = shard(v.reshape(B_, S, H, hd), BATCH, None, MODEL, None)
+    ig = (jnp.einsum("bsd,dh->bsh", x, params["wi"].astype(dt_))
+          .astype(jnp.float32) + params["bi"])
+    fg = (jnp.einsum("bsd,dh->bsh", x, params["wf"].astype(dt_))
+          .astype(jnp.float32) + params["bf"])
+    return q, k, v, o, ig, fg
+
+
+def _headwise_rmsnorm(y, w, eps=1e-6):
+    var = jnp.mean(y.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def mlstm_forward(
+    params: Dict, cfg: ModelConfig, x: jax.Array,
+    state: Optional[Dict] = None, *, chunk: int = 256,
+) -> Tuple[jax.Array, Dict]:
+    """Chunkwise-parallel mLSTM (xLSTM paper, stabilized log-space gates)."""
+    B_, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    dt_ = x.dtype
+    q, k, v, o, ig, fg = _mlstm_inputs(params, cfg, x)
+    if state is None:
+        state = mlstm_init_state(cfg, B_, dt_)
+
+    c = min(chunk, S)
+    Sp = -(-S // c) * c
+    pad = Sp - S
+
+    def padt(a, fill=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                       constant_values=fill)
+
+    q_, k_, v_ = padt(q), padt(k), padt(v)
+    ig_, fg_ = padt(ig, -1e30), padt(fg, 30.0)  # pads: no input, full forget
+
+    def chunk_body(carry, inp):
+        C0, n0, m0 = carry["C"], carry["n"], carry["m"]
+        qc, kc, vc, ic, fc = inp       # (B,c,H,hd) / (B,c,H)
+        logf = jax.nn.log_sigmoid(fc)                       # (B,c,H)
+        F = jnp.cumsum(logf, axis=1)                        # Π f up to t
+        # per-position log weights for: carried state (b_t = F_t + m0)
+        # and intra-chunk source u→t (a_ut = F_t - F_u + i_u)
+        b = F + m0[:, None, :]
+        src = F[:, None, :, :] * 0 + ic[:, None, :, :] - F[:, None, :, :] + \
+            F[:, :, None, :]                                # (B,t,u,H)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        src = jnp.where(causal[None, :, :, None], src, -jnp.inf)
+        m_new = jnp.maximum(b, src.max(axis=2))             # (B,c,H)
+        # intra-chunk attention-like term
+        w_intra = jnp.exp(src - m_new[:, :, None, :])       # (B,t,u,H)
+        s = jnp.einsum("bthd,buhd->btuh", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32))
+        y_intra = jnp.einsum("btuh,btuh,buhd->bthd", s, w_intra,
+                             vc.astype(jnp.float32))
+        n_intra = jnp.einsum("btuh,btuh,buhd->bthd", s * 0 + 1.0, w_intra,
+                             kc.astype(jnp.float32))
+        n_intra = jnp.einsum("bthd,bthd->bth", qc.astype(jnp.float32), n_intra)
+        # carried-state term
+        w_c = jnp.exp(b - m_new)                            # (B,c,H)
+        y_c = jnp.einsum("bthd,bhde->bthe", qc.astype(jnp.float32), C0)
+        n_c = jnp.einsum("bthd,bhd->bth", qc.astype(jnp.float32), n0)
+        y = y_intra + w_c[..., None] * y_c
+        nrm = n_intra + w_c * n_c
+        denom = jnp.maximum(jnp.abs(nrm), jnp.exp(-m_new))[..., None]
+        y = y / denom
+        # chunk-final state
+        mT = m_new[:, -1]                                    # (B,H)
+        decay_all = jnp.exp(F[:, -1:, :] - F + ic - mT[:, None, :])  # (B,c,H)
+        C1 = jnp.exp(F[:, -1] + m0 - mT)[..., None, None] * C0 + \
+            jnp.einsum("buh,buhd,buhe->bhde", decay_all, kc.astype(jnp.float32),
+                       vc.astype(jnp.float32))
+        n1 = jnp.exp(F[:, -1] + m0 - mT)[..., None] * n0 + \
+            jnp.einsum("buh,buhd->bhd", decay_all, kc.astype(jnp.float32))
+        return dict(C=C1, n=n1, m=mT), y.astype(dt_)
+
+    xs = tuple(
+        jnp.moveaxis(a.reshape(B_, Sp // c, c, *a.shape[2:]), 1, 0)
+        for a in (q_, k_, v_, ig_, fg_)
+    )
+    fin, ys = jax.lax.scan(chunk_body, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, Sp, H, hd)[:, :S]
+    y = _headwise_rmsnorm(y, params["norm"])
+    y = (y.reshape(B_, S, H * hd) * o.reshape(B_, S, H * hd))
+    y = shard(y, BATCH, None, MODEL)
+    return jnp.einsum("bsi,id->bsd", y, params["wo"].astype(dt_)), fin
+
+
+def mlstm_step(
+    params: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
+) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent mLSTM update."""
+    B_, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    dt_ = x.dtype
+    q, k, v, o, ig, fg = _mlstm_inputs(params, cfg, x)
+    q1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+    i1, f1 = ig[:, 0], fg[:, 0]
+    logf = jax.nn.log_sigmoid(f1)
+    m_new = jnp.maximum(logf + state["m"], i1)
+    fw = jnp.exp(logf + state["m"] - m_new)[..., None]
+    iw = jnp.exp(i1 - m_new)[..., None]
+    C = fw[..., None] * state["C"] + (iw * k1)[..., None] * v1[:, :, None, :]
+    n = fw * state["n"] + iw * k1
+    y = jnp.einsum("bhd,bhde->bhe", q1, C)
+    nrm = jnp.einsum("bhd,bhd->bh", q1, n)
+    denom = jnp.maximum(jnp.abs(nrm), jnp.exp(-m_new))[..., None]
+    y = (y / denom).astype(dt_)
+    y = _headwise_rmsnorm(y, params["norm"])
+    y = (y * o[:, 0].reshape(B_, H, hd)).reshape(B_, 1, H * hd)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"].astype(dt_))
+    return out, dict(C=C, n=n, m=m_new)
+
+
+# ------------------------------------------------------------------ sLSTM --
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict:
+    """sLSTM: scalar memory, exponential gating, head-blocked recurrence."""
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    inner = H * hd
+    gates = dict()
+    for g in ("i", "f", "z", "o"):
+        gates[f"w{g}"] = ParamSpec((D, inner), ("data", MODEL))
+        gates[f"r{g}"] = ParamSpec((H, hd, hd), (MODEL, None, None), scale=0.01)
+        gates[f"b{g}"] = ParamSpec((inner,), (MODEL,),
+                                   init="ones" if g == "f" else "zeros")
+    gates["norm"] = ParamSpec((hd,), (None,), init="ones")
+    gates["wo"] = ParamSpec((inner, D), (MODEL, "data"))
+    return gates
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    H, hd = cfg.num_heads, cfg.hd
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return dict(c=z, n=z, h=z, m=jnp.full((batch, H, hd), -1e30, jnp.float32))
+
+
+def slstm_forward(
+    params: Dict, cfg: ModelConfig, x: jax.Array,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Step scan over the sequence (sLSTM is inherently sequential: the
+    hidden state feeds back into the gates through R)."""
+    B_, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    dt_ = x.dtype
+    if state is None:
+        state = slstm_init_state(cfg, B_, dt_)
+
+    pre = {}
+    for g in ("i", "f", "z", "o"):
+        pre[g] = (jnp.einsum("bsd,di->bsi", x, params[f"w{g}"].astype(dt_))
+                  .astype(jnp.float32) + params[f"b{g}"]).reshape(B_, S, H, hd)
+
+    R = {g: params[f"r{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    def step(carry, t_in):
+        c0, n0, h0, m0 = carry["c"], carry["n"], carry["h"], carry["m"]
+        xi, xf, xz, xo = t_in
+
+        def rec(g):
+            return jnp.einsum("bhd,hde->bhe", h0, R[g])
+
+        it = xi + rec("i")
+        ft = xf + rec("f")
+        zt = jnp.tanh(xz + rec("z"))
+        ot = jax.nn.sigmoid(xo + rec("o"))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m0, it)
+        iw = jnp.exp(it - m_new)
+        fw = jnp.exp(logf + m0 - m_new)
+        c = fw * c0 + iw * zt
+        n = jnp.maximum(fw * n0 + iw, jnp.exp(-m_new))
+        h = ot * (c / n)
+        return dict(c=c, n=n, h=h, m=m_new), h.astype(dt_)
+
+    xs = tuple(jnp.moveaxis(pre[g], 1, 0) for g in ("i", "f", "z", "o"))
+    fin, hs = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(hs, 0, 1)                                  # (B,S,H,hd)
+    y = _headwise_rmsnorm(y, params["norm"]).reshape(B_, S, H * hd)
+    y = shard(y, BATCH, None, MODEL)
+    return jnp.einsum("bsi,id->bsd", y, params["wo"].astype(dt_)), fin
+
+
+def slstm_step(
+    params: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
+) -> Tuple[jax.Array, Dict]:
+    y, fin = slstm_forward(params, cfg, x, state)
+    return y, fin

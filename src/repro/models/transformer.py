@@ -1,0 +1,503 @@
+"""The unified decoder stack covering all assigned architectures.
+
+Layer stacks are declared as a repeating ``layer_unit`` of block kinds
+scanned over ``num_groups`` groups (O(1) HLO size in depth — DESIGN.md §6),
+plus optional unrolled prefix/suffix layers for remainders and special
+layers (deepseek's 3 dense layers, hymba's global-attention ends, gemma's
+5:1 remainder).
+
+Block kinds:
+  attn        — softmax attention (GQA or MLA per cfg) + dense MLP
+  attn_local  — sliding-window attention + dense MLP
+  moe         — attention + mixture-of-experts FFN
+  hymba       — parallel attention + mamba heads (windowed attn) + MLP
+  hymba_g     — hymba with global attention
+  mlstm/slstm — xLSTM blocks (no separate FFN when d_ff == 0)
+
+Modality frontends are stubs per the assignment: ``audio_stub`` consumes
+precomputed frame embeddings, ``vision_stub`` consumes precomputed patch
+embeddings prepended as a bidirectional prefix (prefix-LM).
+
+Three entry points (all pure functions of (params, batch)):
+  ``forward``     — hidden states (training / prefill, optional cache build)
+  ``decode_step`` — single-token step with stacked caches
+  ``loss_fn``     — next-token CE with sequence-chunked, vocab-sharded
+                    logits (the full (B,S,V) fp32 logits never materialize)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    BATCH, MODEL, ParamSpec, embed_specs, mlp, mlp_specs, rms_norm,
+    rms_norm_spec, shard,
+)
+from repro.models.params import tree_map_specs
+
+
+# ------------------------------------------------------------------ specs --
+
+
+def _block_specs(cfg: ModelConfig, kind: str) -> Dict:
+    D = cfg.d_model
+    p: Dict[str, Any] = dict(norm1=rms_norm_spec(D))
+    if kind in ("attn", "attn_local", "moe", "moe_local"):
+        p["attn"] = (attn.mla_specs(cfg) if cfg.attention == "mla"
+                     else attn.gqa_specs(cfg))
+        p["norm2"] = rms_norm_spec(D)
+        if kind.startswith("moe"):
+            p["moe"] = moe_specs_cached(cfg)
+        else:
+            p["mlp"] = mlp_specs(D, cfg.d_ff_dense or cfg.d_ff)
+    elif kind in ("hymba", "hymba_g"):
+        p["attn"] = attn.gqa_specs(cfg)
+        p["mamba"] = ssm.mamba_specs(cfg)
+        p["beta"] = ParamSpec((2,), (None,), init="ones")
+        p["norm2"] = rms_norm_spec(D)
+        p["mlp"] = mlp_specs(D, cfg.d_ff)
+    elif kind == "mlstm":
+        p["cell"] = ssm.mlstm_specs(cfg)
+    elif kind == "slstm":
+        p["cell"] = ssm.slstm_specs(cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cfg.d_ff and kind in ("mlstm", "slstm"):
+        p["norm2"] = rms_norm_spec(D)
+        p["mlp"] = mlp_specs(D, cfg.d_ff)
+    return p
+
+
+def moe_specs_cached(cfg):
+    return moe_mod.moe_specs(cfg)
+
+
+def _stack(tree, g: int):
+    """Prepend a replicated group dimension to every ParamSpec."""
+    return tree_map_specs(
+        lambda s: dataclasses.replace(
+            s, shape=(g,) + s.shape, spec=(None,) + tuple(s.spec)),
+        tree,
+    )
+
+
+def model_specs(cfg: ModelConfig) -> Dict:
+    cfg.validate()
+    G = cfg.num_groups
+    p: Dict[str, Any] = dict(
+        embed=embed_specs(cfg.vocab_size, cfg.d_model),
+        final_norm=rms_norm_spec(cfg.d_model),
+    )
+    p["unit"] = [_stack(_block_specs(cfg, k), G) for k in cfg.layer_unit]
+    p["prefix"] = [_block_specs(cfg, k) for k in cfg.prefix_layers]
+    p["suffix"] = [_block_specs(cfg, k) for k in cfg.suffix_layers]
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                 ("data", MODEL))
+    if cfg.mtp:
+        p["mtp"] = dict(
+            block=_block_specs(cfg, "attn"),
+            proj=ParamSpec((2 * cfg.d_model, cfg.d_model), ("data", None)),
+            norm=rms_norm_spec(cfg.d_model),
+        )
+    if cfg.param_dtype != "float32":
+        # low-precision resident params (fp32 master lives in the optimizer
+        # when training — train/optimizer.py): halves FSDP gather bytes.
+        import jax.numpy as jnp
+        dt = jnp.dtype(cfg.param_dtype)
+        p = tree_map_specs(lambda s: dataclasses.replace(s, dtype=dt), p)
+    return p
+
+
+# ------------------------------------------------------------------ cache --
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> Optional[Dict]:
+    window = cfg.sliding_window if kind in ("attn_local", "hymba") else 0
+    if kind in ("attn", "attn_local", "moe", "moe_local"):
+        if cfg.attention == "mla":
+            return dict(kv=attn.init_mla_cache(cfg, batch, max_len, dtype))
+        return dict(kv=attn.init_gqa_cache(cfg, batch, max_len, window, dtype))
+    if kind in ("hymba", "hymba_g"):
+        return dict(
+            kv=attn.init_gqa_cache(cfg, batch, max_len, window, dtype),
+            ssm=ssm.mamba_init_state(cfg, batch, dtype),
+        )
+    if kind == "mlstm":
+        return dict(state=ssm.mlstm_init_state(cfg, batch, dtype))
+    if kind == "slstm":
+        return dict(state=ssm.slstm_init_state(cfg, batch, dtype))
+    return None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked cache pytree matching the model structure."""
+    G = cfg.num_groups
+
+    def stack_cache(kind):
+        one = init_block_cache(cfg, kind, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (G,) + a.shape).copy(), one)
+
+    return dict(
+        unit=[stack_cache(k) for k in cfg.layer_unit],
+        prefix=[init_block_cache(cfg, k, batch, max_len, dtype)
+                for k in cfg.prefix_layers],
+        suffix=[init_block_cache(cfg, k, batch, max_len, dtype)
+                for k in cfg.suffix_layers],
+    )
+
+
+def shard_cache(cache):
+    """Sharding constraint for caches: batch→(pod,data); KV length→model.
+
+    Length-sharding (sequence parallelism for the KV cache) is what lets
+    kv_heads=1 architectures (gemma3) hold 32k-500k caches: heads cannot be
+    split, positions can.  Softmax over the sharded length dim partitions
+    cleanly (GSPMD inserts the max/sum all-reduces).
+    """
+    def f(a):
+        if a.ndim >= 2:
+            return shard(a, BATCH, MODEL, *([None] * (a.ndim - 2)))
+        return a
+
+    def g(sub):
+        if sub is None:
+            return None
+        out = dict(sub)
+        if "kv" in sub:
+            out["kv"] = {k: f(v) for k, v in sub["kv"].items()}
+        # recurrent states are O(heads·state): batch→data, heads→model
+        for key in ("ssm", "state"):
+            if key in sub:
+                out[key] = jax.tree.map(
+                    lambda a: shard(a, BATCH, MODEL,
+                                    *([None] * (a.ndim - 2)))
+                    if a.ndim >= 2 else a, sub[key])
+        return out
+
+    def g_stacked(sub):
+        if sub is None:
+            return None
+        out = dict(sub)
+        if "kv" in sub:
+            out["kv"] = {k: (shard(v, None, BATCH, MODEL,
+                                   *([None] * (v.ndim - 3)))
+                             if v.ndim >= 3 else v)
+                         for k, v in sub["kv"].items()}
+        for key in ("ssm", "state"):
+            if key in sub:
+                out[key] = jax.tree.map(
+                    lambda a: shard(a, None, BATCH, MODEL,
+                                    *([None] * (a.ndim - 3)))
+                    if a.ndim >= 3 else a, sub[key])
+        return out
+
+    return dict(
+        unit=[g_stacked(s) for s in cache["unit"]],
+        prefix=[g(s) for s in cache["prefix"]],
+        suffix=[g(s) for s in cache["suffix"]],
+    )
+
+
+# ------------------------------------------------------------------ block --
+
+
+def apply_block(
+    params: Dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Dict],
+    *,
+    prefix_len: int = 0,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    dt = x.dtype
+    aux = jnp.float32(0.0)
+    window = cfg.sliding_window if kind in ("attn_local", "moe_local",
+                                            "hymba") else 0
+
+    if kind in ("attn", "attn_local", "moe", "moe_local"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        fn = attn.mla_attention if cfg.attention == "mla" else attn.gqa_attention
+        a, kv = fn(params["attn"], cfg, h, positions, window=window,
+                   prefix_len=prefix_len,
+                   cache=None if cache is None else cache["kv"])
+        x = x + a
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind.startswith("moe"):
+            f, aux = moe_mod.moe_ffn(params["moe"], cfg, h)
+        else:
+            f = mlp(params["mlp"], h, dt)
+        x = x + f
+        new_cache = None if cache is None else dict(kv=kv)
+        return x, new_cache, aux
+
+    if kind in ("hymba", "hymba_g"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        a, kv = attn.gqa_attention(
+            params["attn"], cfg, h, positions, window=window,
+            prefix_len=prefix_len,
+            cache=None if cache is None else cache["kv"])
+        ssm_state = None if cache is None else cache["ssm"]
+        if decode:
+            m, s_new = ssm.mamba_step(params["mamba"], cfg, h, ssm_state)
+        else:
+            m, s_new = ssm.mamba_forward(params["mamba"], cfg, h, ssm_state)
+        beta = params["beta"].astype(dt)
+        x = x + 0.5 * (beta[0] * a + beta[1] * m)
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + mlp(params["mlp"], h, dt)
+        new_cache = None if cache is None else dict(kv=kv, ssm=s_new)
+        return x, new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        state = None if cache is None else cache["state"]
+        cell = ssm.mlstm_forward if kind == "mlstm" else ssm.slstm_forward
+        step = ssm.mlstm_step if kind == "mlstm" else ssm.slstm_step
+        y, s_new = (step if decode else cell)(params["cell"], cfg, h, state)
+        x = x + y
+        if cfg.d_ff:
+            h = rms_norm(x, params["norm2"], cfg.norm_eps)
+            x = x + mlp(params["mlp"], h, dt)
+        new_cache = None if cache is None else dict(state=s_new)
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- forward --
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    if "embeds" in batch and batch["embeds"] is not None:
+        parts.append(batch["embeds"].astype(dt))
+    if "tokens" in batch and batch["tokens"] is not None:
+        e = params["embed"].astype(dt)[batch["tokens"]]
+        parts.append(e)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
+    return shard(x, BATCH, None, None)
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict,
+    *,
+    cache: Optional[Dict] = None,
+    decode: bool = False,
+    remat: str = "none",
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Run the stack.  Returns (hidden (B,S,D), new_cache, aux_loss)."""
+    from repro.models.layers import set_profile
+    # dp (batch-over-everything) pays off for training small models; cache
+    # paths (prefill/decode) need the 2d layout's KV-length sharding —
+    # measured both ways in EXPERIMENTS.md §Perf.
+    prof = cfg.sharding_profile
+    if prof == "dp" and (decode or cache is not None):
+        prof = "2d"
+    set_profile(prof)
+    x = _embed_inputs(params, cfg, batch)
+    positions = batch["positions"]
+    prefix_len = cfg.vision_prefix if cfg.prefix_lm else 0
+    aux_total = jnp.float32(0.0)
+
+    new_prefix = []
+    for i, kind in enumerate(cfg.prefix_layers):
+        c = None if cache is None else cache["prefix"][i]
+        x, c_new, aux = apply_block(params["prefix"][i], cfg, kind, x,
+                                    positions, c, prefix_len=prefix_len,
+                                    decode=decode)
+        new_prefix.append(c_new)
+        aux_total += aux
+
+    # scanned groups
+    def group_body(carry, xs):
+        x, aux_acc = carry
+        unit_params, unit_cache = xs
+        new_unit_cache = []
+        for i, kind in enumerate(cfg.layer_unit):
+            c = None if unit_cache is None else unit_cache[i]
+            x, c_new, aux = apply_block(unit_params[i], cfg, kind, x,
+                                        positions, c, prefix_len=prefix_len,
+                                        decode=decode)
+            new_unit_cache.append(c_new)
+            aux_acc = aux_acc + aux
+        ys = tuple(new_unit_cache) if unit_cache is not None else None
+        return (x, aux_acc), ys
+
+    body = group_body
+    if remat == "full":
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    unit_cache = None if cache is None else tuple(cache["unit"])
+    xs = (tuple(params["unit"]), unit_cache)
+    if cfg.num_groups > 0:
+        (x, aux_total), new_unit = jax.lax.scan(body, (x, aux_total), xs)
+    else:
+        new_unit = unit_cache
+
+    new_suffix = []
+    for i, kind in enumerate(cfg.suffix_layers):
+        c = None if cache is None else cache["suffix"][i]
+        x, c_new, aux = apply_block(params["suffix"][i], cfg, kind, x,
+                                    positions, c, prefix_len=prefix_len,
+                                    decode=decode)
+        new_suffix.append(c_new)
+        aux_total += aux
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(unit=list(new_unit), prefix=new_prefix,
+                         suffix=new_suffix)
+        new_cache = shard_cache(new_cache)
+    return x, new_cache, aux_total
+
+
+def logits_head(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(dt).T
+    else:
+        w = params["lm_head"].astype(dt)
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+# ------------------------------------------------------------------- loss --
+
+
+def loss_fn(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict,
+    *,
+    remat: str = "none",
+    seq_chunk: int = 512,
+    z_weight: float = 1e-4,
+) -> Tuple[jax.Array, Dict]:
+    """Next-token CE.  ``batch["labels"]`` is (B, S) with -1 = masked.
+
+    The head is applied in sequence chunks under ``lax.scan`` with the vocab
+    dim sharded over "model": per-chunk logits are (B, c, V/shards) locally
+    and the full (B, S, V) tensor never exists.
+    """
+    h, _, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    B, S = labels.shape
+    dt = h.dtype
+    w = (params["embed"].astype(dt).T if cfg.tie_embeddings
+         else params["lm_head"].astype(dt))
+
+    c = min(seq_chunk, S)
+    Sp = -(-S // c) * c
+    if Sp != S:
+        h = jnp.pad(h, ((0, 0), (0, Sp - S), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, Sp - S)), constant_values=-1)
+    hc = jnp.moveaxis(h.reshape(B, Sp // c, c, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, Sp // c, c), 1, 0)
+
+    def chunk_ce(carry, xs):
+        hx, lx = xs                                   # (B,c,D), (B,c)
+        logits = jnp.einsum("bcd,dv->bcv", hx, w).astype(jnp.float32)
+        logits = shard(logits, BATCH, None, MODEL)
+        m = logits.max(axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        onehot = jax.nn.one_hot(jnp.maximum(lx, 0), cfg.vocab_size, dtype=dt)
+        label_logit = jnp.einsum("bcv,bcv->bc", logits.astype(dt), onehot)
+        valid = lx >= 0
+        nll = jnp.where(valid, lse - label_logit.astype(jnp.float32), 0.0)
+        zl = jnp.where(valid, lse ** 2, 0.0)
+        tot, ztot, cnt = carry
+        return (tot + nll.sum(), ztot + zl.sum(), cnt + valid.sum()), None
+
+    # checkpoint: backward recomputes each chunk's logits instead of saving
+    # (B, c, V)-sized residuals per chunk — peak memory drops from
+    # O(S/c · B·c·V / shards) to O(B·c·V / shards) at one extra head matmul
+    # per chunk.
+    chunk_ce = jax.checkpoint(
+        chunk_ce, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, ztot, cnt), _ = jax.lax.scan(
+        chunk_ce, (jnp.float32(0), jnp.float32(0), jnp.int32(0)), (hc, lc))
+    denom = jnp.maximum(cnt, 1).astype(jnp.float32)
+    ce = tot / denom
+    loss = ce + z_weight * ztot / denom
+
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+
+    mtp_loss = jnp.float32(0.0)
+    if cfg.mtp and "tokens" in batch and batch["tokens"] is not None:
+        mtp_loss = _mtp_loss(params, cfg, batch, h[:, :S])
+        loss = loss + 0.3 * mtp_loss
+
+    return loss, dict(ce=ce, aux=aux, tokens=cnt, mtp=mtp_loss)
+
+
+def _mtp_loss(params, cfg: ModelConfig, batch, h):
+    """DeepSeek-V3 multi-token prediction: one extra block predicting t+2
+    from [norm(h_t) ; emb(token_{t+1})], sharing embed + lm head."""
+    dt = h.dtype
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    lbl2 = jnp.concatenate(
+        [labels[:, 1:], jnp.full_like(labels[:, -1:], -1)], axis=1)
+    e = params["embed"].astype(dt)[nxt]
+    hm = rms_norm(h, params["mtp"]["norm"], cfg.norm_eps)
+    x = jnp.einsum("bsf,fd->bsd", jnp.concatenate([hm, e], -1),
+                   params["mtp"]["proj"].astype(dt))
+    x, _, _ = (lambda p: apply_block(p, cfg, "attn", x, batch["positions"],
+                                     None))(params["mtp"]["block"])
+    logits = logits_head(params, cfg, x).astype(jnp.float32)
+    logits = shard(logits, BATCH, None, MODEL)
+    m = logits.max(-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), -1))
+    oh = jax.nn.one_hot(jnp.maximum(lbl2, 0), cfg.vocab_size, dtype=dt)
+    ll = jnp.einsum("bsv,bsv->bs", logits.astype(dt), oh).astype(jnp.float32)
+    valid = lbl2 >= 0
+    return (jnp.where(valid, lse - ll, 0.0).sum()
+            / jnp.maximum(valid.sum(), 1))
+
+
+# ------------------------------------------------------------ decode step --
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, cache: Dict):
+    """Full-sequence forward writing the cache; returns last-pos logits."""
+    h, cache, _ = forward(params, cfg, batch, cache=cache, decode=False)
+    logits = logits_head(params, cfg, h[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, index, cache: Dict,
+                embeds=None):
+    """One decode step.  tokens (B, 1), index scalar current position."""
+    B = tokens.shape[0] if tokens is not None else embeds.shape[0]
+    positions = jnp.full((B, 1), index, jnp.int32)
+    batch = dict(tokens=tokens, embeds=embeds, positions=positions)
+    h, cache, _ = forward(params, cfg, batch, cache=cache, decode=True)
+    logits = logits_head(params, cfg, h)
+    return logits, cache

@@ -1,0 +1,11 @@
+"""PIC PRK benchmark (paper §VI) in JAX."""
+from repro.pic.chares import build_problem, chare_of, initial_mapping
+from repro.pic.driver import CostModel, PICConfig, PICResult, run
+from repro.pic.grid import alternating_grid
+from repro.pic.particles import Particles, initialize
+
+__all__ = [
+    "CostModel", "PICConfig", "PICResult", "Particles",
+    "alternating_grid", "build_problem", "chare_of", "initial_mapping",
+    "initialize", "run",
+]

@@ -1,0 +1,2 @@
+"""Serving layer: batched prefill/decode engine + diffusion request
+scheduler across replicas."""

@@ -1,0 +1,143 @@
+"""Batched serving engine: continuous-batching prefill/decode over one
+model replica.
+
+``ServeEngine`` owns the jitted ``prefill``/``decode_step`` executables and
+a slot-based KV cache: requests claim free batch slots, prefill writes their
+prompt into the cache at their slot, and every engine tick advances all
+active slots by one token.  Slots free on EOS/max-tokens (continuous
+batching — new requests join between ticks without recompiling; shapes are
+static in (num_slots, max_len)).
+
+This is the per-replica data plane; cross-replica placement is
+serve/scheduler.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (L,) token ids
+    max_new_tokens: int = 16
+    eos_id: int = -1                # -1 ⇒ never
+    out: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    num_slots: int = 4
+    max_len: int = 256
+    dtype: str = "float32"
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        dt = jnp.dtype(serve_cfg.dtype)
+        self.cache = transformer.init_cache(
+            cfg, serve_cfg.num_slots, serve_cfg.max_len, dt)
+        self.slot_req: List[Optional[Request]] = [None] * serve_cfg.num_slots
+        self.slot_pos = np.zeros(serve_cfg.num_slots, np.int64)
+        self.slot_tok = np.zeros(serve_cfg.num_slots, np.int32)
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.ticks = 0
+
+        @functools.partial(jax.jit, static_argnames=("plen",), donate_argnums=(1,))
+        def _prefill_slot(params, cache, tokens, slot, plen: int):
+            """Write one request's prompt into `slot` of the cache."""
+            # run the prompt as a batch-1 forward, then scatter its cache
+            # rows into the engine cache at `slot`.
+            one = transformer.init_cache(cfg, 1, serve_cfg.max_len, dt)
+            pos = jnp.arange(plen, dtype=jnp.int32)[None]
+            logits, one = transformer.prefill(
+                params, cfg, dict(tokens=tokens[None, :plen], positions=pos),
+                one)
+
+            def put(c, o):
+                return c.at[slot].set(o[0])
+
+            cache = jax.tree.map(put, cache, one)
+            return logits[:, -1], cache
+
+        @jax.jit
+        def _decode(params, cache, tokens, positions):
+            """One decode tick for every slot.  tokens (S,1), positions (S,)."""
+            B = tokens.shape[0]
+            batch = dict(tokens=tokens,
+                         positions=positions[:, None].astype(jnp.int32))
+            h, cache, _ = transformer.forward(
+                params, cfg, batch, cache=cache, decode=True)
+            logits = transformer.logits_head(params, cfg, h)
+            return logits[:, 0], cache
+
+        self._prefill_slot = _prefill_slot
+        self._decode = _decode
+
+    # ------------------------------------------------------------- admin --
+
+    def submit(self, req: Request) -> None:
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.scfg.num_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                plen = int(len(req.prompt))
+                logits, self.cache = self._prefill_slot(
+                    self.params, self.cache,
+                    jnp.asarray(req.prompt, jnp.int32), s, plen=plen)
+                tok = int(jnp.argmax(logits[0]))
+                req.out.append(tok)
+                self.slot_req[s] = req
+                self.slot_pos[s] = plen
+                self.slot_tok[s] = tok
+
+    # -------------------------------------------------------------- tick --
+
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def tick(self) -> None:
+        """Admit waiting requests, advance all active slots one token."""
+        self._admit()
+        if self.active() == 0:
+            return
+        tokens = jnp.asarray(self.slot_tok[:, None])
+        positions = jnp.asarray(self.slot_pos)
+        logits, self.cache = self._decode(
+            self.params, self.cache, tokens, positions)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.ticks += 1
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.slot_pos[s] += 1
+            self.slot_tok[s] = tok
+            exhausted = len(req.out) >= req.max_new_tokens
+            hit_eos = tok == req.eos_id
+            full = self.slot_pos[s] >= self.scfg.max_len - 1
+            if exhausted or hit_eos or full:
+                self.done.append(req)
+                self.slot_req[s] = None
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        while (self.queue or self.active()) and self.ticks < max_ticks:
+            self.tick()
+        return self.done

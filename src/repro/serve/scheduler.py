@@ -1,0 +1,131 @@
+"""Cross-replica request scheduling with the paper's balancer
+(DESIGN.md §3.3).
+
+Serving replicas are nodes; *sessions* (multi-turn decode requests) are the
+persistently interacting objects: a session's KV cache lives on its replica
+(migration = cache transfer or re-prefill — expensive), sessions sharing a
+prompt prefix form comm edges (prefix-cache hits are only possible when the
+sharers are colocated), and session loads (active decode tokens/s) persist
+over many scheduling periods.
+
+``DiffusionScheduler.rebalance`` runs the three-stage balancer over the
+current (session → replica) map; the greedy baseline re-places sessions by
+load only, breaking prefix-sharing groups — the serving analogue of the
+paper's GreedyRefine-vs-Diffusion comparison (measured in
+benchmarks/serve_sched.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import api as core_api
+from repro.core import comm_graph, metrics
+
+
+@dataclasses.dataclass
+class Session:
+    uid: int
+    replica: int
+    tokens_per_s: float             # decode load (EMA)
+    prefix_group: int = -1          # sessions sharing a prompt prefix
+    kv_bytes: float = 1.0           # migration cost proxy
+
+
+class DiffusionScheduler:
+    def __init__(self, num_replicas: int, *, k: int = 4):
+        self.num_replicas = num_replicas
+        self.k = k
+        self.sessions: Dict[int, Session] = {}
+
+    def add(self, s: Session) -> None:
+        self.sessions[s.uid] = s
+
+    def remove(self, uid: int) -> None:
+        self.sessions.pop(uid, None)
+
+    def place_new(self, s: Session) -> int:
+        """Admission: prefer the replica already holding s's prefix group
+        (prefix-cache hit), else the least-loaded replica."""
+        peers = [t for t in self.sessions.values()
+                 if t.prefix_group == s.prefix_group and s.prefix_group >= 0]
+        if peers:
+            s.replica = peers[0].replica
+        else:
+            load = self.replica_loads()
+            s.replica = int(np.argmin(load))
+        self.add(s)
+        return s.replica
+
+    def replica_loads(self) -> np.ndarray:
+        load = np.zeros(self.num_replicas)
+        for s in self.sessions.values():
+            load[s.replica] += s.tokens_per_s
+        return load
+
+    def _problem(self) -> Tuple[comm_graph.LBProblem, List[int]]:
+        uids = sorted(self.sessions)
+        idx = {u: i for i, u in enumerate(uids)}
+        loads = np.array([self.sessions[u].tokens_per_s for u in uids])
+        assign = np.array([self.sessions[u].replica for u in uids], np.int32)
+        # comm edges: same prefix group ⇒ pairwise edges weighted by the
+        # smaller session's load (shared-prefix reuse volume)
+        groups: Dict[int, List[int]] = {}
+        for u in uids:
+            g = self.sessions[u].prefix_group
+            if g >= 0:
+                groups.setdefault(g, []).append(idx[u])
+        edges, w = [], []
+        for members in groups.values():
+            for a in range(len(members)):
+                for b in range(a + 1, len(members)):
+                    i, j = members[a], members[b]
+                    edges.append((i, j))
+                    w.append(min(loads[i], loads[j]) + 1e-3)
+        if not edges:
+            n = len(uids)
+            edges = [(i, (i + 1) % n) for i in range(n)]
+            w = [1e-3] * n
+        return comm_graph.make_problem(
+            loads=np.maximum(loads, 1e-3),
+            assignment=assign,
+            edges=np.array(edges, np.int32),
+            edge_bytes=np.array(w, np.float32),
+            num_nodes=self.num_replicas,
+        ), uids
+
+    def rebalance(self, *, strategy: str = "diff-comm") -> Dict:
+        if len(self.sessions) < 2:
+            return dict(skipped=True)
+        prob, uids = self._problem()
+        if strategy == "greedy":
+            new = _greedy(prob)
+            info: Dict = dict(strategy="greedy")
+        else:
+            plan = core_api.diffusion_lb(
+                prob, k=min(self.k, self.num_replicas - 1), variant="comm")
+            new, info = plan.assignment, plan.info
+        moved_kv = 0.0
+        for u, r in zip(uids, new):
+            if self.sessions[u].replica != int(r):
+                moved_kv += self.sessions[u].kv_bytes
+            self.sessions[u].replica = int(r)
+        import jax.numpy as jnp
+        info.update(metrics.evaluate(prob, jnp.asarray(np.asarray(new))))
+        info["moved_kv_bytes"] = moved_kv
+        return info
+
+
+def _greedy(prob: comm_graph.LBProblem) -> np.ndarray:
+    import numpy as np
+    loads = np.asarray(prob.loads)
+    order = np.argsort(-loads)
+    rl = np.zeros(prob.num_nodes)
+    out = np.zeros(len(loads), np.int32)
+    for i in order:
+        r = int(np.argmin(rl))
+        out[i] = r
+        rl[r] += loads[i]
+    return out

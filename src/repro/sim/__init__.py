@@ -1,0 +1,17 @@
+"""Load-balancing simulation infrastructure (paper §V)."""
+from repro.sim.simulator import CompareRow, SeriesResult, compare, format_table, run_series
+from repro.sim.stencil import stencil_2d, stencil_3d
+from repro.sim.synthetic import hotspot, mod7, random_pm
+
+__all__ = [
+    "CompareRow",
+    "SeriesResult",
+    "compare",
+    "format_table",
+    "hotspot",
+    "mod7",
+    "random_pm",
+    "run_series",
+    "stencil_2d",
+    "stencil_3d",
+]

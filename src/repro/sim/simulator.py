@@ -1,0 +1,106 @@
+"""Load-balancing simulation infrastructure (paper §V).
+
+The paper's simulator takes (loads, coords, comm edges) snapshots from any
+Charm++ application and replays strategies at any scale on one process; ours
+does the same for ``LBProblem`` instances.  ``compare`` runs a set of
+strategies on one snapshot; ``run_series`` replays a time-evolving workload
+with periodic rebalancing (used by the PIC driver and Fig 4/5 benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import api, comm_graph, metrics
+
+
+@dataclasses.dataclass
+class CompareRow:
+    strategy: str
+    before: Dict[str, float]
+    after: Dict[str, float]
+    info: Dict
+
+
+def compare(
+    problem: comm_graph.LBProblem,
+    strategies: Sequence[str],
+    strategy_kwargs: Optional[Dict[str, Dict]] = None,
+) -> List[CompareRow]:
+    strategy_kwargs = strategy_kwargs or {}
+    before = metrics.evaluate(problem)
+    rows = []
+    for name in strategies:
+        plan = api.run_strategy(name, problem, **strategy_kwargs.get(name, {}))
+        import jax.numpy as jnp
+        after = metrics.evaluate(problem, jnp.asarray(plan.assignment))
+        rows.append(CompareRow(name, before, after, plan.info))
+    return rows
+
+
+def format_table(rows: List[CompareRow]) -> str:
+    """Paper-Table-II-style text table."""
+    cols = ["strategy", "max/avg", "ext/int", "%migr", "plan_s"]
+    out = ["  ".join(f"{c:>12}" for c in cols)]
+    if rows:
+        b = rows[0].before
+        out.append("  ".join([
+            f"{'(initial)':>12}", f"{b['max_avg_load']:>12.3f}",
+            f"{b['ext_int_comm']:>12.3f}", f"{'-':>12}", f"{'-':>12}",
+        ]))
+    for r in rows:
+        out.append("  ".join([
+            f"{r.strategy:>12}",
+            f"{r.after['max_avg_load']:>12.3f}",
+            f"{r.after['ext_int_comm']:>12.3f}",
+            f"{100*r.after['pct_migrations']:>11.1f}%",
+            f"{r.info.get('plan_seconds', float('nan')):>12.3f}",
+        ]))
+    return "\n".join(out)
+
+
+@dataclasses.dataclass
+class SeriesResult:
+    max_avg: np.ndarray        # (T,) per step
+    ext_int: np.ndarray        # (T,)
+    migrations: np.ndarray     # (T,) fraction moved at that step (0 if no LB)
+    plan_seconds: float
+
+
+def run_series(
+    initial: comm_graph.LBProblem,
+    evolve: Callable[[comm_graph.LBProblem, int], comm_graph.LBProblem],
+    *,
+    steps: int,
+    lb_every: int,
+    strategy: str = "diff-comm",
+    strategy_kwargs: Optional[Dict] = None,
+) -> SeriesResult:
+    """Replay ``steps`` of a workload, rebalancing every ``lb_every`` steps.
+
+    ``evolve(problem, t)`` advances loads/comm one application step while
+    preserving the current assignment (the simulator's stand-in for the
+    application's own dynamics).
+    """
+    strategy_kwargs = strategy_kwargs or {}
+    problem = initial
+    ma, ei, mig = [], [], []
+    plan_s = 0.0
+    for t in range(steps):
+        problem = evolve(problem, t)
+        if strategy != "none" and lb_every > 0 and t % lb_every == 0 and t > 0:
+            plan = api.run_strategy(strategy, problem, **strategy_kwargs)
+            moved = float(
+                np.mean(plan.assignment != np.asarray(problem.assignment))
+            )
+            problem = problem.with_assignment(plan.assignment)
+            plan_s += plan.info.get("plan_seconds", 0.0)
+            mig.append(moved)
+        else:
+            mig.append(0.0)
+        m = metrics.evaluate(problem)
+        ma.append(m["max_avg_load"])
+        ei.append(m["ext_int_comm"])
+    return SeriesResult(np.array(ma), np.array(ei), np.array(mig), plan_s)

@@ -1,0 +1,45 @@
+"""Synthetic load-imbalance injectors used by the paper's experiments."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import comm_graph
+
+
+def random_pm(
+    problem: comm_graph.LBProblem, frac: float = 0.4, seed: int = 0
+) -> comm_graph.LBProblem:
+    """Fig 2 setting: every object's load randomly ±``frac``."""
+    rng = np.random.default_rng(seed)
+    loads = np.asarray(problem.loads)
+    factor = 1.0 + rng.uniform(-frac, frac, loads.shape[0])
+    return dataclasses.replace(
+        problem, loads=np.maximum(loads * factor, 1e-6).astype(np.float32)
+    )
+
+
+def mod7(
+    problem: comm_graph.LBProblem,
+    over: float = 1.5,
+    under: float = 0.7,
+) -> comm_graph.LBProblem:
+    """Table II setting: every 1st and 2nd PE mod 7 overloaded, every 3rd
+    mod 7 underloaded (applied multiplicatively to that PE's objects)."""
+    a = np.asarray(problem.assignment)
+    loads = np.asarray(problem.loads).copy()
+    m = a % 7
+    loads[(m == 1) | (m == 2)] *= over
+    loads[m == 3] *= under
+    return dataclasses.replace(problem, loads=loads.astype(np.float32))
+
+
+def hotspot(
+    problem: comm_graph.LBProblem, node: int = 0, factor: float = 10.0
+) -> comm_graph.LBProblem:
+    """Table I setting: a single node overloaded by ``factor``."""
+    a = np.asarray(problem.assignment)
+    loads = np.asarray(problem.loads).copy()
+    loads[a == node] *= factor
+    return dataclasses.replace(problem, loads=loads.astype(np.float32))

@@ -1,0 +1,27 @@
+"""ASCII ownership-map visualizations (paper Figs 1-2 equivalents)."""
+from __future__ import annotations
+
+import numpy as np
+
+_GLYPHS = "0123456789abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ"
+
+
+def ownership_map(assignment, nx: int, ny: int) -> str:
+    """Render a (nx*ny,) assignment of a 2D grid as an ASCII block map."""
+    a = np.asarray(assignment).reshape(nx, ny)
+    rows = []
+    for i in range(nx):
+        rows.append("".join(_GLYPHS[int(p) % len(_GLYPHS)] for p in a[i]))
+    return "\n".join(rows)
+
+
+def locality_summary(assignment, nx: int, ny: int) -> float:
+    """Fraction of 4-neighbor grid links that stay within one node — a quick
+    scalar for 'contiguous blocks of color' (Fig 1 intuition)."""
+    a = np.asarray(assignment).reshape(nx, ny)
+    same = 0
+    total = 0
+    same += (a == np.roll(a, 1, axis=0)).sum()
+    same += (a == np.roll(a, 1, axis=1)).sum()
+    total += 2 * a.size
+    return float(same) / total

@@ -1,0 +1,60 @@
+"""The jitted training step: loss → grads → clipped AdamW update.
+
+``make_train_step`` closes over (cfg, opt_cfg, remat) and returns a pure
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with donated params/opt_state.  Sharding comes entirely from the
+parameter PartitionSpecs and the activation constraints inside the model —
+the step itself is layout-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_mod
+
+
+def make_loss(cfg: ModelConfig, remat: str = "none") -> Callable:
+    def loss(params, batch):
+        return transformer.loss_fn(params, cfg, batch, remat=remat)
+    return loss
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: opt_mod.OptConfig,
+    *,
+    remat: str = "none",
+    grad_transform: Optional[Callable] = None,
+) -> Callable:
+    """``grad_transform(grads) -> grads`` hooks gradient compression
+    (distributed/grad_compress.py) between backward and update."""
+    loss = make_loss(cfg, remat)
+
+    def step(params, opt_state, batch):
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = opt_mod.apply(
+            opt_cfg, params, grads, opt_state)
+        out = dict(loss=l, **{k: v for k, v in metrics.items()},
+                   **opt_metrics)
+        return params, opt_state, out
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss = make_loss(cfg)
+
+    def step(params, batch):
+        l, metrics = loss(params, batch)
+        return dict(loss=l, **metrics)
+
+    return step

@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device by design (the 512-device mesh lives only in launch/dryrun.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def ring_neighbors(P: int, hops: int = 1):
+    """(P, 2*hops) ring neighbor table + mask (test helper)."""
+    import numpy as np
+    cols = []
+    for h in range(1, hops + 1):
+        cols += [(np.arange(P) - h) % P, (np.arange(P) + h) % P]
+    nbr = np.stack(cols, axis=1).astype(np.int32)
+    mask = np.ones_like(nbr, bool)
+    return nbr, mask

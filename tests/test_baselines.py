@@ -1,0 +1,80 @@
+"""Comparison strategies (paper §V.C): behavioral contracts per strategy."""
+import numpy as np
+import pytest
+
+from repro.core import api, baselines, comm_graph, metrics
+from repro.sim import stencil, synthetic
+
+
+@pytest.fixture(scope="module")
+def prob3d():
+    p = stencil.stencil_3d(8, 8, 8, 8, mapping="striped")
+    return synthetic.mod7(p)
+
+
+def test_greedy_balances_but_migrates_everything(prob3d):
+    a = baselines.greedy(prob3d)
+    m = metrics.evaluate(prob3d, a)
+    assert m["max_avg_load"] < 1.05
+    assert m["pct_migrations"] > 0.5
+
+
+def test_greedy_refine_balances_with_few_migrations(prob3d):
+    a = baselines.greedy_refine(prob3d)
+    m = metrics.evaluate(prob3d, a)
+    assert m["max_avg_load"] < 1.1
+    assert m["pct_migrations"] < 0.3
+
+
+def test_metis_like_balanced_partition(prob3d):
+    a = baselines.metis_like(prob3d)
+    m = metrics.evaluate(prob3d, a)
+    assert m["max_avg_load"] < 1.15
+    # every node non-empty
+    assert len(np.unique(a)) == prob3d.num_nodes
+
+
+def test_metis_migrates_heavily_but_cuts_well(prob3d):
+    """The paper's METIS signature: near-total migration, good locality."""
+    a = baselines.metis_like(prob3d)
+    m = metrics.evaluate(prob3d, a)
+    init = metrics.evaluate(prob3d)
+    assert m["pct_migrations"] > 0.5
+    assert m["ext_int_comm"] < init["ext_int_comm"] * 1.2
+
+
+def test_parmetis_fewer_migrations_than_metis(prob3d):
+    am = baselines.metis_like(prob3d)
+    ap = baselines.parmetis_like(prob3d)
+    mm = metrics.evaluate(prob3d, am)
+    mp = metrics.evaluate(prob3d, ap)
+    assert mp["pct_migrations"] < mm["pct_migrations"]
+    assert mp["max_avg_load"] < 1.15
+
+
+def test_parmetis_itr_knob_controls_migration(prob3d):
+    lo = baselines.parmetis_like(prob3d, itr=10_000.0)   # migration expensive
+    hi = baselines.parmetis_like(prob3d, itr=1.0)        # migration cheap
+    m_lo = metrics.evaluate(prob3d, lo)["pct_migrations"]
+    m_hi = metrics.evaluate(prob3d, hi)["pct_migrations"]
+    assert m_lo <= m_hi + 1e-9
+
+
+def test_strategy_registry_runs_everything():
+    prob = stencil.stencil_2d(12, 12, 4)
+    prob = synthetic.random_pm(prob, 0.4)
+    for name in api.STRATEGIES:
+        kw = dict(k=2) if name.startswith("diff") else {}
+        plan = api.run_strategy(name, prob, **kw)
+        assert plan.assignment.shape == (prob.num_objects,)
+        assert (plan.assignment >= 0).all()
+        assert (plan.assignment < prob.num_nodes).all()
+
+
+def test_rcb_partition_balanced():
+    rng = np.random.default_rng(0)
+    coords = rng.random((256, 2))
+    w = np.ones(256)
+    part = baselines._rcb(coords, w, 8)
+    counts = np.bincount(part, minlength=8)
+    assert counts.max() - counts.min() <= 2

@@ -1,0 +1,72 @@
+"""HLO analyzer: validated against XLA cost analysis where XLA is correct
+(scan-free modules) and against ground truth where XLA is not (scans)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_match_xla_on_scanfree():
+    def f(x, w):
+        return jnp.tanh(x @ w) @ w
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = _compile(f, x, w)
+    got = hlo.analyze(c.as_text())
+    xla = c.cost_analysis()
+    assert got["flops"] == pytest.approx(float(xla["flops"]), rel=1e-6)
+
+
+def test_scan_flops_weighted_by_trip_count():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)
+    c = _compile(f, x, ws)
+    got = hlo.analyze(c.as_text())
+    assert got["flops"] == pytest.approx(12 * 2 * 128 ** 3, rel=1e-6)
+    assert hlo.while_trip_counts(c.as_text()) == [12]
+
+
+def test_nested_scan_multiplies():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = _compile(f, x, ws)
+    got = hlo.analyze(c.as_text())
+    assert got["flops"] == pytest.approx(5 * 3 * 2 * 64 ** 3, rel=1e-6)
+
+
+def test_traffic_close_to_xla_bytes_on_scanfree():
+    def f(x, w):
+        return x @ w
+
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = _compile(f, x, x)
+    got = hlo.analyze(c.as_text())
+    xla = float(c.cost_analysis()["bytes accessed"])
+    assert got["traffic"] == pytest.approx(xla, rel=0.5)
+
+
+def test_shape_bytes_parsing():
+    comps, _ = hlo.split_computations("")
+    assert comps == {}
+    assert hlo._shape_bytes_of(hlo._shapes_in("bf16[2,3]{1,0} f32[4]")) == \
+        2 * 3 * 2 + 4 * 4
+    assert hlo._shapes_in("pred[]") == [("pred", [])]

@@ -1,0 +1,191 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.virtual_lb import reference_sweep, reverse_slots
+from repro.kernels.diffusion.kernel import diffusion_sweep_pallas
+from repro.kernels.histogram.kernel import histogram_pallas
+from repro.kernels.histogram.ref import histogram_ref
+from repro.kernels.pic_push.kernel import pic_push_pallas
+from repro.kernels.pic_push.ref import pic_push_ref
+from repro.pic.grid import alternating_grid
+from repro.pic.particles import initialize
+
+
+# --------------------------------------------------------------- diffusion --
+
+
+def _graph(P, K, seed):
+    """Random symmetric K-regular-ish neighbor table."""
+    rng = np.random.default_rng(seed)
+    nbr = np.full((P, K), -1, np.int32)
+    mask = np.zeros((P, K), bool)
+    deg = np.zeros(P, np.int64)
+    order = rng.permutation(P * P)
+    for idx in order:
+        i, j = divmod(int(idx), P)
+        if i >= j or deg[i] >= K or deg[j] >= K:
+            continue
+        nbr[i, deg[i]] = j
+        nbr[j, deg[j]] = i
+        mask[i, deg[i]] = mask[j, deg[j]] = True
+        deg[i] += 1
+        deg[j] += 1
+    return jnp.asarray(nbr), jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("P,K,block_p", [
+    (16, 2, 8), (64, 4, 32), (100, 4, 64), (257, 8, 128), (512, 3, 512),
+])
+@pytest.mark.parametrize("single_hop", [True, False])
+def test_diffusion_kernel_matches_ref(P, K, block_p, single_hop):
+    nbr, mask = _graph(P, K, seed=P + K)
+    rev = reverse_slots(nbr, mask)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random(P).astype(np.float32) * 10)
+    own = x * 0.7
+    out_k = diffusion_sweep_pallas(x, own, nbr, mask, rev, 0.2, single_hop,
+                                   block_p=block_p, interpret=True)
+    out_r = reference_sweep(x, own, nbr, mask, rev, jnp.float32(0.2),
+                            single_hop)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(P=st.integers(8, 80), K=st.integers(1, 6), seed=st.integers(0, 99))
+def test_property_diffusion_kernel_conserves(P, K, seed):
+    nbr, mask = _graph(P, K, seed)
+    rev = reverse_slots(nbr, mask)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(P).astype(np.float32) * 5)
+    xn, own, flow = diffusion_sweep_pallas(
+        x, x, nbr, mask, rev, 1.0 / (K + 1), True, interpret=True)
+    np.testing.assert_allclose(float(jnp.sum(xn)), float(jnp.sum(x)),
+                               rtol=1e-4)
+    assert (np.asarray(xn) >= -1e-4).all()
+
+
+# --------------------------------------------------------------- histogram --
+
+
+@pytest.mark.parametrize("N,C,block_n", [
+    (100, 7, 32), (4096, 144, 2048), (5000, 333, 1024), (64, 4, 64),
+])
+def test_histogram_matches_ref(N, C, block_n):
+    rng = np.random.default_rng(N)
+    ids = jnp.asarray(rng.integers(-1, C, N), jnp.int32)   # incl. padding ids
+    w = jnp.asarray(rng.random(N), jnp.float32)
+    got = histogram_pallas(ids, w, C=C, block_n=block_n, interpret=True)
+    want = histogram_ref(ids, w, C=C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+def test_histogram_weighted_vs_counts():
+    ids = jnp.asarray([0, 0, 1, 2, 2, 2], jnp.int32)
+    ones = jnp.ones(6, jnp.float32)
+    got = histogram_pallas(ids, ones, C=3, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), [2, 1, 3])
+
+
+# ---------------------------------------------------------------- pic_push --
+
+
+@pytest.mark.parametrize("L,N,block_n", [(32, 100, 64), (64, 1000, 256),
+                                         (128, 333, 512)])
+def test_pic_push_matches_ref(L, N, block_n):
+    p = initialize("GEOMETRIC", L, N, k=1, seed=L)
+    g = jnp.asarray(alternating_grid(L))
+    args = tuple(map(jnp.asarray, (p.x, p.y, p.vx, p.vy, p.q)))
+    got = pic_push_pallas(g, *args, L=L, block_n=block_n, interpret=True)
+    want = pic_push_ref(g, *args, L=L)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["GEOMETRIC", "SINUSOIDAL", "LINEAR",
+                                  "PATCH"])
+def test_pic_push_positions_stay_in_bounds(mode):
+    L = 48
+    p = initialize(mode, L, 500, k=2, seed=1)
+    g = jnp.asarray(alternating_grid(L))
+    x, y, vx, vy = map(jnp.asarray, (p.x, p.y, p.vx, p.vy))
+    q = jnp.asarray(p.q)
+    for _ in range(5):
+        x, y, vx, vy = pic_push_ref(g, x, y, vx, vy, q, L=L)
+    assert (np.asarray(x) >= 0).all() and (np.asarray(x) < L).all()
+    assert (np.asarray(y) >= 0).all() and (np.asarray(y) < L).all()
+
+
+def test_prk_determinism_displacement():
+    """The PRK construction: exactly (2k+1) cells/step horizontally after
+    every even step, vy cells vertically."""
+    L, k = 64, 3
+    p = initialize("GEOMETRIC", L, 400, k=k, seed=5)
+    g = jnp.asarray(alternating_grid(L))
+    s = tuple(map(jnp.asarray, (p.x, p.y, p.vx, p.vy)))
+    q = jnp.asarray(p.q)
+    for _ in range(4):
+        out = pic_push_ref(g, *s, q, L=L)
+        s = out
+    dx = (np.asarray(s[0]) - p.x) % L
+    dy = (np.asarray(s[1]) - p.y) % L
+    np.testing.assert_allclose(dx, (4 * (2 * k + 1)) % L, atol=1e-3)
+    np.testing.assert_allclose(dy, 4.0, atol=1e-3)
+
+
+# --------------------------------------------------------- flash attention --
+
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("B,Sq,T,KV,G,hd,window,prefix,dtype", [
+    (2, 64, 64, 2, 3, 16, 0, 0, jnp.float32),
+    (1, 128, 128, 1, 4, 32, 0, 0, jnp.float32),
+    (2, 64, 64, 2, 2, 16, 24, 0, jnp.float32),
+    (1, 48, 48, 2, 2, 16, 0, 16, jnp.float32),
+    (2, 96, 96, 3, 1, 16, 0, 0, jnp.bfloat16),
+    (1, 40, 72, 2, 2, 8, 0, 0, jnp.float32),   # Sq != T, non-multiple blocks
+])
+def test_flash_attention_matches_ref(B, Sq, T, KV, G, hd, window, prefix,
+                                     dtype):
+    rng = np.random.default_rng(Sq + T)
+    q = jnp.asarray(rng.normal(size=(B, Sq, KV, G, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    qpos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32) + (T - Sq),
+                            (B, Sq))
+    kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    got = flash_attention_pallas(q, k, v, qpos, kpos, window=window,
+                                 prefix_len=prefix, q_block=32, kv_block=32,
+                                 interpret=True)
+    want = flash_attention_ref(q, k, v, qpos, kpos, window=window,
+                               prefix_len=prefix)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_cache_sentinels():
+    """Unwritten cache slots (sentinel positions) must not contribute."""
+    B, Sq, T, KV, G, hd = 1, 16, 64, 1, 2, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, Sq, KV, G, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)).astype(np.float32))
+    qpos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    kpos = jnp.where(jnp.arange(T) < Sq, jnp.arange(T), 2 ** 30)[None, :]
+    kpos = jnp.broadcast_to(kpos.astype(jnp.int32), (B, T))
+    got = flash_attention_pallas(q, k, v, qpos, kpos, q_block=16,
+                                 kv_block=16, interpret=True)
+    want = flash_attention_ref(q[:, :Sq], k[:, :Sq], v[:, :Sq], qpos,
+                               kpos[:, :Sq])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)

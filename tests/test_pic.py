@@ -1,0 +1,67 @@
+"""PIC PRK benchmark (paper §VI): driver-level behavior."""
+import numpy as np
+import pytest
+
+from repro.pic import chares, driver
+from repro.pic.particles import initialize
+
+
+def _cfg(**kw):
+    base = dict(L=100, n_particles=2000, steps=25, k=1, rho=0.9, cx=10,
+                cy=10, num_pes=4, mapping="striped", lb_every=8,
+                strategy="none", seed=0)
+    base.update(kw)
+    return driver.PICConfig(**base)
+
+
+def test_particle_count_conserved():
+    r = driver.run(_cfg())
+    assert r.final_x.shape == (2000,)
+    assert np.isfinite(r.final_x).all()
+
+
+def test_geometric_distribution_skews_left():
+    p = initialize("GEOMETRIC", 100, 20_000, rho=0.8, seed=0)
+    left = (p.x < 25).mean()
+    right = (p.x > 75).mean()
+    assert left > 0.9 and right < 0.01
+
+
+def test_initial_mapping_modes():
+    a = chares.initial_mapping(12, 12, 4, "striped")
+    b = chares.initial_mapping(12, 12, 4, "quad")
+    assert a.shape == b.shape == (144,)
+    assert set(a) == set(b) == {0, 1, 2, 3}
+    # striped: contiguous thirds of chare columns; quad: 2x2 tiles
+    assert (np.sort(np.bincount(a)) == 36).all()
+    assert (np.sort(np.bincount(b)) == 36).all()
+
+
+def test_chare_of_periodic_and_in_range():
+    c = chares.chare_of(np.array([0.1, 99.9]), np.array([0.1, 99.9]),
+                        100, 12, 12)
+    assert (c >= 0).all() and (c < 144).all()
+
+
+def test_lb_improves_particle_balance():
+    r0 = driver.run(_cfg(strategy="none", steps=40, lb_every=8))
+    r1 = driver.run(_cfg(strategy="diff-comm", steps=40, lb_every=8,
+                         strategy_kwargs=dict(k=2)))
+    assert r1.max_avg.mean() < r0.max_avg.mean()
+    assert r1.migrations.max() > 0
+
+
+def test_diffusion_lower_migration_than_greedy_global():
+    r_d = driver.run(_cfg(strategy="diff-comm", steps=30,
+                          strategy_kwargs=dict(k=2)))
+    r_g = driver.run(_cfg(strategy="greedy", steps=30))
+    assert (r_d.migrated_bytes.sum() <= r_g.migrated_bytes.sum())
+
+
+def test_build_problem_edges_follow_motion():
+    loads = np.ones(16, np.float32)
+    assign = chares.initial_mapping(4, 4, 2, "striped")
+    prob = chares.build_problem(loads, assign, L=40, cx=4, cy=4, num_pes=2,
+                                k=1, vy0=1.0, lb_period=5)
+    prob.validate()
+    assert prob.num_edges == 32            # east + north per chare

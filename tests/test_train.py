@@ -1,0 +1,153 @@
+"""Training substrate: optimizer, memorization, checkpoint resume."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import transformer
+from repro.models.params import init_params
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("smollm-135m").reduced
+    specs = transformer.model_specs(cfg)
+    params = init_params(specs, 0)
+    ocfg = opt_mod.OptConfig(lr=3e-3, warmup_steps=5, total_steps=200,
+                             weight_decay=0.0)
+    step = jax.jit(ts_mod.make_train_step(cfg, ocfg))
+    return cfg, params, ocfg, step
+
+
+def _const_batch(cfg, B=4, S=24, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(1, cfg.vocab_size, (B, S)).astype(np.int32)
+    labels = np.concatenate([toks[:, 1:], np.full((B, 1), -1, np.int32)], 1)
+    pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None], (B, S))
+    return dict(tokens=jnp.asarray(toks), labels=jnp.asarray(labels),
+                positions=jnp.asarray(np.ascontiguousarray(pos)))
+
+
+def test_memorizes_fixed_batch(setup):
+    cfg, params, ocfg, step = setup
+    opt = opt_mod.init(params)
+    batch = _const_batch(cfg)
+    losses = []
+    for _ in range(60):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.5, f"no memorization: {losses[::10]}"
+
+
+def test_lr_schedule_shape():
+    ocfg = opt_mod.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                             min_lr_frac=0.1)
+    lrs = [float(opt_mod.schedule(ocfg, jnp.int32(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-2
+
+
+def test_grad_clipping_bounds_update():
+    """Adam normalizes update magnitude to ~lr regardless of grad scale;
+    clipping bounds the *reported* grad norm and protects the moments.
+    Assert both invariants (a huge spike must not produce a step > lr)."""
+    ocfg = opt_mod.OptConfig(lr=1e-2, clip_norm=1.0, warmup_steps=0,
+                             total_steps=10, weight_decay=0.0)
+    p = dict(w=jnp.ones((4, 4)))
+    g = dict(w=jnp.full((4, 4), 1e6))
+    st = opt_mod.init(p)
+    p2, st2, m = opt_mod.apply(ocfg, p, g, st)
+    assert float(m["grad_norm"]) == pytest.approx(4e6, rel=1e-3)
+    assert float(jnp.abs(p2["w"] - p["w"]).max()) <= ocfg.lr * 1.01
+    # clipped moments: v is bounded by the clipped grad square
+    assert float(st2.nu["w"].max()) <= (1 - ocfg.b2) * (1.0 / 4) ** 2 * 1.01
+
+
+def test_weight_decay_mask_skips_1d():
+    ocfg = opt_mod.OptConfig(lr=1e-2, weight_decay=10.0, warmup_steps=0,
+                             total_steps=10)
+    p = dict(w=jnp.ones((4, 4)), b=jnp.ones((4,)))
+    g = jax.tree.map(jnp.zeros_like, p)
+    st = opt_mod.init(p)
+    p2, *_ = opt_mod.apply(ocfg, p, g, st)
+    assert float(jnp.abs(p2["b"] - 1.0).max()) < 1e-9, "1D: no decay"
+    assert float(jnp.abs(p2["w"] - 1.0).max()) > 1e-4, "2D: decayed"
+
+
+def test_checkpoint_resume_bit_exact(setup):
+    cfg, params, ocfg, step = setup
+    opt = opt_mod.init(params)
+    batch = _const_batch(cfg, seed=1)
+
+    # path A: 6 continuous steps
+    pa, oa = params, opt
+    for _ in range(6):
+        pa, oa, _ = step(pa, oa, batch)
+
+    # path B: 3 steps, save, restore, 3 more
+    pb, ob = params, opt
+    for _ in range(3):
+        pb, ob, _ = step(pb, ob, batch)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 3, pb, ob)
+        pb2, ob2, s, _ = ckpt.restore(d, pb, ob)
+        assert s == 3
+    for _ in range(3):
+        pb2, ob2, _ = step(pb2, ob2, batch)
+
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        p = dict(w=jnp.ones((2,)))
+        for s in [1, 2, 3, 4, 5]:
+            ckpt.save(d, s, p, keep=2)
+        names = sorted(x for x in os.listdir(d) if x.startswith("ckpt_"))
+        assert names == ["ckpt_00000004", "ckpt_00000005"]
+        assert ckpt.latest_step(d) == 5
+
+
+def test_data_pipeline_deterministic_and_rebalances():
+    dcfg = data_mod.DataConfig(vocab_size=100, seq_len=16, global_batch=4,
+                               num_shards=16, seed=7)
+    p1 = data_mod.DataPipeline(dcfg, num_ranks=4)
+    p2 = data_mod.DataPipeline(dcfg, num_ranks=4)
+    b1, b2 = p1.next_batch(), p2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    info = p1.maybe_rebalance(threshold=1.01)
+    if info is not None:
+        loads = p1.rank_loads()
+        assert loads.max() / loads.mean() < 2.0
+
+
+def test_grad_compress_error_feedback():
+    from repro.distributed import grad_compress as gc
+    rng = np.random.default_rng(0)
+    g = dict(w=jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)))
+    res = gc.init_residual(g)
+    # accumulate over steps: error feedback keeps the running sum faithful
+    acc_true = np.zeros((64, 64))
+    acc_comp = np.zeros((64, 64))
+    for s in range(10):
+        gs = dict(w=jnp.asarray(
+            rng.normal(size=(64, 64)).astype(np.float32)))
+        deq, res = gc.compress(gs, res)
+        acc_true += np.asarray(gs["w"])
+        acc_comp += np.asarray(deq["w"])
+    rel = np.linalg.norm(acc_true - acc_comp) / np.linalg.norm(acc_true)
+    assert rel < 0.05, f"error feedback diverged: {rel}"
+    single = float(gc.compression_error(g, gc.init_residual(g)))
+    assert single < 0.05

@@ -1,0 +1,113 @@
+"""Stage 2 (paper §III.B): diffusion invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import virtual_lb as vlb
+from tests.conftest import ring_neighbors
+
+
+def _balance(loads, nbr, mask, **kw):
+    return vlb.virtual_balance(
+        jnp.asarray(loads, jnp.float32), jnp.asarray(nbr),
+        jnp.asarray(mask), **kw)
+
+
+def test_conserves_total_load():
+    P = 32
+    nbr, mask = ring_neighbors(P, hops=2)
+    rng = np.random.default_rng(0)
+    loads = rng.random(P).astype(np.float32) * 10
+    res = _balance(loads, nbr, mask)
+    np.testing.assert_allclose(
+        float(jnp.sum(res.target_loads)), float(loads.sum()), rtol=1e-4)
+
+
+def test_flows_realize_targets():
+    """x_final == x_0 - net outgoing flows (flow bookkeeping consistency)."""
+    P = 16
+    nbr, mask = ring_neighbors(P, hops=1)
+    rng = np.random.default_rng(1)
+    loads = rng.random(P).astype(np.float32) * 5
+    res = _balance(loads, nbr, mask)
+    net_out = np.asarray(res.flows).sum(axis=1)
+    np.testing.assert_allclose(
+        np.asarray(res.target_loads), loads - net_out, rtol=1e-3, atol=1e-3)
+
+
+def test_flows_antisymmetric():
+    P = 12
+    nbr, mask = ring_neighbors(P, hops=2)
+    res = _balance(np.arange(P, dtype=np.float32) + 1, nbr, mask)
+    flows = np.asarray(res.flows)
+    rev = np.asarray(vlb.reverse_slots(jnp.asarray(nbr), jnp.asarray(mask)))
+    for i in range(P):
+        for k in range(nbr.shape[1]):
+            j, r = nbr[i, k], rev[i, k]
+            np.testing.assert_allclose(flows[i, k], -flows[j, r], atol=1e-4)
+
+
+def test_single_hop_limits_outflow_to_own_load():
+    """No node ships more than its original load (paper's single-hop)."""
+    P = 16
+    nbr, mask = ring_neighbors(P, hops=2)
+    loads = np.full(P, 1.0, np.float32)
+    loads[0] = 50.0
+    res = _balance(loads, nbr, mask, single_hop=True)
+    out = np.asarray(res.flows).clip(min=0).sum(axis=1)
+    assert (out <= loads + 1e-3).all()
+
+
+def test_multi_hop_beats_single_hop_on_hotspot():
+    P = 32
+    nbr, mask = ring_neighbors(P, hops=1)
+    loads = np.full(P, 1.0, np.float32)
+    loads[0] = 100.0
+    r1 = _balance(loads, nbr, mask, single_hop=True, max_iters=2000)
+    r2 = _balance(loads, nbr, mask, single_hop=False, max_iters=2000)
+    m1 = float(np.asarray(r1.target_loads).max())
+    m2 = float(np.asarray(r2.target_loads).max())
+    assert m2 <= m1 + 1e-3, "unconstrained diffusion spreads further"
+
+
+def test_converges_on_complete_graph():
+    P = 8
+    nbr = np.stack([np.roll(np.arange(P), -h)[:P] for h in range(1, P)], 1)
+    nbr = np.stack([(np.arange(P) + h) % P for h in range(1, P)], 1).astype(np.int32)
+    mask = np.ones_like(nbr, bool)
+    loads = np.zeros(P, np.float32)
+    loads[0] = 8.0
+    res = _balance(loads, nbr, mask, single_hop=False, tol=0.01)
+    x = np.asarray(res.target_loads)
+    assert x.max() / x.mean() < 1.1
+
+
+def test_stall_exit_fires():
+    """Single-hop freeze must not burn max_iters."""
+    P = 16
+    nbr, mask = ring_neighbors(P, hops=1)
+    loads = np.full(P, 1.0, np.float32)
+    loads[0] = 1000.0
+    res = _balance(loads, nbr, mask, single_hop=True, max_iters=512)
+    assert int(res.iters) < 512
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    P=st.integers(4, 40),
+    hops=st.integers(1, 3),
+    seed=st.integers(0, 1000),
+    single_hop=st.booleans(),
+)
+def test_property_conservation_and_no_negative(P, hops, seed, single_hop):
+    hops = min(hops, (P - 1) // 2)
+    nbr, mask = ring_neighbors(P, hops=hops)
+    rng = np.random.default_rng(seed)
+    loads = (rng.random(P) * 10).astype(np.float32)
+    res = _balance(loads, nbr, mask, single_hop=single_hop)
+    x = np.asarray(res.target_loads)
+    np.testing.assert_allclose(x.sum(), loads.sum(), rtol=1e-3)
+    assert (x >= -1e-3).all(), "virtual loads must stay non-negative"
+    # balance never gets worse
+    assert x.max() <= loads.max() + 1e-3
