@@ -1,0 +1,118 @@
+"""LBEngine throughput: eager host-loop replay vs the scan-compiled
+planning pipeline (core/engine.py + sim/simulator.py + pic/driver.py).
+
+Headline measurement (the repo's acceptance gate for the device-resident
+engine): replaying the `stencil-wave` scenario with `diff-comm` at P=64
+nodes, K=8 neighbors over 200 steps on CPU, the scanned path must be
+≥ 5× faster than the eager host loop and produce the identical plan
+trajectory.  Also reports per-scenario scanned steps/sec and a PIC-driver
+comparison (device-resident chunked scan vs legacy host loop).
+
+  PYTHONPATH=src python benchmarks/engine_bench.py
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import save_result, table
+from repro.pic import driver
+from repro.sim import scenarios, simulator
+
+
+def _series(problem, evolve, *, scan, steps, lb_every, strategy, kw):
+    t0 = time.perf_counter()
+    res = simulator.run_series(
+        problem, evolve, steps=steps, lb_every=lb_every, strategy=strategy,
+        strategy_kwargs=kw, scan=scan)
+    return res, time.perf_counter() - t0
+
+
+def run(P: int = 64, K: int = 8, steps: int = 200, grid: int = 32,
+        lb_every: int = 10):
+    out = {}
+
+    # ---- headline: stencil-wave, diff-comm, P=64 K=8, 200 steps ---------
+    problem, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=grid, num_nodes=P)
+    kw = dict(k=K)
+    common = dict(steps=steps, lb_every=lb_every, strategy="diff-comm",
+                  kw=kw)
+
+    # warm both paths: compile the scan, trace the eager per-stage jits
+    _series(problem, evolve, scan=True, **common)
+    _series(problem, evolve, scan=False,
+            steps=lb_every + 2, lb_every=lb_every, strategy="diff-comm",
+            kw=kw)
+
+    res_scan, t_scan = _series(problem, evolve, scan=True, **common)
+    res_eager, t_eager = _series(problem, evolve, scan=False, **common)
+
+    parity = bool(
+        np.allclose(res_eager.max_avg, res_scan.max_avg, rtol=1e-4)
+        and np.allclose(res_eager.migrations, res_scan.migrations,
+                        atol=1e-6))
+    speedup = t_eager / max(t_scan, 1e-12)
+    out["series"] = dict(
+        P=P, K=K, steps=steps, grid=grid, lb_every=lb_every,
+        eager_seconds=t_eager, scanned_seconds=t_scan,
+        eager_steps_per_sec=steps / t_eager,
+        scanned_steps_per_sec=steps / t_scan,
+        speedup=speedup, parity=parity,
+    )
+    print(f"run_series diff-comm  P={P} K={K} grid={grid}² steps={steps}")
+    print(table(
+        ["path", "seconds", "steps/sec"],
+        [["eager host loop", f"{t_eager:.3f}", f"{steps / t_eager:.1f}"],
+         ["scanned", f"{t_scan:.4f}", f"{steps / t_scan:.1f}"],
+         ["speedup", f"{speedup:.1f}x", ""]]))
+    print(f"plan-trajectory parity (max/avg + migrations): {parity}")
+
+    # ---- per-scenario scanned throughput --------------------------------
+    small = {
+        "stencil-wave": dict(grid=16, num_nodes=16),
+        "pic-geometric": dict(cx=8, cy=8, num_pes=8, n_particles=10_000.0),
+        "adversarial-hotspot": dict(grid=16, num_nodes=16),
+        "bimodal-churn": dict(grid=16, num_nodes=16),
+    }
+    rows = []
+    out["scenarios"] = {}
+    for name in scenarios.available():
+        prob, ev = scenarios.get(name).instantiate(**small.get(name, {}))
+        c = dict(steps=100, lb_every=5, strategy="diff-comm", kw=dict(k=4))
+        _series(prob, ev, scan=True, **c)                     # compile
+        r, t = _series(prob, ev, scan=True, **c)
+        rows.append([name, f"{100 / t:.0f}", f"{r.max_avg.mean():.3f}",
+                     f"{r.migrations[r.migrations > 0].mean() if (r.migrations > 0).any() else 0:.3f}"])
+        out["scenarios"][name] = dict(
+            steps_per_sec=100 / t, mean_max_avg=float(r.max_avg.mean()))
+    print("\nscanned replay, diff-comm k=4, 100 steps")
+    print(table(["scenario", "steps/sec", "mean max/avg", "migr/LB"], rows))
+
+    # ---- PIC driver: device-resident chunked scan vs host loop ----------
+    base = dict(L=200, n_particles=20_000, steps=60, k=2, rho=0.9, cx=10,
+                cy=10, num_pes=8, mapping="striped", lb_every=10,
+                strategy="diff-comm", strategy_kwargs=dict(k=4))
+    driver.run(driver.PICConfig(scan=True, **base))           # compile
+    r_s = driver.run(driver.PICConfig(scan=True, **base))
+    r_h = driver.run(driver.PICConfig(scan=False, **base))
+    pic_speedup = r_h.wall_seconds / max(r_s.wall_seconds, 1e-12)
+    out["pic"] = dict(
+        host_seconds=r_h.wall_seconds, scanned_seconds=r_s.wall_seconds,
+        speedup=pic_speedup,
+        parity=bool(np.allclose(r_h.max_avg, r_s.max_avg, rtol=1e-4)),
+    )
+    print(f"\nPIC driver 20k particles, 60 steps: host {r_h.wall_seconds:.3f}s"
+          f"  scanned {r_s.wall_seconds:.4f}s  ({pic_speedup:.1f}x)")
+
+    path = save_result("engine_bench", out)
+    print(f"\nsaved {path}")
+    assert parity, "scanned plan must equal the eager plan"
+    assert speedup >= 5.0, \
+        f"scanned path must be >=5x the eager host loop, got {speedup:.1f}x"
+    return out
+
+
+if __name__ == "__main__":
+    run()

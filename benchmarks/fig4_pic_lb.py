@@ -10,14 +10,23 @@ import numpy as np
 
 from benchmarks.common import save_result, table
 from repro.pic import driver
+from repro.sim import scenarios
 
 PAPER_IMPROVEMENT = {"greedy-refine": 0.50, "diff-comm": 0.48,
                      "diff-coord": 0.50}
 
 
-def run(steps: int = 100, n: int = 100_000, L: int = 1000):
-    base = dict(L=L, n_particles=n, steps=steps, k=2, rho=0.9, cx=12, cy=12,
-                num_pes=4, mapping="striped", lb_every=10)
+def run(steps: int = 100, n: int = 100_000, L: int = 1000,
+        scenario: str = "pic-geometric"):
+    # workload parameters come from the scenario registry (sim/scenarios.py)
+    sc = dict(scenarios.get(scenario).pic_config or {})
+    base = dict(L=L, n_particles=n, steps=steps,
+                k=sc.get("k", 2), rho=sc.get("rho", 0.9),
+                mode=sc.get("mode", "GEOMETRIC"),
+                cx=sc.get("cx", 12), cy=sc.get("cy", 12),
+                num_pes=sc.get("num_pes", 4),
+                mapping=sc.get("mapping", "striped"),
+                lb_every=sc.get("lb_every", 10))
     out = {}
     res = {}
     for strat in ["none", "greedy-refine", "diff-comm", "diff-coord"]:

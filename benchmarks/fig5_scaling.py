@@ -24,6 +24,7 @@ import numpy as np
 
 from benchmarks.common import save_result, table
 from repro.pic import driver
+from repro.sim import scenarios
 
 SCALES = [4, 8, 16, 32]
 
@@ -45,7 +46,12 @@ def _warmup(pes: int, cx: int, cy: int, L: int):
     api.run_strategy("diff-comm", prob, k=3)
 
 
-def run(n: int = 200_000, L: int = 1200, steps: int = 50):
+def run(n: int = 200_000, L: int = 1200, steps: int = 50,
+        scenario: str = "pic-geometric"):
+    # particle mode / mapping / density come from the scenario registry;
+    # charge k, the chare grid and the PE scales stay the Fig-5
+    # strong-scaling setup.
+    sc = dict(scenarios.get(scenario).pic_config or {})
     out = {}
     rows = []
     for pes in SCALES:
@@ -54,8 +60,10 @@ def run(n: int = 200_000, L: int = 1200, steps: int = 50):
         for strat in ["none", "greedy-refine", "diff-comm"]:
             kw = dict(k=3) if strat.startswith("diff") else {}
             cfg = driver.PICConfig(
-                L=L, n_particles=n, steps=steps, k=4, rho=0.9,
-                cx=20, cy=10, num_pes=pes, mapping="striped", lb_every=5,
+                L=L, n_particles=n, steps=steps, k=4,
+                rho=sc.get("rho", 0.9), mode=sc.get("mode", "GEOMETRIC"),
+                cx=20, cy=10, num_pes=pes,
+                mapping=sc.get("mapping", "striped"), lb_every=5,
                 strategy=strat, strategy_kwargs=kw)
             r = driver.run(cfg)
             cell[strat] = dict(

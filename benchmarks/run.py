@@ -10,8 +10,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (ep_balance_bench, fig2_stencil, fig4_pic_lb,
-                        fig5_scaling, kernel_bench, roofline,
+from benchmarks import (engine_bench, ep_balance_bench, fig2_stencil,
+                        fig4_pic_lb, fig5_scaling, kernel_bench, roofline,
                         table1_neighbor_count, table2_strategies)
 
 ALL = {
@@ -20,6 +20,7 @@ ALL = {
     "table2": table2_strategies.run,
     "fig4": fig4_pic_lb.run,
     "fig5": fig5_scaling.run,
+    "engine": engine_bench.run,
     "ep_balance": ep_balance_bench.run,
     "kernels": kernel_bench.run,
     "roofline": roofline.run,

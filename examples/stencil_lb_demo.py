@@ -1,52 +1,38 @@
-"""Strategy comparison on a time-evolving stencil workload (paper §V).
+"""Strategy comparison on time-evolving workloads (paper §V).
 
-Runs 60 steps of a 2D stencil whose load hotspot orbits the grid, with
-periodic rebalancing, and prints per-strategy trajectories — the
-simulator-level version of the paper's Fig 4.
+Replays every registered scenario (sim/scenarios.py) under periodic
+rebalancing and prints per-strategy trajectories — the simulator-level
+version of the paper's Fig 4.  Jittable strategies (none / diff-*) run on
+the scan-compiled device-resident path; NumPy baselines (greedy-refine)
+fall back to the host loop — same ``run_series`` call either way.
 
   PYTHONPATH=src python examples/stencil_lb_demo.py
 """
-import dataclasses
+from repro.sim import scenarios, simulator
 
-import numpy as np
-
-from repro.core import comm_graph
-from repro.sim import simulator, stencil, synthetic
-
-
-def make_evolver(base_loads: np.ndarray, coords: np.ndarray, grid: int):
-    """Load hotspot orbiting the domain: load_i(t) ∝ 1 + 8·exp(-d²/2σ²)."""
-
-    def evolve(problem: comm_graph.LBProblem, t: int):
-        angle = 2 * np.pi * t / 60.0
-        cx = grid / 2 + grid / 3 * np.cos(angle)
-        cy = grid / 2 + grid / 3 * np.sin(angle)
-        d2 = ((coords[:, 0] - cx) ** 2 + (coords[:, 1] - cy) ** 2)
-        loads = base_loads * (1 + 8 * np.exp(-d2 / (2 * (grid / 8) ** 2)))
-        return dataclasses.replace(problem,
-                                   loads=loads.astype(np.float32))
-
-    return evolve
+STRATEGIES = ["none", "greedy-refine", "diff-comm", "diff-coord"]
 
 
 def main():
-    grid, pes = 32, 16
-    base = stencil.stencil_2d(grid, grid, pes, mapping="tiled")
-    coords = np.asarray(base.coords)
-    base_loads = np.ones(grid * grid, np.float32)
-    evolve = make_evolver(base_loads, coords, grid)
-
-    print(f"orbiting hotspot on {grid}x{grid} stencil, {pes} PEs, LB/5 steps")
-    print(f"{'strategy':>14} {'mean max/avg':>13} {'mean ext/int':>13} "
-          f"{'migr/step':>10}")
-    for strategy in ["none", "greedy-refine", "diff-comm", "diff-coord"]:
-        kw = dict(k=4) if strategy.startswith("diff") else {}
-        res = simulator.run_series(
-            base, evolve, steps=60, lb_every=5, strategy=strategy,
-            strategy_kwargs=kw)
-        print(f"{strategy:>14} {res.max_avg.mean():>13.3f} "
-              f"{res.ext_int.mean():>13.3f} "
-              f"{res.migrations[res.migrations > 0].mean() if (res.migrations > 0).any() else 0:>10.3f}")
+    for name in scenarios.available():
+        sc = scenarios.get(name)
+        problem, evolve = sc.instantiate()
+        print(f"\n=== {name}: {sc.description}")
+        print(f"{'strategy':>14} {'mean max/avg':>13} {'mean ext/int':>13} "
+              f"{'migr/step':>10} {'path':>8} {'wall s':>8}")
+        for strategy in STRATEGIES:
+            kw = dict(k=4) if strategy.startswith("diff") else {}
+            if strategy == "diff-coord" and problem.coords is None:
+                continue
+            res = simulator.run_series(
+                problem, evolve, steps=60, lb_every=5, strategy=strategy,
+                strategy_kwargs=kw)
+            mig = (res.migrations[res.migrations > 0].mean()
+                   if (res.migrations > 0).any() else 0.0)
+            print(f"{strategy:>14} {res.max_avg.mean():>13.3f} "
+                  f"{res.ext_int.mean():>13.3f} {mig:>10.3f} "
+                  f"{'scan' if res.scanned else 'host':>8} "
+                  f"{res.wall_seconds:>8.3f}")
 
 
 if __name__ == "__main__":

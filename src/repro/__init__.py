@@ -1,0 +1,8 @@
+"""Reproduction of "Communication-Aware Diffusion Load Balancing for
+Persistently Interacting Objects" grown toward a production-scale JAX
+system.  Importing the package installs version shims for newer
+``jax.sharding`` APIs on the pinned jax (see distributed/compat.py).
+"""
+from repro.distributed import compat as _compat
+
+_compat.install()

@@ -2,21 +2,20 @@
 
 ``diffusion_lb(problem)`` composes the stages of §III (plus the §IV
 coordinate variant) and returns a new assignment with planning stats.
-``STRATEGIES`` is the registry the simulator / benchmarks / framework
-integrations use.
+Planning itself lives in :mod:`repro.core.engine` — one fused, jitted,
+scan-safe ``plan_fn`` per static configuration — and strategies are
+``engine.Strategy`` records.  ``STRATEGIES`` remains as a thin mapping
+view over the registry for existing callers.
 """
 from __future__ import annotations
 
-import time
+from collections.abc import Mapping
 from typing import Callable, Dict, NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, comm_graph, metrics
-from repro.core import neighbor_selection as ns
-from repro.core import object_selection as osel
-from repro.core import virtual_lb as vlb
+from repro.core import comm_graph, engine, metrics
 
 
 class LBPlan(NamedTuple):
@@ -35,74 +34,31 @@ def diffusion_lb(
     single_hop: bool = True,
     step_fn: Optional[Callable] = None,
 ) -> LBPlan:
-    t0 = time.perf_counter()
-
-    # -- stage 1: neighbor selection ------------------------------------
-    if variant == "comm":
-        node_comm = comm_graph.node_comm_matrix(problem)
-        pref = ns.comm_preference(node_comm)
-    elif variant == "coord":
-        assert problem.coords is not None, "coordinate variant needs coords"
-        cent = osel.centroids(
-            problem.coords, problem.assignment, problem.num_nodes
-        )
-        pref = ns.coordinate_preference(cent)
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-    nres = ns.select_neighbors(pref, k=k, max_rounds=max_rounds)
-
-    # -- stage 2: virtual load balancing ---------------------------------
-    nloads = comm_graph.node_loads(problem)
-    vres = vlb.virtual_balance(
-        nloads, nres.nbr_idx, nres.nbr_mask,
-        tol=tol, max_iters=max_iters, single_hop=single_hop, step_fn=step_fn,
+    """Eager single-snapshot planning via the cached, compiled engine."""
+    eng = engine.get_engine(
+        variant=variant, k=k, tol=tol, max_iters=max_iters,
+        max_rounds=max_rounds, single_hop=single_hop, step_fn=step_fn,
     )
-
-    # -- stage 3: object selection ----------------------------------------
-    sres = osel.select_objects(
-        problem, nres.nbr_idx, nres.nbr_mask, vres.flows,
-        metric="comm" if variant == "comm" else "coord",
-    )
-
-    info = dict(
-        strategy=f"diff-{variant}",
-        k=k,
-        protocol_rounds=int(nres.rounds),
-        mean_degree=float(np.mean(np.asarray(nres.degree))),
-        diffusion_iters=int(vres.iters),
-        diffusion_residual=float(vres.residual),
-        unrealized_flow=float(np.abs(np.asarray(sres.residual)).sum()),
-        plan_seconds=time.perf_counter() - t0,
-    )
-    return LBPlan(np.asarray(sres.assignment), info)
+    return eng.plan(problem)
 
 
 # --------------------------------------------------------------- registry --
 
 
-def _wrap(fn):
-    def run(problem: comm_graph.LBProblem, **kw) -> LBPlan:
-        t0 = time.perf_counter()
-        a = fn(problem, **kw)
-        return LBPlan(np.asarray(a),
-                      dict(strategy=fn.__name__,
-                           plan_seconds=time.perf_counter() - t0))
-    return run
+class _StrategyView(Mapping):
+    """Back-compat dict view: name -> eager ``(problem, **kw) -> LBPlan``."""
+
+    def __getitem__(self, name: str) -> Callable[..., LBPlan]:
+        return engine.get_strategy(name).run
+
+    def __iter__(self):
+        return iter(engine.available())
+
+    def __len__(self) -> int:
+        return len(engine.available())
 
 
-def _none(problem: comm_graph.LBProblem) -> np.ndarray:
-    return np.asarray(problem.assignment)
-
-
-STRATEGIES: Dict[str, Callable[..., LBPlan]] = {
-    "none": _wrap(_none),
-    "diff-comm": lambda p, **kw: diffusion_lb(p, variant="comm", **kw),
-    "diff-coord": lambda p, **kw: diffusion_lb(p, variant="coord", **kw),
-    "greedy": _wrap(baselines.greedy),
-    "greedy-refine": _wrap(baselines.greedy_refine),
-    "metis": _wrap(baselines.metis_like),
-    "parmetis": _wrap(baselines.parmetis_like),
-}
+STRATEGIES: Mapping[str, Callable[..., LBPlan]] = _StrategyView()
 
 
 def run_strategy(name: str, problem: comm_graph.LBProblem, **kw) -> LBPlan:

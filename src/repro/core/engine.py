@@ -1,0 +1,280 @@
+"""Device-resident LB engine: the three planning stages fused into one
+shape-stable, jit/scannable ``plan`` function, plus the Strategy protocol.
+
+The paper's balancer (§III) is three stages — neighbor selection, virtual
+diffusion, object selection.  ``core/api.py``'s eager path composes them
+through host Python with NumPy round-trips per call; that is fine for one
+snapshot but dominates wall time when a time-evolving workload is replayed
+(Fig 4/5) and makes the planner unusable inside ``jax.lax.scan``.
+
+``LBEngine`` closes over the static configuration ``(variant, K, tol,
+iteration caps)`` and exposes
+
+  * ``plan_fn(problem) -> (assignment, PlanStats)`` — pure, traceable,
+    shape-stable in the static ``(P, K, C)`` envelope (``P`` nodes, ``K``
+    neighbor slots, ``C`` objects; all baked into array shapes), safe to
+    call under ``jit`` / ``lax.scan`` / ``lax.cond``;
+  * ``plan(problem) -> LBPlan`` — eager host convenience with timing and
+    the legacy ``info`` dict.
+
+``Strategy`` is the registry protocol replacing the dict-of-lambdas in
+``core/api.py`` (a thin mapping view remains there for back-compat):
+jittable strategies expose a traceable ``plan_fn(problem, **params)``;
+host-only baselines (greedy, metis, ...) keep ``jittable=False`` and are
+run eagerly by ``Strategy.run``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, comm_graph
+from repro.core import neighbor_selection as ns
+from repro.core import object_selection as osel
+from repro.core import virtual_lb as vlb
+
+
+class PlanStats(NamedTuple):
+    """Planner statistics as device scalars (scan/cond friendly)."""
+
+    protocol_rounds: jax.Array     # i32 — stage-1 handshake rounds
+    mean_degree: jax.Array         # f32 — mean confirmed neighbor count
+    diffusion_iters: jax.Array     # i32 — stage-2 sweeps executed
+    diffusion_residual: jax.Array  # f32 — final neighborhood imbalance
+    unrealized_flow: jax.Array     # f32 — |wanted - shipped| load (stage 3)
+
+
+def zero_stats() -> PlanStats:
+    """Neutral PlanStats — the no-LB branch of a ``lax.cond``."""
+    return PlanStats(
+        protocol_rounds=jnp.int32(0),
+        mean_degree=jnp.float32(0.0),
+        diffusion_iters=jnp.int32(0),
+        diffusion_residual=jnp.float32(0.0),
+        unrealized_flow=jnp.float32(0.0),
+    )
+
+
+class LBEngine:
+    """Fused three-stage diffusion planner with static configuration.
+
+    Construction is cheap; the first ``plan`` call per problem shape pays
+    XLA compilation.  Instances are cached by :func:`get_engine`.
+    """
+
+    def __init__(
+        self,
+        *,
+        variant: str = "comm",          # "comm" (§III) | "coord" (§IV)
+        k: int = 4,
+        tol: float = 0.02,
+        max_iters: int = 512,
+        max_rounds: int = 64,
+        single_hop: bool = True,
+        step_fn: Optional[Callable] = None,
+    ):
+        if variant not in ("comm", "coord"):
+            raise ValueError(f"unknown variant {variant!r}")
+        self.variant = variant
+        self.k = int(k)
+        self.tol = float(tol)
+        self.max_iters = int(max_iters)
+        self.max_rounds = int(max_rounds)
+        self.single_hop = bool(single_hop)
+        self.step_fn = step_fn
+        self._jitted = jax.jit(self.plan_fn)
+
+    # ------------------------------------------------------- traced path --
+
+    def plan_fn(
+        self, problem: comm_graph.LBProblem
+    ) -> Tuple[jax.Array, PlanStats]:
+        """Neighbor selection → virtual balance → object selection, fused.
+
+        Pure function of the problem arrays; every intermediate keeps the
+        static (P, K) / (C,) padding, so the same trace serves every step
+        of a scanned replay."""
+        # -- stage 1: neighbor selection --------------------------------
+        if self.variant == "comm":
+            node_comm = comm_graph.node_comm_matrix(problem)
+            pref = ns.comm_preference(node_comm)
+        else:
+            assert problem.coords is not None, \
+                "coordinate variant needs coords"
+            cent = osel.centroids(
+                problem.coords, problem.assignment, problem.num_nodes
+            )
+            pref = ns.coordinate_preference(cent)
+        nres = ns.select_neighbors(pref, k=self.k, max_rounds=self.max_rounds)
+
+        # -- stage 2: virtual load balancing ----------------------------
+        nloads = comm_graph.node_loads(problem)
+        vres = vlb.virtual_balance(
+            nloads, nres.nbr_idx, nres.nbr_mask,
+            tol=self.tol, max_iters=self.max_iters,
+            single_hop=self.single_hop, step_fn=self.step_fn,
+        )
+
+        # -- stage 3: object selection ----------------------------------
+        sres = osel.select_objects(
+            problem, nres.nbr_idx, nres.nbr_mask, vres.flows,
+            metric="comm" if self.variant == "comm" else "coord",
+        )
+
+        stats = PlanStats(
+            protocol_rounds=nres.rounds.astype(jnp.int32),
+            mean_degree=jnp.mean(nres.degree.astype(jnp.float32)),
+            diffusion_iters=vres.iters.astype(jnp.int32),
+            diffusion_residual=vres.residual.astype(jnp.float32),
+            unrealized_flow=jnp.abs(sres.residual).sum().astype(jnp.float32),
+        )
+        return sres.assignment.astype(jnp.int32), stats
+
+    # -------------------------------------------------------- host path --
+
+    def plan(self, problem: comm_graph.LBProblem):
+        """Eager plan with wall-clock timing and the legacy info dict."""
+        from repro.core.api import LBPlan  # local import: api imports us
+
+        t0 = time.perf_counter()
+        assignment, stats = self._jitted(problem)
+        assignment = np.asarray(jax.device_get(assignment))
+        info = dict(
+            strategy=f"diff-{self.variant}",
+            k=self.k,
+            protocol_rounds=int(stats.protocol_rounds),
+            mean_degree=float(stats.mean_degree),
+            diffusion_iters=int(stats.diffusion_iters),
+            diffusion_residual=float(stats.diffusion_residual),
+            unrealized_flow=float(stats.unrealized_flow),
+            plan_seconds=time.perf_counter() - t0,
+        )
+        return LBPlan(assignment, info)
+
+
+@functools.lru_cache(maxsize=64)
+def get_engine(
+    variant: str = "comm",
+    k: int = 4,
+    tol: float = 0.02,
+    max_iters: int = 512,
+    max_rounds: int = 64,
+    single_hop: bool = True,
+    step_fn: Optional[Callable] = None,
+) -> LBEngine:
+    """Engine cache — one compiled planner per static configuration."""
+    return LBEngine(variant=variant, k=k, tol=tol, max_iters=max_iters,
+                    max_rounds=max_rounds, single_hop=single_hop,
+                    step_fn=step_fn)
+
+
+# ------------------------------------------------------ Strategy protocol --
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """A registered load-balancing strategy.
+
+    ``plan_fn(problem, **params) -> (assignment, PlanStats)``.  When
+    ``jittable`` the call is traceable for static ``params`` (usable under
+    ``jit`` / ``scan`` / ``cond``); otherwise it runs host-side NumPy and
+    may only be called eagerly.  ``defaults`` are merged under caller
+    params by :meth:`run` and by the scanned replay layers.
+    """
+
+    name: str
+    plan_fn: Callable[..., Tuple[jax.Array, PlanStats]]
+    jittable: bool = False
+    defaults: Mapping = dataclasses.field(default_factory=dict)
+
+    def params(self, **overrides) -> Dict:
+        return {**self.defaults, **overrides}
+
+    def bind(self, **overrides) -> Callable:
+        """Traceable closure ``problem -> (assignment, PlanStats)``."""
+        p = self.params(**overrides)
+        return lambda problem: self.plan_fn(problem, **p)
+
+    def run(self, problem: comm_graph.LBProblem, **overrides):
+        """Eager execution returning the legacy ``LBPlan``."""
+        from repro.core.api import LBPlan  # local import: api imports us
+
+        t0 = time.perf_counter()
+        params = self.params(**overrides)
+        assignment, stats = self.plan_fn(problem, **params)
+        assignment = np.asarray(jax.device_get(assignment))
+        info = dict(strategy=self.name,
+                    plan_seconds=time.perf_counter() - t0,
+                    **{k: v for k, v in params.items()
+                       if isinstance(v, (int, float, bool, str))})
+        if self.jittable and self.name.startswith("diff"):
+            info.update(
+                protocol_rounds=int(stats.protocol_rounds),
+                mean_degree=float(stats.mean_degree),
+                diffusion_iters=int(stats.diffusion_iters),
+                diffusion_residual=float(stats.diffusion_residual),
+                unrealized_flow=float(stats.unrealized_flow),
+            )
+        return LBPlan(assignment, info)
+
+
+_REGISTRY: Dict[str, Strategy] = {}
+
+
+def register(strategy: Strategy) -> Strategy:
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def registry() -> Mapping[str, Strategy]:
+    return dict(_REGISTRY)
+
+
+# ------------------------------------------------------ built-in strategies --
+
+
+def _diffusion_plan_fn(variant: str):
+    def plan_fn(problem, **params):
+        # the jitted entry point: eager callers (Strategy.run / STRATEGIES)
+        # get the cached compiled plan; traced callers (scan/cond) inline it
+        return get_engine(variant=variant, **params)._jitted(problem)
+    return plan_fn
+
+
+def _none_plan_fn(problem):
+    return problem.assignment.astype(jnp.int32), zero_stats()
+
+
+def _host(fn):
+    """Wrap a NumPy baseline as a Strategy plan_fn."""
+    def plan_fn(problem, **params):
+        return np.asarray(fn(problem, **params), np.int32), zero_stats()
+    return plan_fn
+
+
+register(Strategy("none", _none_plan_fn, jittable=True))
+register(Strategy("diff-comm", _diffusion_plan_fn("comm"), jittable=True))
+register(Strategy("diff-coord", _diffusion_plan_fn("coord"), jittable=True))
+register(Strategy("greedy", _host(baselines.greedy)))
+register(Strategy("greedy-refine", _host(baselines.greedy_refine)))
+register(Strategy("metis", _host(baselines.metis_like)))
+register(Strategy("parmetis", _host(baselines.parmetis_like)))

@@ -5,42 +5,73 @@
   (3) migration cost      — fraction of objects that moved;
   (4) strategy cost       — wall time of computing the mapping (recorded by
       the simulator, not here).
+
+``evaluate_device`` is the pure-jnp implementation (scan/jit safe — the
+scanned replay layers accumulate it per step on device); ``evaluate`` is
+the host dict view over the same math.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import comm_graph
+
+
+class StepMetrics(NamedTuple):
+    """Per-snapshot cost metrics as device scalars (f32)."""
+
+    max_avg_load: jax.Array
+    ext_int_comm: jax.Array
+    ext_bytes: jax.Array
+    int_bytes: jax.Array
+    pct_migrations: jax.Array
+    node_load_std: jax.Array
+    max_load: jax.Array
+    avg_load: jax.Array
+
+
+def evaluate_device(
+    problem: comm_graph.LBProblem,
+    assignment: Optional[jax.Array] = None,
+) -> StepMetrics:
+    """Traceable metric evaluation (usable inside jit / lax.scan)."""
+    cur = jnp.asarray(problem.assignment)
+    a = cur if assignment is None else jnp.asarray(assignment)
+    nl = jax.ops.segment_sum(jnp.asarray(problem.loads), a,
+                             num_segments=problem.num_nodes)
+    avg = nl.mean() + 1e-30
+
+    es = jnp.asarray(problem.edges_src)
+    ed = jnp.asarray(problem.edges_dst)
+    valid = es >= 0
+    src_n = a[jnp.where(valid, es, 0)]
+    dst_n = a[jnp.where(valid, ed, 0)]
+    w = jnp.where(valid, jnp.asarray(problem.edges_bytes), 0.0)
+    ext = jnp.where(src_n != dst_n, w, 0.0).sum()
+    internal = jnp.where(src_n == dst_n, w, 0.0).sum()
+
+    moved = jnp.mean((a != cur).astype(jnp.float32))
+    return StepMetrics(
+        max_avg_load=(nl.max() / avg).astype(jnp.float32),
+        ext_int_comm=(ext / (internal + 1e-30)).astype(jnp.float32),
+        ext_bytes=ext.astype(jnp.float32),
+        int_bytes=internal.astype(jnp.float32),
+        pct_migrations=moved,
+        node_load_std=(nl.std() / avg).astype(jnp.float32),
+        max_load=nl.max().astype(jnp.float32),
+        avg_load=avg.astype(jnp.float32),
+    )
 
 
 def evaluate(
     problem: comm_graph.LBProblem,
     assignment: Optional[jax.Array] = None,
 ) -> Dict[str, float]:
-    a = problem.assignment if assignment is None else assignment
-    nl = jax.ops.segment_sum(problem.loads, a, num_segments=problem.num_nodes)
-    nl = np.asarray(nl)
-    avg = nl.mean() + 1e-30
-
-    valid = np.asarray(problem.edges_src) >= 0
-    src_n = np.asarray(a)[np.asarray(problem.edges_src) * valid]
-    dst_n = np.asarray(a)[np.asarray(problem.edges_dst) * valid]
-    w = np.asarray(problem.edges_bytes) * valid
-    ext = w[src_n != dst_n].sum()
-    internal = w[src_n == dst_n].sum()
-
-    moved = float(np.mean(np.asarray(a) != np.asarray(problem.assignment)))
-    return dict(
-        max_avg_load=float(nl.max() / avg),
-        ext_int_comm=float(ext / (internal + 1e-30)),
-        ext_bytes=float(ext),
-        int_bytes=float(internal),
-        pct_migrations=moved,
-        node_load_std=float(nl.std() / avg),
-        max_load=float(nl.max()),
-        avg_load=float(avg),
-    )
+    """Host dict view of :func:`evaluate_device` (legacy interface)."""
+    if assignment is not None:
+        assignment = jnp.asarray(assignment)
+    m = jax.device_get(evaluate_device(problem, assignment))  # one transfer
+    return {k: float(v) for k, v in m._asdict().items()}

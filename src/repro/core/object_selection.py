@@ -82,6 +82,11 @@ def select_objects(
     obj_ids = jnp.arange(N)
     node_ids = jnp.arange(P)
 
+    valid_e = problem.edges_src >= 0
+    e_src = jnp.where(valid_e, problem.edges_src, 0)
+    e_dst = jnp.where(valid_e, problem.edges_dst, 0)
+    e_w = jnp.where(valid_e, problem.edges_bytes, 0.0)
+
     for _ in range(K):
         # Phase slot: each node's largest remaining budget neighbor.
         slot = jnp.argmax(send, axis=1)                         # (P,)
@@ -90,8 +95,20 @@ def select_objects(
 
         # Ordering metric, per the variant.
         if metric == "comm":
-            ob = comm_graph.object_node_bytes(problem, nbr_idx, assignment)
-            score = ob[obj_ids, slot[assignment]]               # (N,)
+            # Bytes each object exchanges with its node's phase target —
+            # the active column of comm_graph.object_node_bytes, computed
+            # directly (one segment-sum over E per direction instead of
+            # the full (N, K) table; the "peers update their patterns"
+            # rule is preserved because this reruns on the phase's
+            # current assignment).
+            tgt_obj = target[assignment]                        # (N,)
+
+            def dir_score(a, b):
+                hit = (assignment[b] == tgt_obj[a]) & (tgt_obj[a] >= 0)
+                return jax.ops.segment_sum(
+                    jnp.where(hit, e_w, 0.0), a, num_segments=N)
+
+            score = dir_score(e_src, e_dst) + dir_score(e_dst, e_src)
         elif metric == "coord":
             assert problem.coords is not None, "coordinate variant needs coords"
             cent = _centroids(problem.coords, assignment, P)

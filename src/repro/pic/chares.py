@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core import comm_graph
 
 
@@ -27,6 +29,16 @@ def chare_of(x, y, L: int, cx: int, cy: int):
     w, h = chare_shape(L, cx, cy)
     ci = np.minimum(np.asarray(x, np.float64) // w, cx - 1).astype(np.int32)
     cj = np.minimum(np.asarray(y, np.float64) // h, cy - 1).astype(np.int32)
+    return ci * cy + cj
+
+
+def chare_of_device(x, y, L: int, cx: int, cy: int):
+    """jnp ``chare_of`` — traceable, keeps particles device-resident."""
+    w, h = chare_shape(L, cx, cy)
+    ci = jnp.minimum(jnp.floor_divide(x, jnp.float32(w)),
+                     cx - 1).astype(jnp.int32)
+    cj = jnp.minimum(jnp.floor_divide(y, jnp.float32(h)),
+                     cy - 1).astype(jnp.int32)
     return ci * cy + cj
 
 
@@ -57,37 +69,58 @@ def chare_coords(cx: int, cy: int, L: int):
     ).astype(np.float32)
 
 
+def edge_structure(cx: int, cy: int) -> np.ndarray:
+    """(2·cx·cy, 2) static east+north edge pairs of the chare torus."""
+    n = cx * cy
+    ci = np.arange(n) // cy
+    cj = np.arange(n) % cy
+    east = ((ci + 1) % cx) * cy + cj
+    north = ci * cy + (cj + 1) % cy
+    return np.concatenate(
+        [np.stack([np.arange(n), east], 1), np.stack([np.arange(n), north], 1)]
+    ).astype(np.int32)
+
+
+def edge_bytes_device(
+    chare_loads,                 # (cx*cy,) — np or traced jnp
+    *,
+    L: int, cx: int, cy: int, k: int, vy0: float, lb_period: int,
+    bytes_per_particle: float = 48.0,
+):
+    """(2·cx·cy,) expected handoff bytes for :func:`edge_structure` order.
+
+    Traceable: pure jnp in the loads; all geometry factors are static."""
+    w, h = chare_shape(L, cx, cy)
+    speed_x = 2 * k + 1
+    frac_x = min(1.0, speed_x * lb_period / w)
+    frac_y = min(1.0, abs(vy0) * lb_period / h)
+    eps = 1e-3 * bytes_per_particle  # stencil adjacency floor
+    loads = jnp.asarray(chare_loads, jnp.float32)
+    we = loads * frac_x * bytes_per_particle + eps
+    wn = loads * frac_y * bytes_per_particle + eps
+    return jnp.concatenate([we, wn]).astype(jnp.float32)
+
+
 def build_problem(
-    chare_loads: np.ndarray,    # (cx*cy,) particle counts (or measured cost)
-    assignment: np.ndarray,     # (cx*cy,) chare→PE
+    chare_loads,                # (cx*cy,) particle counts (or measured cost)
+    assignment,                 # (cx*cy,) chare→PE
     *,
     L: int, cx: int, cy: int, num_pes: int,
     k: int, vy0: float, lb_period: int,
     bytes_per_particle: float = 48.0,
 ) -> comm_graph.LBProblem:
-    """LBProblem with chares as objects and particle-flux comm edges."""
-    n = cx * cy
-    w, h = chare_shape(L, cx, cy)
-    ci = np.arange(n) // cy
-    cj = np.arange(n) % cy
-    east = ((ci + 1) % cx) * cy + cj
-    north = ci * cy + (cj + 1) % cy
+    """LBProblem with chares as objects and particle-flux comm edges.
 
-    speed_x = 2 * k + 1
-    frac_x = min(1.0, speed_x * lb_period / w)
-    frac_y = min(1.0, abs(vy0) * lb_period / h)
-    eps = 1e-3 * bytes_per_particle  # stencil adjacency floor
-    we = chare_loads * frac_x * bytes_per_particle + eps
-    wn = chare_loads * frac_y * bytes_per_particle + eps
-
-    edges = np.concatenate(
-        [np.stack([np.arange(n), east], 1), np.stack([np.arange(n), north], 1)]
-    )
-    ebytes = np.concatenate([we, wn]).astype(np.float32)
+    Trace-safe: ``chare_loads`` / ``assignment`` may be traced jnp arrays
+    (the scanned PIC driver rebuilds the problem on device every LB step);
+    the edge structure and coordinates are static."""
+    ebytes = edge_bytes_device(
+        chare_loads, L=L, cx=cx, cy=cy, k=k, vy0=vy0, lb_period=lb_period,
+        bytes_per_particle=bytes_per_particle)
     return comm_graph.make_problem(
-        loads=np.maximum(chare_loads, 1e-3),
+        loads=jnp.maximum(jnp.asarray(chare_loads, jnp.float32), 1e-3),
         assignment=assignment,
-        edges=edges,
+        edges=edge_structure(cx, cy),
         edge_bytes=ebytes,
         num_nodes=num_pes,
         coords=chare_coords(cx, cy, L),

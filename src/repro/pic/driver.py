@@ -12,17 +12,31 @@ strategy.  Records the paper's metrics per step:
     strong-scaling study (Fig 5/6) — see ``CostModel``; wall-clock
     multi-node timing needs real nodes, the model is calibrated per-term
     and reported as such in EXPERIMENTS.md.
+
+Two execution paths:
+
+  * **scanned** (default for jittable strategies) — particles, loads and
+    the assignment stay device-resident for the whole run: one ``step_fn``
+    is scanned in chunks of ``scan_chunk`` steps, per-step metrics
+    accumulate in the scan outputs, and the host sees data only at chunk
+    boundaries.  LB planning runs inside the scan via ``lax.cond`` on the
+    step index (the fused ``core.engine`` planner).
+  * **host loop** — the legacy eager path, used for NumPy-only baseline
+    strategies (greedy, metis, ...) or when ``cfg.scan=False``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import api as core_api
+from repro.core import engine as core_engine
 from repro.kernels.histogram.ops import histogram
 from repro.kernels.pic_push.ops import pic_push
 from repro.pic import chares as ch
@@ -49,6 +63,8 @@ class PICConfig:
     bytes_per_particle: float = 48.0
     seed: int = 0
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
+    scan: Optional[bool] = None        # None = auto (scan iff jittable)
+    scan_chunk: int = 50               # steps per device-resident chunk
 
 
 @dataclasses.dataclass
@@ -87,6 +103,8 @@ class PICResult:
     step_seconds: np.ndarray   # (T,) modeled time per step
     final_x: np.ndarray
     final_y: np.ndarray
+    scanned: bool = False
+    wall_seconds: float = 0.0  # end-to-end wall time of the replay loop
 
     def summary(self) -> Dict[str, float]:
         return dict(
@@ -99,6 +117,161 @@ class PICResult:
 
 
 def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
+    use_scan = cfg.scan
+    if use_scan and not core_engine.get_strategy(cfg.strategy).jittable:
+        raise ValueError(
+            f"strategy {cfg.strategy!r} is not jittable; the scanned PIC "
+            "driver needs a traceable plan_fn (use scan=False/None or a "
+            "diff-* / none strategy)")
+    if use_scan is None:
+        try:
+            use_scan = core_engine.get_strategy(cfg.strategy).jittable
+        except KeyError:
+            use_scan = False
+    if use_scan:
+        return _run_scanned(cfg, cost)
+    return _run_host(cfg, cost)
+
+
+# ------------------------------------------------------------ scanned path --
+
+
+@functools.lru_cache(maxsize=32)
+def _chunk_runner(
+    L: int, cx: int, cy: int, num_pes: int, k: int, vy0: float,
+    lb_every: int, strategy: str, kw_items: tuple, bpp: float,
+    use_kernel: Optional[bool], chunk_len: int,
+):
+    """Compiled ``lax.scan`` over ``chunk_len`` device-resident PIC steps."""
+    n_chares = cx * cy
+    grid_q = jnp.asarray(alternating_grid(L))
+    lb_on = strategy != "none" and lb_every > 0
+    plan = (core_engine.get_strategy(strategy).bind(**dict(kw_items))
+            if lb_on else None)
+
+    def step(carry, t):
+        x, y, vx, vy, q, chare_id, assignment = carry
+        xn, yn, vxn, vyn = pic_push(grid_q, x, y, vx, vy, q, L=L,
+                                    use_kernel=use_kernel)
+        new_chare = ch.chare_of_device(xn, yn, L, cx, cy)
+        # particle handoffs: chare changed → bytes move; PE boundary → ext
+        moved = new_chare != chare_id
+        src_pe = assignment[chare_id]
+        dst_pe = assignment[new_chare]
+        ext = (moved & (src_pe != dst_pe)).sum().astype(jnp.float32) * bpp
+        intra = (moved & (src_pe == dst_pe)).sum().astype(jnp.float32) * bpp
+
+        loads = histogram(new_chare, jnp.ones_like(xn), C=n_chares,
+                          use_kernel=use_kernel)
+        pe_loads = jax.ops.segment_sum(loads, assignment,
+                                       num_segments=num_pes)
+        pe_max = pe_loads.max()
+        ma = pe_max / (pe_loads.mean() + 1e-30)
+
+        if lb_on:
+            do = (t > 0) & (t % lb_every == 0)
+
+            def do_plan(args):
+                loads_, assignment_ = args
+                problem = ch.build_problem(
+                    loads_, assignment_, L=L, cx=cx, cy=cy,
+                    num_pes=num_pes, k=k, vy0=vy0, lb_period=lb_every,
+                    bytes_per_particle=bpp)
+                a2, _stats = plan(problem)
+                return a2
+
+            new_assignment = jax.lax.cond(
+                do, do_plan, lambda a: a[1].astype(jnp.int32),
+                (loads, assignment))
+            delta = new_assignment != assignment
+            migf = jnp.where(
+                do, jnp.mean(delta.astype(jnp.float32)), 0.0)
+            migb = jnp.where(
+                do, jnp.where(delta, loads, 0.0).sum() * bpp, 0.0)
+            assignment = new_assignment
+        else:
+            migf = jnp.float32(0.0)
+            migb = jnp.float32(0.0)
+
+        ys = (ma, pe_max, ext, intra, migf, migb)
+        return (xn, yn, vxn, vyn, q, new_chare, assignment), ys
+
+    def run_chunk(carry, ts):
+        return jax.lax.scan(step, carry, ts)
+
+    return jax.jit(run_chunk)
+
+
+def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
+    p = initialize(cfg.mode, cfg.L, cfg.n_particles, k=cfg.k, vy0=cfg.vy0,
+                   rho=cfg.rho, seed=cfg.seed)
+    x, y = jnp.asarray(p.x), jnp.asarray(p.y)
+    vx, vy = jnp.asarray(p.vx), jnp.asarray(p.vy)
+    q = jnp.asarray(p.q)
+    assignment = jnp.asarray(
+        ch.initial_mapping(cfg.cx, cfg.cy, cfg.num_pes, cfg.mapping),
+        jnp.int32)
+    chare_id = ch.chare_of_device(x, y, cfg.L, cfg.cx, cfg.cy)
+    n_chares = cfg.cx * cfg.cy
+
+    kw_items = tuple(sorted((cfg.strategy_kwargs or {}).items()))
+    lb_on = cfg.strategy != "none" and cfg.lb_every > 0
+
+    # LB planning cost for the CostModel: the scanned path fuses planning
+    # into the step executable, so per-call wall time is measured once on
+    # the initial snapshot (post-compile) and charged at every LB step —
+    # matching the legacy host path's per-call perf_counter semantics.
+    lb_est = 0.0
+    if lb_on:
+        loads0 = histogram(chare_id, jnp.ones_like(x), C=n_chares,
+                           use_kernel=cfg.use_kernel)
+        problem0 = ch.build_problem(
+            loads0, assignment, L=cfg.L, cx=cfg.cx, cy=cfg.cy,
+            num_pes=cfg.num_pes, k=cfg.k, vy0=cfg.vy0,
+            lb_period=cfg.lb_every,
+            bytes_per_particle=cfg.bytes_per_particle)
+        strat = core_engine.get_strategy(cfg.strategy)
+        strat.run(problem0, **dict(kw_items))          # warm the compile
+        lb_est = strat.run(problem0, **dict(kw_items)).info["plan_seconds"]
+
+    T = cfg.steps
+    chunk = max(1, min(cfg.scan_chunk, T))
+    carry = (x, y, vx, vy, q, chare_id, assignment)
+    ys_host = []
+    t_start = time.perf_counter()
+    for s in range(0, T, chunk):
+        n = min(chunk, T - s)
+        runner = _chunk_runner(
+            cfg.L, cfg.cx, cfg.cy, cfg.num_pes, cfg.k, cfg.vy0,
+            cfg.lb_every, cfg.strategy, kw_items, cfg.bytes_per_particle,
+            cfg.use_kernel, n)
+        carry, ys = runner(carry, jnp.arange(s, s + n))
+        ys_host.append(jax.device_get(ys))   # host transfer per chunk only
+    wall = time.perf_counter() - t_start
+
+    ma, pe_max, ext_b, int_b, mig, mig_bytes = (
+        np.concatenate([np.asarray(c[i], np.float64) for c in ys_host])
+        for i in range(6))
+
+    lb_steps = np.array([lb_on and t > 0 and t % cfg.lb_every == 0
+                         for t in range(T)])
+    lb_s_t = np.where(lb_steps, lb_est, 0.0)
+    step_s = (
+        pe_max * cost.t_particle
+        + (ext_b + mig_bytes) * cost.t_byte
+        + np.array([cost.lb_seconds(s_, cfg.strategy, cfg.num_pes)
+                    for s_ in lb_s_t]) / max(cfg.lb_every, 1)
+    )
+    fx, fy = np.asarray(carry[0]), np.asarray(carry[1])
+    return PICResult(ma, ext_b, int_b, mig, mig_bytes,
+                     float(lb_est * lb_steps.sum()), step_s, fx, fy,
+                     scanned=True, wall_seconds=wall)
+
+
+# --------------------------------------------------------------- host loop --
+
+
+def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
     grid_q = jnp.asarray(alternating_grid(cfg.L))
     p = initialize(cfg.mode, cfg.L, cfg.n_particles, k=cfg.k, vy0=cfg.vy0,
                    rho=cfg.rho, seed=cfg.seed)
@@ -119,6 +292,7 @@ def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
     step_s = np.zeros(T)
     lb_seconds = 0.0
 
+    t_start = time.perf_counter()
     for t in range(T):
         xn, yn, vx, vy = pic_push(grid_q, x, y, vx, vy, q, L=cfg.L,
                                   use_kernel=cfg.use_kernel)
@@ -174,4 +348,5 @@ def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
         )
 
     return PICResult(ma, ext_b, int_b, mig, mig_bytes, lb_seconds, step_s,
-                     np.asarray(x), np.asarray(y))
+                     np.asarray(x), np.asarray(y), scanned=False,
+                     wall_seconds=time.perf_counter() - t_start)

@@ -70,7 +70,15 @@ class ServeEngine:
             def put(c, o):
                 return c.at[slot].set(o[0])
 
-            cache = jax.tree.map(put, cache, one)
+            def put_stacked(c, o):
+                # scanned unit caches carry a leading group dim (G, B, S, ...)
+                return c.at[:, slot].set(o[:, 0])
+
+            cache = dict(
+                unit=jax.tree.map(put_stacked, cache["unit"], one["unit"]),
+                prefix=jax.tree.map(put, cache["prefix"], one["prefix"]),
+                suffix=jax.tree.map(put, cache["suffix"], one["suffix"]),
+            )
             return logits[:, -1], cache
 
         @jax.jit

@@ -1,0 +1,243 @@
+"""Scenario registry: named time-evolving workloads for the replay layers.
+
+A scenario bundles an initial :class:`LBProblem` with a *jit-traceable*
+``evolve(problem, t) -> problem`` so the whole replay can run as one
+``jax.lax.scan`` (sim/simulator.py).  Every evolve here is a pure function
+of the step index with static shapes — loads (and edge bytes, where they
+track loads) are recomputed, never accumulated, so a scanned replay and a
+host-loop replay see bit-identical workloads.
+
+Registered workloads:
+
+  stencil-wave      — load hotspot orbiting a 2D stencil (the paper's §V
+                      simulator setting; examples/stencil_lb_demo.py);
+  pic-geometric     — chare-level PIC PRK proxy: the geometric particle
+                      column profile advects east at (2k+1) cells/step,
+                      edge bytes follow the loads (paper §VI);
+  adversarial-hotspot — a hotspot that *teleports* across the domain every
+                      ``dwell`` steps: worst case for a diffusive balancer,
+                      which can only move load one neighbor hop per round;
+  bimodal-churn     — bimodal object loads (few heavy, many light) whose
+                      heavy-set membership churns over time (Boulmier et
+                      al.'s unpredictable-imbalance regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_graph
+from repro.pic import chares
+from repro.sim import stencil
+
+EvolveFn = Callable[[comm_graph.LBProblem, object], comm_graph.LBProblem]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named workload: ``factory(**kw) -> (problem, evolve)``."""
+
+    name: str
+    description: str
+    factory: Callable[..., Tuple[comm_graph.LBProblem, EvolveFn]]
+    defaults: Mapping = dataclasses.field(default_factory=dict)
+    # PICConfig field overrides for the particle-level driver benches
+    # (fig4/fig5); None for purely simulator-level scenarios.
+    pic_config: Optional[Mapping] = None
+
+    def instantiate(self, **overrides):
+        """(problem, evolve) for this workload.
+
+        Memoized on the parameter set: re-instantiating the same scenario
+        returns the *same* evolve object, so the replay layers' compiled-
+        runner caches (keyed on evolve identity) hit across calls —
+        parameter sweeps pay tracing once per distinct configuration."""
+        kw = {**self.defaults, **overrides}
+        try:
+            key = (self.name, tuple(sorted(kw.items())))
+            hash(key)
+        except TypeError:
+            key = None  # unhashable override: fall through uncached
+        if key is not None and key in _INSTANCE_MEMO:
+            return _INSTANCE_MEMO[key]
+        problem, evolve = self.factory(**kw)
+        evolve.jittable = True  # every registered evolve is scan-safe
+        if key is not None:
+            _INSTANCE_MEMO[key] = (problem, evolve)
+        return problem, evolve
+
+
+_INSTANCE_MEMO: Dict = {}
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(s: Scenario) -> Scenario:
+    SCENARIOS[s.name] = s
+    return s
+
+
+def get(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
+        ) from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(SCENARIOS))
+
+
+# ------------------------------------------------------------ stencil wave --
+
+
+def _stencil_wave(*, grid: int = 32, num_nodes: int = 16,
+                  mapping: str = "tiled", period: int = 60,
+                  amp: float = 8.0):
+    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping)
+    coords = jnp.asarray(problem.coords)
+    base = jnp.ones(grid * grid, jnp.float32)
+    sigma2 = jnp.float32(2.0 * (grid / 8.0) ** 2)
+
+    def evolve(p: comm_graph.LBProblem, t) -> comm_graph.LBProblem:
+        angle = 2.0 * jnp.pi * t / period
+        cx = grid / 2.0 + grid / 3.0 * jnp.cos(angle)
+        cy = grid / 2.0 + grid / 3.0 * jnp.sin(angle)
+        d2 = (coords[:, 0] - cx) ** 2 + (coords[:, 1] - cy) ** 2
+        loads = base * (1.0 + amp * jnp.exp(-d2 / sigma2))
+        return dataclasses.replace(p, loads=loads.astype(jnp.float32))
+
+    return problem, evolve
+
+
+register(Scenario(
+    "stencil-wave",
+    "load hotspot orbiting a 2D stencil grid (paper §V)",
+    _stencil_wave,
+    defaults=dict(grid=32, num_nodes=16, mapping="tiled", period=60,
+                  amp=8.0),
+))
+
+
+# ----------------------------------------------------------- PIC geometric --
+
+
+def _pic_geometric(*, L: int = 1000, cx: int = 12, cy: int = 12,
+                   num_pes: int = 4, k: int = 2, vy0: float = 1.0,
+                   rho: float = 0.9, lb_period: int = 10,
+                   n_particles: float = 100_000.0,
+                   bytes_per_particle: float = 48.0,
+                   mapping: str = "striped"):
+    n = cx * cy
+    w = L / cx
+    # chare-column center cell, one per chare (loads are uniform along y)
+    col = (jnp.arange(n, dtype=jnp.float32) // cy + 0.5) * w
+    speed = jnp.float32(2 * k + 1)
+    assignment = jnp.asarray(chares.initial_mapping(cx, cy, num_pes, mapping))
+
+    def loads_at(t):
+        # geometric column density, advected east with wraparound
+        shifted = jnp.mod(col - speed * t, L)
+        dens = jnp.power(jnp.float32(rho), shifted)
+        return (dens / dens.sum() * n_particles).astype(jnp.float32)
+
+    def evolve(p: comm_graph.LBProblem, t) -> comm_graph.LBProblem:
+        loads = loads_at(t)
+        eb = chares.edge_bytes_device(
+            loads, L=L, cx=cx, cy=cy, k=k, vy0=vy0, lb_period=lb_period,
+            bytes_per_particle=bytes_per_particle)
+        return dataclasses.replace(
+            p, loads=jnp.maximum(loads, 1e-3), edges_bytes=eb)
+
+    problem = chares.build_problem(
+        np.asarray(loads_at(0)), np.asarray(assignment), L=L, cx=cx, cy=cy,
+        num_pes=num_pes, k=k, vy0=vy0, lb_period=lb_period,
+        bytes_per_particle=bytes_per_particle)
+    return problem, evolve
+
+
+register(Scenario(
+    "pic-geometric",
+    "chare-level PIC PRK proxy: geometric column profile drifting east "
+    "(paper §VI)",
+    _pic_geometric,
+    defaults=dict(L=1000, cx=12, cy=12, num_pes=4, k=2, vy0=1.0, rho=0.9,
+                  lb_period=10, n_particles=100_000.0, mapping="striped"),
+    pic_config=dict(mode="GEOMETRIC", L=1000, cx=12, cy=12, num_pes=4,
+                    k=2, rho=0.9, mapping="striped", lb_every=10),
+))
+
+
+# ---------------------------------------------------- adversarial hotspot --
+
+
+def _adversarial_hotspot(*, grid: int = 32, num_nodes: int = 16,
+                         mapping: str = "tiled", dwell: int = 8,
+                         amp: float = 12.0, n_sites: int = 16,
+                         seed: int = 0):
+    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping)
+    coords = jnp.asarray(problem.coords)
+    rng = np.random.default_rng(seed)
+    # teleport sites sampled once: far-apart corners-and-interior points
+    sites = jnp.asarray(
+        rng.uniform(0, grid, size=(n_sites, 2)).astype(np.float32))
+    sigma2 = jnp.float32(2.0 * (grid / 10.0) ** 2)
+
+    def evolve(p: comm_graph.LBProblem, t) -> comm_graph.LBProblem:
+        idx = jnp.mod(t // dwell, n_sites)
+        c = sites[idx]
+        d2 = ((coords - c[None, :]) ** 2).sum(axis=1)
+        loads = 1.0 + amp * jnp.exp(-d2 / sigma2)
+        return dataclasses.replace(p, loads=loads.astype(jnp.float32))
+
+    return problem, evolve
+
+
+register(Scenario(
+    "adversarial-hotspot",
+    "hotspot teleporting across the domain every `dwell` steps — worst "
+    "case for one-hop diffusive migration",
+    _adversarial_hotspot,
+    defaults=dict(grid=32, num_nodes=16, mapping="tiled", dwell=8,
+                  amp=12.0, n_sites=16, seed=0),
+))
+
+
+# --------------------------------------------------------- bimodal churn --
+
+
+def _bimodal_churn(*, grid: int = 32, num_nodes: int = 16,
+                   mapping: str = "tiled", heavy_frac: float = 0.1,
+                   heavy_load: float = 20.0, churn_every: int = 5,
+                   stride: int = 7919, seed: int = 0):
+    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping)
+    N = grid * grid
+    rng = np.random.default_rng(seed)
+    perm = jnp.asarray(rng.permutation(N).astype(np.int32))
+    heavy_count = jnp.int32(max(1, int(heavy_frac * N)))
+
+    def evolve(p: comm_graph.LBProblem, t) -> comm_graph.LBProblem:
+        phase = (jnp.asarray(t) // churn_every).astype(jnp.int32)
+        # deterministic churn: rotate the permutation ranks each phase
+        rank = jnp.mod(perm + phase * stride, N)
+        heavy = rank < heavy_count
+        loads = jnp.where(heavy, heavy_load, 1.0)
+        return dataclasses.replace(p, loads=loads.astype(jnp.float32))
+
+    return problem, evolve
+
+
+register(Scenario(
+    "bimodal-churn",
+    "bimodal loads whose heavy-set membership churns every few steps "
+    "(unpredictable imbalance)",
+    _bimodal_churn,
+    defaults=dict(grid=32, num_nodes=16, mapping="tiled", heavy_frac=0.1,
+                  heavy_load=20.0, churn_every=5, stride=7919, seed=0),
+))

@@ -5,15 +5,31 @@ Charm++ application and replays strategies at any scale on one process; ours
 does the same for ``LBProblem`` instances.  ``compare`` runs a set of
 strategies on one snapshot; ``run_series`` replays a time-evolving workload
 with periodic rebalancing (used by the PIC driver and Fig 4/5 benchmarks).
+
+``run_series`` has two execution paths:
+
+  * **scanned** — when the strategy is jittable (``engine.Strategy``) and
+    ``evolve`` is scan-safe (scenarios from sim/scenarios.py mark theirs
+    with ``evolve.jittable = True``), the whole replay compiles to a single
+    ``jax.lax.scan``: evolve + ``lax.cond``-gated planning + device-side
+    metrics per step, with exactly one host transfer at the end.  Compiled
+    runners are cached, so repeated replays (parameter sweeps, many
+    scenarios) pay tracing once.
+  * **host loop** — the legacy eager path, kept for the NumPy baselines
+    (greedy, metis, ...) and for host-side ``evolve`` callables.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, comm_graph, metrics
+from repro.core import api, comm_graph, engine, metrics
 
 
 @dataclasses.dataclass
@@ -34,7 +50,6 @@ def compare(
     rows = []
     for name in strategies:
         plan = api.run_strategy(name, problem, **strategy_kwargs.get(name, {}))
-        import jax.numpy as jnp
         after = metrics.evaluate(problem, jnp.asarray(plan.assignment))
         rows.append(CompareRow(name, before, after, plan.info))
     return rows
@@ -66,7 +81,10 @@ class SeriesResult:
     max_avg: np.ndarray        # (T,) per step
     ext_int: np.ndarray        # (T,)
     migrations: np.ndarray     # (T,) fraction moved at that step (0 if no LB)
-    plan_seconds: float
+    plan_seconds: float        # host path: cumulative planning wall time;
+                               # scanned path: wall time of the whole replay
+    scanned: bool = False
+    wall_seconds: float = 0.0  # total replay wall time (both paths)
 
 
 def run_series(
@@ -77,14 +95,43 @@ def run_series(
     lb_every: int,
     strategy: str = "diff-comm",
     strategy_kwargs: Optional[Dict] = None,
+    scan: Optional[bool] = None,
 ) -> SeriesResult:
     """Replay ``steps`` of a workload, rebalancing every ``lb_every`` steps.
 
     ``evolve(problem, t)`` advances loads/comm one application step while
     preserving the current assignment (the simulator's stand-in for the
-    application's own dynamics).
-    """
+    application's own dynamics).  ``scan=None`` auto-selects the scanned
+    path when both the strategy and ``evolve`` are jit-traceable."""
     strategy_kwargs = strategy_kwargs or {}
+    if scan:
+        strat = engine.get_strategy(strategy)
+        if not strat.jittable:
+            raise ValueError(
+                f"strategy {strategy!r} is not jittable; the scanned replay "
+                "needs a traceable plan_fn (use scan=False or a diff-* / "
+                "none strategy)")
+    if scan is None:
+        try:
+            jittable = engine.get_strategy(strategy).jittable
+        except KeyError:
+            jittable = False
+        scan = jittable and getattr(evolve, "jittable", False)
+    if scan:
+        return _run_series_scanned(
+            initial, evolve, steps=steps, lb_every=lb_every,
+            strategy=strategy, strategy_kwargs=strategy_kwargs)
+    return _run_series_host(
+        initial, evolve, steps=steps, lb_every=lb_every,
+        strategy=strategy, strategy_kwargs=strategy_kwargs)
+
+
+# ------------------------------------------------------------- host loop --
+
+
+def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
+                     strategy_kwargs) -> SeriesResult:
+    t_start = time.perf_counter()
     problem = initial
     ma, ei, mig = [], [], []
     plan_s = 0.0
@@ -95,7 +142,7 @@ def run_series(
             moved = float(
                 np.mean(plan.assignment != np.asarray(problem.assignment))
             )
-            problem = problem.with_assignment(plan.assignment)
+            problem = problem.with_assignment(jnp.asarray(plan.assignment))
             plan_s += plan.info.get("plan_seconds", 0.0)
             mig.append(moved)
         else:
@@ -103,4 +150,84 @@ def run_series(
         m = metrics.evaluate(problem)
         ma.append(m["max_avg_load"])
         ei.append(m["ext_int_comm"])
-    return SeriesResult(np.array(ma), np.array(ei), np.array(mig), plan_s)
+    return SeriesResult(np.array(ma), np.array(ei), np.array(mig), plan_s,
+                        scanned=False,
+                        wall_seconds=time.perf_counter() - t_start)
+
+
+# ---------------------------------------------------------- scanned path --
+
+
+@functools.lru_cache(maxsize=64)
+def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
+                    kw_items: tuple):
+    """Compile-once scan over the whole replay.
+
+    Cache key: the evolve closure (identity), the static replay shape, and
+    the strategy binding — re-running the same scenario/strategy reuses
+    the compiled executable."""
+    strat = engine.get_strategy(strategy)
+    plan = strat.bind(**dict(kw_items))
+    do_lb_at_all = strategy != "none" and lb_every > 0
+
+    def step(problem, t):
+        problem = evolve(problem, t)
+        prev = problem.assignment
+        if do_lb_at_all:
+            do = (t > 0) & (t % lb_every == 0)
+            new_assignment, _stats = jax.lax.cond(
+                do,
+                plan,
+                lambda p: (p.assignment.astype(jnp.int32),
+                           engine.zero_stats()),
+                problem,
+            )
+            moved = jnp.where(
+                do, jnp.mean((new_assignment != prev).astype(jnp.float32)),
+                0.0)
+            problem = problem.with_assignment(new_assignment)
+        else:
+            moved = jnp.float32(0.0)
+        m = metrics.evaluate_device(problem)
+        return problem, (m.max_avg_load, m.ext_int_comm, moved)
+
+    def run(problem):
+        return jax.lax.scan(step, problem, jnp.arange(steps))
+
+    return jax.jit(run)
+
+
+def _canonical(problem: comm_graph.LBProblem) -> comm_graph.LBProblem:
+    """Device arrays with the carry dtypes the scan expects."""
+    return dataclasses.replace(
+        problem,
+        loads=jnp.asarray(problem.loads, jnp.float32),
+        assignment=jnp.asarray(problem.assignment, jnp.int32),
+        edges_src=jnp.asarray(problem.edges_src, jnp.int32),
+        edges_dst=jnp.asarray(problem.edges_dst, jnp.int32),
+        edges_bytes=jnp.asarray(problem.edges_bytes, jnp.float32),
+        coords=None if problem.coords is None
+        else jnp.asarray(problem.coords, jnp.float32),
+    )
+
+
+def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,
+                        strategy_kwargs) -> SeriesResult:
+    runner = _scanned_runner(
+        evolve, steps, lb_every, strategy,
+        tuple(sorted(strategy_kwargs.items())))
+    t_start = time.perf_counter()
+    try:
+        _final, (ma, ei, mig) = runner(_canonical(initial))
+    except jax.errors.TracerArrayConversionError as e:
+        # scan=True forced with a host-NumPy evolve: surface the cause
+        # instead of the opaque tracer leak from inside lax.scan
+        raise ValueError(
+            "the evolve callable is not jit-traceable (it converts traced "
+            "arrays to NumPy); use scan=False or a pure-jnp evolve — "
+            "scenarios from sim/scenarios.py are scan-safe") from e
+    ma, ei, mig = jax.device_get((ma, ei, mig))
+    wall = time.perf_counter() - t_start
+    return SeriesResult(np.asarray(ma, np.float64), np.asarray(ei, np.float64),
+                        np.asarray(mig, np.float64), wall, scanned=True,
+                        wall_seconds=wall)

@@ -12,6 +12,12 @@ def _compile(fn, *args):
     return jax.jit(fn).lower(*args).compile()
 
 
+def _cost(c):
+    """XLA cost analysis dict (older jax returns a per-computation list)."""
+    ca = c.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_dot_flops_match_xla_on_scanfree():
     def f(x, w):
         return jnp.tanh(x @ w) @ w
@@ -20,7 +26,7 @@ def test_dot_flops_match_xla_on_scanfree():
     w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
     c = _compile(f, x, w)
     got = hlo.analyze(c.as_text())
-    xla = c.cost_analysis()
+    xla = _cost(c)
     assert got["flops"] == pytest.approx(float(xla["flops"]), rel=1e-6)
 
 
@@ -60,7 +66,7 @@ def test_traffic_close_to_xla_bytes_on_scanfree():
     x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
     c = _compile(f, x, x)
     got = hlo.analyze(c.as_text())
-    xla = float(c.cost_analysis()["bytes accessed"])
+    xla = float(_cost(c)["bytes accessed"])
     assert got["traffic"] == pytest.approx(xla, rel=0.5)
 
 

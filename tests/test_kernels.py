@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.virtual_lb import reference_sweep, reverse_slots
 from repro.kernels.diffusion.kernel import diffusion_sweep_pallas

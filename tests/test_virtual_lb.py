@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core import virtual_lb as vlb
 from tests.conftest import ring_neighbors
@@ -81,6 +81,46 @@ def test_converges_on_complete_graph():
     res = _balance(loads, nbr, mask, single_hop=False, tol=0.01)
     x = np.asarray(res.target_loads)
     assert x.max() / x.mean() < 1.1
+
+
+def test_reverse_slots_ring_matches_bruteforce():
+    P = 10
+    nbr, mask = ring_neighbors(P, hops=2)
+    rev = np.asarray(vlb.reverse_slots(jnp.asarray(nbr), jnp.asarray(mask)))
+    for i in range(P):
+        for k in range(nbr.shape[1]):
+            j = nbr[i, k]
+            assert nbr[j, rev[i, k]] == i
+
+
+def test_reverse_slots_padded_rows_and_degree_one():
+    """Degree-1 nodes with padded slots: defined entries invert the table,
+    padded entries are 0 (masked out by every caller)."""
+    # nodes 0 and 1 are each other's only neighbor; node 2 is isolated
+    nbr = jnp.asarray(np.array([[1, -1], [0, -1], [-1, -1]], np.int32))
+    mask = jnp.asarray(np.array([[True, False], [True, False],
+                                 [False, False]]))
+    rev = np.asarray(vlb.reverse_slots(nbr, mask))
+    assert rev[0, 0] == 0 and rev[1, 0] == 0       # mutual slot 0
+    assert (rev[[0, 1], 1] == 0).all()             # padded slots -> 0
+    assert (rev[2] == 0).all()                     # fully padded row -> 0
+    assert rev.dtype == np.int32
+
+
+def test_reverse_slots_asymmetric_table_stays_in_range():
+    """A deliberately asymmetric table (i lists j, j does not list i):
+    reverse_slots must not crash and must return in-range slot indices;
+    symmetric pairs elsewhere in the table stay correct."""
+    # 0 lists [1, 2]; 1 lists [0] (symmetric with 0); 2 lists [1] only —
+    # so 0->2 and 2->1 have no reverse entry.
+    nbr = jnp.asarray(np.array([[1, 2], [0, -1], [1, -1]], np.int32))
+    mask = jnp.asarray(np.array([[True, True], [True, False],
+                                 [True, False]]))
+    rev = np.asarray(vlb.reverse_slots(nbr, mask))
+    K = nbr.shape[1]
+    assert ((rev >= 0) & (rev < K)).all()
+    # the symmetric pair 0<->1 is still correctly inverted
+    assert rev[0, 0] == 0 and rev[1, 0] == 0
 
 
 def test_stall_exit_fires():
