@@ -18,15 +18,31 @@ def save_result(name: str, payload: Dict) -> str:
     return path
 
 
-def timeit(fn: Callable, *args, repeat: int = 3, **kw):
-    """(result, best_seconds) — best-of-N wall time."""
-    best = float("inf")
+def _timeit(fn: Callable, args, kw, repeat: int):
+    """([wall_seconds...], result-from-last-run)."""
+    walls = []
     out = None
     for _ in range(repeat):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+        walls.append(time.perf_counter() - t0)
+    return walls, out
+
+
+def timeit(fn: Callable, *args, repeat: int = 3, **kw):
+    """(result, best_seconds) — best-of-N wall time."""
+    walls, out = _timeit(fn, args, kw, repeat)
+    return out, min(walls)
+
+
+def timeit_median(fn: Callable, *args, repeat: int = 3, **kw):
+    """(result, median_seconds) — median-of-N wall time.
+
+    The gating statistic for perf assertions: robust to one slow outlier
+    (CI noise) without rewarding a lucky fastest run the way best-of-N
+    does.  ``result`` is from the last run."""
+    walls, out = _timeit(fn, args, kw, repeat)
+    return out, sorted(walls)[len(walls) // 2]
 
 
 def table(headers: List[str], rows: List[List]) -> str:

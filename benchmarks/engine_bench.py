@@ -1,24 +1,44 @@
 """LBEngine throughput: eager host-loop replay vs the scan-compiled
-planning pipeline (core/engine.py + sim/simulator.py + pic/driver.py).
+planning pipeline vs the batched (vmapped) multi-scenario path
+(core/engine.py + sim/simulator.py + pic/driver.py).
 
-Headline measurement (the repo's acceptance gate for the device-resident
-engine): replaying the `stencil-wave` scenario with `diff-comm` at P=64
-nodes, K=8 neighbors over 200 steps on CPU, the scanned path must be
-≥ 5× faster than the eager host loop and produce the identical plan
-trajectory.  Also reports per-scenario scanned steps/sec and a PIC-driver
-comparison (device-resident chunked scan vs legacy host loop).
+Headline measurements (the repo's acceptance gates for the device-resident
+engine, each the **median of 3 warm repeats**):
 
-  PYTHONPATH=src python benchmarks/engine_bench.py
+  * replaying the `stencil-wave` scenario with `diff-comm` at P=64 nodes,
+    K=8 neighbors over 200 steps on CPU, the scanned path must be ≥ 5×
+    faster than the eager host loop with an identical plan trajectory;
+  * replaying B=16 scenario instances (every registered scenario at a
+    common shape, `scenarios.batch_instances`) in one vmapped scan must be
+    ≥ 4× faster than the per-scenario Python loop over scanned replays on
+    **end-to-end suite time** (trace+compile+run — the loop compiles 16
+    runners, the batch one), again with identical per-lane trajectories;
+    warm run-only times are reported alongside.
+
+Also reports per-scenario scanned steps/sec and a PIC-driver comparison
+(device-resident chunked scan vs legacy host loop).  Results are written
+twice: `artifacts/bench/engine_bench.json` (legacy location) and the
+stable-schema `BENCH_engine.json` at the repo root (the perf-trajectory
+artifact CI uploads — see `SCHEMA` below; keys are append-only).
+
+  PYTHONPATH=src:. python benchmarks/engine_bench.py
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
-from benchmarks.common import save_result, table
+from benchmarks.common import save_result, table, timeit_median
 from repro.pic import driver
 from repro.sim import scenarios, simulator
+
+SCHEMA = "engine-bench/v1"
+REPEATS = 3
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_engine.json")
 
 
 def _series(problem, evolve, *, scan, steps, lb_every, strategy, kw):
@@ -29,11 +49,8 @@ def _series(problem, evolve, *, scan, steps, lb_every, strategy, kw):
     return res, time.perf_counter() - t0
 
 
-def run(P: int = 64, K: int = 8, steps: int = 200, grid: int = 32,
-        lb_every: int = 10):
-    out = {}
-
-    # ---- headline: stencil-wave, diff-comm, P=64 K=8, 200 steps ---------
+def _bench_series(P, K, steps, grid, lb_every, out):
+    """Headline: stencil-wave, diff-comm, scanned vs eager host loop."""
     problem, evolve = scenarios.get("stencil-wave").instantiate(
         grid=grid, num_nodes=P)
     kw = dict(k=K)
@@ -46,8 +63,12 @@ def run(P: int = 64, K: int = 8, steps: int = 200, grid: int = 32,
             steps=lb_every + 2, lb_every=lb_every, strategy="diff-comm",
             kw=kw)
 
-    res_scan, t_scan = _series(problem, evolve, scan=True, **common)
-    res_eager, t_eager = _series(problem, evolve, scan=False, **common)
+    res_scan, t_scan = timeit_median(
+        lambda: _series(problem, evolve, scan=True, **common)[0],
+        repeat=REPEATS)
+    res_eager, t_eager = timeit_median(
+        lambda: _series(problem, evolve, scan=False, **common)[0],
+        repeat=REPEATS)
 
     parity = bool(
         np.allclose(res_eager.max_avg, res_scan.max_avg, rtol=1e-4)
@@ -56,20 +77,90 @@ def run(P: int = 64, K: int = 8, steps: int = 200, grid: int = 32,
     speedup = t_eager / max(t_scan, 1e-12)
     out["series"] = dict(
         P=P, K=K, steps=steps, grid=grid, lb_every=lb_every,
+        repeats=REPEATS,
         eager_seconds=t_eager, scanned_seconds=t_scan,
         eager_steps_per_sec=steps / t_eager,
         scanned_steps_per_sec=steps / t_scan,
         speedup=speedup, parity=parity,
     )
-    print(f"run_series diff-comm  P={P} K={K} grid={grid}² steps={steps}")
+    print(f"run_series diff-comm  P={P} K={K} grid={grid}² steps={steps} "
+          f"(median of {REPEATS})")
     print(table(
         ["path", "seconds", "steps/sec"],
         [["eager host loop", f"{t_eager:.3f}", f"{steps / t_eager:.1f}"],
          ["scanned", f"{t_scan:.4f}", f"{steps / t_scan:.1f}"],
          ["speedup", f"{speedup:.1f}x", ""]]))
     print(f"plan-trajectory parity (max/avg + migrations): {parity}")
+    return speedup, parity
 
-    # ---- per-scenario scanned throughput --------------------------------
+
+def _bench_batch(out, *, batch=16, steps=100, lb_every=5, k=4):
+    """B scenario instances: one vmapped scan vs per-scenario Python loop.
+
+    The gated number is the **end-to-end suite time** — trace + compile +
+    run from a cold replay-runner cache, the cost every fresh process
+    (CI, a parameter sweep, a notebook) pays to replay the scenario suite.
+    The per-scenario loop compiles B runners; the batched path compiles
+    exactly one vmapped executable — that is the structural win.  Warm
+    run-only times are reported alongside for transparency: on CPU at
+    these small shapes a fully-compiled per-scenario loop is already
+    single-dispatch-per-lane, so the warm paths are roughly at par (the
+    batch pays lockstep vmapped while_loops; the loop pays B dispatches).
+    """
+    inst = scenarios.batch_instances(batch)
+    kw = dict(steps=steps, lb_every=lb_every, strategy="diff-comm",
+              strategy_kwargs=dict(k=k))
+
+    def loop():
+        return [simulator.run_series(p, ev, scan=True, **kw)
+                for _, p, ev in inst]
+
+    def batched():
+        return simulator.run_series_batch(inst, **kw)
+
+    def cold(fn):
+        simulator._batched_runner.cache_clear()
+        simulator._scanned_runner.cache_clear()
+        return fn()
+
+    # warm the shared engine/plan caches once so both paths start equal,
+    # then measure end-to-end suite time with cold replay-runner caches
+    bres = batched()
+    singles = loop()
+    bres, t_batch = timeit_median(lambda: cold(batched), repeat=REPEATS)
+    singles, t_loop = timeit_median(lambda: cold(loop), repeat=REPEATS)
+    _, t_batch_warm = timeit_median(batched, repeat=REPEATS)
+    _, t_loop_warm = timeit_median(loop, repeat=REPEATS)
+
+    parity = all(
+        np.allclose(s.max_avg, b.max_avg, rtol=1e-4)
+        and np.allclose(s.migrations, b.migrations, atol=1e-6)
+        for s, b in zip(singles, bres.series))
+    speedup = t_loop / max(t_batch, 1e-12)
+    out["batch"] = dict(
+        batch=batch, steps=steps, lb_every=lb_every, k=k, repeats=REPEATS,
+        scenarios=[n for n, _, _ in inst],
+        loop_seconds=t_loop, batched_seconds=t_batch,
+        loop_warm_seconds=t_loop_warm, batched_warm_seconds=t_batch_warm,
+        warm_speedup=t_loop_warm / max(t_batch_warm, 1e-12),
+        loop_lane_steps_per_sec=batch * steps / t_loop,
+        batched_lane_steps_per_sec=batch * steps / t_batch,
+        speedup=speedup, parity=parity,
+    )
+    print(f"\nbatched replay, {batch} scenario lanes × {steps} steps, "
+          f"end-to-end suite time incl. compile (median of {REPEATS})")
+    print(table(
+        ["path", "suite seconds", "warm seconds"],
+        [["per-scenario loop", f"{t_loop:.2f}", f"{t_loop_warm:.3f}"],
+         ["vmapped batch", f"{t_batch:.2f}", f"{t_batch_warm:.3f}"],
+         ["speedup", f"{speedup:.1f}x",
+          f"{t_loop_warm / max(t_batch_warm, 1e-12):.1f}x"]]))
+    print(f"per-lane trajectory parity: {parity}")
+    return speedup, parity
+
+
+def _bench_scenarios(out):
+    """Per-scenario scanned throughput."""
     small = {
         "stencil-wave": dict(grid=16, num_nodes=16),
         "pic-geometric": dict(cx=8, cy=8, num_pes=8, n_particles=10_000.0),
@@ -82,35 +173,72 @@ def run(P: int = 64, K: int = 8, steps: int = 200, grid: int = 32,
         prob, ev = scenarios.get(name).instantiate(**small.get(name, {}))
         c = dict(steps=100, lb_every=5, strategy="diff-comm", kw=dict(k=4))
         _series(prob, ev, scan=True, **c)                     # compile
-        r, t = _series(prob, ev, scan=True, **c)
+        r, t = timeit_median(
+            lambda prob=prob, ev=ev: _series(prob, ev, scan=True, **c)[0],
+            repeat=REPEATS)
         rows.append([name, f"{100 / t:.0f}", f"{r.max_avg.mean():.3f}",
                      f"{r.migrations[r.migrations > 0].mean() if (r.migrations > 0).any() else 0:.3f}"])
         out["scenarios"][name] = dict(
             steps_per_sec=100 / t, mean_max_avg=float(r.max_avg.mean()))
-    print("\nscanned replay, diff-comm k=4, 100 steps")
+    print(f"\nscanned replay, diff-comm k=4, 100 steps (median of {REPEATS})")
     print(table(["scenario", "steps/sec", "mean max/avg", "migr/LB"], rows))
 
-    # ---- PIC driver: device-resident chunked scan vs host loop ----------
+
+def _bench_pic(out):
+    """PIC driver: device-resident chunked scan vs host loop."""
     base = dict(L=200, n_particles=20_000, steps=60, k=2, rho=0.9, cx=10,
                 cy=10, num_pes=8, mapping="striped", lb_every=10,
                 strategy="diff-comm", strategy_kwargs=dict(k=4))
     driver.run(driver.PICConfig(scan=True, **base))           # compile
-    r_s = driver.run(driver.PICConfig(scan=True, **base))
-    r_h = driver.run(driver.PICConfig(scan=False, **base))
-    pic_speedup = r_h.wall_seconds / max(r_s.wall_seconds, 1e-12)
+    r_s, t_s = timeit_median(
+        lambda: driver.run(driver.PICConfig(scan=True, **base)),
+        repeat=REPEATS)
+    r_h, t_h = timeit_median(
+        lambda: driver.run(driver.PICConfig(scan=False, **base)),
+        repeat=REPEATS)
+    pic_speedup = t_h / max(t_s, 1e-12)
     out["pic"] = dict(
-        host_seconds=r_h.wall_seconds, scanned_seconds=r_s.wall_seconds,
+        host_seconds=t_h, scanned_seconds=t_s, repeats=REPEATS,
         speedup=pic_speedup,
         parity=bool(np.allclose(r_h.max_avg, r_s.max_avg, rtol=1e-4)),
     )
-    print(f"\nPIC driver 20k particles, 60 steps: host {r_h.wall_seconds:.3f}s"
-          f"  scanned {r_s.wall_seconds:.4f}s  ({pic_speedup:.1f}x)")
+    print(f"\nPIC driver 20k particles, 60 steps: host {t_h:.3f}s"
+          f"  scanned {t_s:.4f}s  ({pic_speedup:.1f}x)")
+
+
+def write_bench_json(out) -> str:
+    """Stable-schema perf-trajectory artifact at the repo root."""
+    payload = dict(
+        schema=SCHEMA,
+        generated_by="benchmarks/engine_bench.py",
+        repeats=REPEATS,
+        **out,
+    )
+    path = os.path.abspath(BENCH_PATH)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def run(P: int = 64, K: int = 8, steps: int = 200, grid: int = 32,
+        lb_every: int = 10):
+    out = {}
+    speedup, parity = _bench_series(P, K, steps, grid, lb_every, out)
+    batch_speedup, batch_parity = _bench_batch(out)
+    _bench_scenarios(out)
+    _bench_pic(out)
 
     path = save_result("engine_bench", out)
-    print(f"\nsaved {path}")
+    bench_path = write_bench_json(out)
+    print(f"\nsaved {path}\nsaved {bench_path}")
     assert parity, "scanned plan must equal the eager plan"
     assert speedup >= 5.0, \
         f"scanned path must be >=5x the eager host loop, got {speedup:.1f}x"
+    assert batch_parity, "batched lanes must match per-scenario replays"
+    assert batch_speedup >= 4.0, \
+        f"batched path must be >=4x the per-scenario loop, " \
+        f"got {batch_speedup:.1f}x"
     return out
 
 

@@ -129,6 +129,52 @@ def object_node_bytes(
     return one_direction(src, dst) + one_direction(dst, src)
 
 
+def stack_problems(problems) -> LBProblem:
+    """Stack B same-shaped problems into one batched ``LBProblem``.
+
+    Every array leaf gains a leading batch axis — the input to the vmapped
+    planning paths (``engine.LBEngine.plan_batch`` and
+    ``sim.simulator.run_series_batch``).  Requirements: identical
+    ``num_nodes`` and object count; edge lists may differ in length and
+    are padded to the longest with the standard (-1, -1, 0.0) padding
+    (every consumer masks on ``edges_src >= 0``).  ``coords`` are kept
+    only when every problem has them (the comm variant never reads them).
+    """
+    problems = list(problems)
+    if not problems:
+        raise ValueError("stack_problems needs at least one problem")
+    P = problems[0].num_nodes
+    N = problems[0].num_objects
+    for p in problems:
+        if p.num_nodes != P or p.num_objects != N:
+            raise ValueError(
+                "stack_problems needs a common (num_nodes, num_objects) "
+                f"shape; got ({p.num_nodes}, {p.num_objects}) vs ({P}, {N})")
+    E = max(p.num_edges for p in problems)
+
+    def pad_edges(a, fill):
+        a = jnp.asarray(a)
+        return jnp.pad(a, (0, E - a.shape[0]), constant_values=fill)
+
+    keep_coords = all(p.coords is not None for p in problems)
+    return LBProblem(
+        loads=jnp.stack([jnp.asarray(p.loads, jnp.float32)
+                         for p in problems]),
+        assignment=jnp.stack([jnp.asarray(p.assignment, jnp.int32)
+                              for p in problems]),
+        edges_src=jnp.stack([pad_edges(p.edges_src, -1).astype(jnp.int32)
+                             for p in problems]),
+        edges_dst=jnp.stack([pad_edges(p.edges_dst, -1).astype(jnp.int32)
+                             for p in problems]),
+        edges_bytes=jnp.stack(
+            [pad_edges(p.edges_bytes, 0.0).astype(jnp.float32)
+             for p in problems]),
+        num_nodes=P,
+        coords=jnp.stack([jnp.asarray(p.coords, jnp.float32)
+                          for p in problems]) if keep_coords else None,
+    )
+
+
 def make_problem(
     loads,
     assignment,

@@ -15,7 +15,16 @@ iteration caps)`` and exposes
     neighbor slots, ``C`` objects; all baked into array shapes), safe to
     call under ``jit`` / ``lax.scan`` / ``lax.cond``;
   * ``plan(problem) -> LBPlan`` — eager host convenience with timing and
-    the legacy ``info`` dict.
+    the legacy ``info`` dict;
+  * ``plan_batch_fn`` / ``plan_batch`` — the vmapped batch path: B
+    independent same-shaped problems (stacked via
+    ``comm_graph.stack_problems``) planned in one compiled call, with the
+    staged problem buffers donated to the executable on accelerators.
+
+Stage 2 runs the chunked virtual-LB loop (``sweep_chunk`` sweeps per
+``while_loop`` body) through ``kernels.diffusion.ops.diffusion_nsweeps``,
+which picks the fused multi-sweep Pallas kernel / streaming kernel /
+compiled reference per backend and VMEM budget.
 
 ``Strategy`` is the registry protocol replacing the dict-of-lambdas in
 ``core/api.py`` (a thin mapping view remains there for back-compat):
@@ -38,6 +47,7 @@ from repro.core import baselines, comm_graph
 from repro.core import neighbor_selection as ns
 from repro.core import object_selection as osel
 from repro.core import virtual_lb as vlb
+from repro.kernels.diffusion import ops as diffusion_ops
 
 
 class PlanStats(NamedTuple):
@@ -78,6 +88,7 @@ class LBEngine:
         max_rounds: int = 64,
         single_hop: bool = True,
         step_fn: Optional[Callable] = None,
+        sweep_chunk: int = 8,
     ):
         if variant not in ("comm", "coord"):
             raise ValueError(f"unknown variant {variant!r}")
@@ -88,7 +99,21 @@ class LBEngine:
         self.max_rounds = int(max_rounds)
         self.single_hop = bool(single_hop)
         self.step_fn = step_fn
+        self.sweep_chunk = int(sweep_chunk)
+        # production stage-2 path: the fused S-sweep chunk (auto-selected
+        # fused/streaming/reference in kernels/diffusion/ops.py); an
+        # explicit step_fn opts out and runs per-sweep inside the chunk.
+        self.chunk_fn = (diffusion_ops.diffusion_nsweeps
+                         if step_fn is None else None)
         self._jitted = jax.jit(self.plan_fn)
+        self._jitted_batch = jax.jit(self.plan_batch_fn)
+        # donating variant: only for batches plan_batch stages itself — a
+        # caller-owned pre-stacked batch must survive the call.  CPU XLA
+        # has no donation.
+        self._jitted_batch_donate = jax.jit(
+            self.plan_batch_fn,
+            donate_argnums=(0,) if jax.default_backend() != "cpu" else (),
+        )
 
     # ------------------------------------------------------- traced path --
 
@@ -119,6 +144,7 @@ class LBEngine:
             nloads, nres.nbr_idx, nres.nbr_mask,
             tol=self.tol, max_iters=self.max_iters,
             single_hop=self.single_hop, step_fn=self.step_fn,
+            sweep_chunk=self.sweep_chunk, chunk_fn=self.chunk_fn,
         )
 
         # -- stage 3: object selection ----------------------------------
@@ -135,6 +161,56 @@ class LBEngine:
             unrealized_flow=jnp.abs(sres.residual).sum().astype(jnp.float32),
         )
         return sres.assignment.astype(jnp.int32), stats
+
+    # ------------------------------------------------------ batched path --
+
+    def plan_batch_fn(
+        self, problems: comm_graph.LBProblem
+    ) -> Tuple[jax.Array, PlanStats]:
+        """Vmapped :meth:`plan_fn` over a stacked problem batch.
+
+        ``problems`` is a batched ``LBProblem`` (every array leaf carries a
+        leading B axis — see ``comm_graph.stack_problems``).  Returns
+        ``(assignments (B, N), PlanStats of (B,) arrays)``.  One compiled
+        call plans all B independent problems; traceable, so the batched
+        replay layers scan over it."""
+        return jax.vmap(self.plan_fn)(problems)
+
+    def plan_batch(self, problems):
+        """Eager batched planning: B problems in one compiled call.
+
+        Accepts a sequence of same-shaped ``LBProblem``s (stacked here,
+        with the staged buffers donated to the executable on accelerators)
+        or an already-stacked batch (kept intact — no donation).  Returns
+        a list of ``LBPlan``s."""
+        from repro.core.api import LBPlan  # local import: api imports us
+
+        t0 = time.perf_counter()
+        if isinstance(problems, comm_graph.LBProblem):
+            jitted = self._jitted_batch
+        else:
+            problems = comm_graph.stack_problems(problems)
+            jitted = self._jitted_batch_donate
+        assignments, stats = jitted(problems)
+        assignments = np.asarray(jax.device_get(assignments))
+        stats = jax.device_get(stats)
+        dt = time.perf_counter() - t0
+        plans = []
+        for b in range(assignments.shape[0]):
+            info = dict(
+                strategy=f"diff-{self.variant}",
+                k=self.k,
+                batch_index=b,
+                batch_size=assignments.shape[0],
+                protocol_rounds=int(stats.protocol_rounds[b]),
+                mean_degree=float(stats.mean_degree[b]),
+                diffusion_iters=int(stats.diffusion_iters[b]),
+                diffusion_residual=float(stats.diffusion_residual[b]),
+                unrealized_flow=float(stats.unrealized_flow[b]),
+                plan_seconds=dt,      # wall time of the whole batch
+            )
+            plans.append(LBPlan(assignments[b], info))
+        return plans
 
     # -------------------------------------------------------- host path --
 
@@ -167,11 +243,12 @@ def get_engine(
     max_rounds: int = 64,
     single_hop: bool = True,
     step_fn: Optional[Callable] = None,
+    sweep_chunk: int = 8,
 ) -> LBEngine:
     """Engine cache — one compiled planner per static configuration."""
     return LBEngine(variant=variant, k=k, tol=tol, max_iters=max_iters,
                     max_rounds=max_rounds, single_hop=single_hop,
-                    step_fn=step_fn)
+                    step_fn=step_fn, sweep_chunk=sweep_chunk)
 
 
 # ------------------------------------------------------ Strategy protocol --

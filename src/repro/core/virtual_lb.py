@@ -17,6 +17,17 @@ what the Pallas kernel (kernels/diffusion) exploits.
 
 The inner sweep is pluggable: ``step_fn=None`` uses the pure-jnp reference;
 the production path passes ``kernels.diffusion.ops.diffusion_sweep``.
+
+The fixed-point loop runs in *chunks*: ``virtual_balance`` is a
+``jax.lax.while_loop`` over ``sweep_chunk``-sweep blocks, each block
+applying up to S masked sweeps with per-sweep early exit
+(:func:`reference_nsweeps`).  Chunk granularity changes only how often the
+host-visible loop condition is evaluated — the per-sweep activity mask
+replicates the per-sweep ``while_loop`` decisions exactly, so results are
+bit-for-bit independent of ``sweep_chunk``.  ``chunk_fn`` swaps in a fused
+implementation of the whole S-sweep block (the production path passes
+``kernels.diffusion.ops.diffusion_nsweeps``, which keeps the neighbor
+tables VMEM-resident across the block on TPU).
 """
 from __future__ import annotations
 
@@ -52,24 +63,80 @@ def reference_sweep(x, own, nbr_idx, nbr_mask, rev, alpha, single_hop):
     Pure-jnp oracle for the Pallas kernel (kernels/diffusion/ref.py re-exports
     this).  Gather-only; see module docstring.
     """
+    # gathers use the flattened jnp.take(..., mode="clip") forms the native
+    # TPU kernels lower (see kernels/diffusion); a gather copies elements
+    # exactly, so this is bit-identical to advanced indexing
     safe_nbr = jnp.where(nbr_mask, nbr_idx, 0)
-    xn = jnp.where(nbr_mask, x[safe_nbr], x[:, None])
+    xn = jnp.where(nbr_mask, jnp.take(x, safe_nbr, axis=0, mode="clip"),
+                   x[:, None])
     push = jnp.maximum(alpha * (x[:, None] - xn), 0.0) * nbr_mask
     if single_hop:
         tot = push.sum(axis=1)
         scale = jnp.where(tot > 0, jnp.minimum(1.0, own / (tot + 1e-30)), 1.0)
         push = push * scale[:, None]
     # recv[i, k]: what neighbor j = nbr_idx[i,k] pushed toward i this sweep.
-    recv = jnp.where(nbr_mask, push[safe_nbr, rev], 0.0)
+    K = nbr_idx.shape[1]
+    flat = safe_nbr * K + jnp.where(nbr_mask, rev, 0)
+    recv = jnp.where(
+        nbr_mask, jnp.take(push.reshape(-1), flat, mode="clip"), 0.0)
     x_new = x - push.sum(axis=1) + recv.sum(axis=1)
     own_new = own - push.sum(axis=1)
     return x_new, own_new, push - recv
 
 
+def sweep_chunk_body(sweep, nbr_idx, nbr_mask, rev, alpha, single_hop,
+                     tol, max_iters):
+    """``(i, carry) -> carry`` applying one masked early-exit sweep.
+
+    ``carry = (x, own, flow, it, res, stall)``.  The activity predicate is
+    the same one the outer fixed-point loop checks, evaluated *before* the
+    sweep — once it goes false mid-chunk the state passes through
+    unchanged, so a chunk of S masked sweeps is bit-for-bit equal to S
+    steps of the per-sweep ``while_loop``.  Shared by the pure-jnp chunk
+    (:func:`reference_nsweeps`) and the fused Pallas kernel
+    (``kernels/diffusion/kernel.py``), which keeps the two paths
+    semantically identical by construction.
+    """
+
+    def body(_, carry):
+        x, own, flow, it, res, stall = carry
+        active = (it < max_iters) & (res > tol) & (stall < 3)
+        x2, own2, df = sweep(x, own, nbr_idx, nbr_mask, rev, alpha,
+                             single_hop)
+        moved = jnp.abs(x2 - x).sum()
+        stalled = moved <= 1e-6 * (jnp.abs(x2).mean() + 1e-30)
+        res2 = neighborhood_residual(x2, nbr_idx, nbr_mask)
+
+        def keep(new, old):
+            return jnp.where(active, new, old)
+
+        return (keep(x2, x), keep(own2, own), keep(flow + df, flow),
+                keep(it + 1, it), keep(res2, res),
+                keep(jnp.where(stalled, stall + 1, jnp.int32(0)), stall))
+
+    return body
+
+
+def reference_nsweeps(x, own, flow, it, res, stall, nbr_idx, nbr_mask, rev,
+                      alpha, *, n_sweeps: int, single_hop: bool, tol,
+                      max_iters, step_fn: Optional[Callable] = None):
+    """Pure-jnp S-sweep chunk with per-sweep early exit.
+
+    The CPU production path and the oracle for the fused Pallas kernel
+    (``diffusion_nsweeps_pallas``).  Returns the updated
+    ``(x, own, flow, it, res, stall)`` carry.
+    """
+    body = sweep_chunk_body(step_fn or reference_sweep, nbr_idx, nbr_mask,
+                            rev, alpha, single_hop, tol, max_iters)
+    return jax.lax.fori_loop(0, n_sweeps, body,
+                             (x, own, flow, it, res, stall))
+
+
 def neighborhood_residual(x, nbr_idx, nbr_mask):
     """max over nodes of (max deviation in {i}∪N(i)) / global mean load."""
     safe_nbr = jnp.where(nbr_mask, nbr_idx, 0)
-    xn = jnp.where(nbr_mask, x[safe_nbr], x[:, None])
+    xn = jnp.where(nbr_mask, jnp.take(x, safe_nbr, axis=0, mode="clip"),
+                   x[:, None])
     allx = jnp.concatenate([x[:, None], xn], axis=1)       # (P, K+1)
     m = jnp.concatenate([jnp.ones_like(x[:, None], bool), nbr_mask], axis=1)
     cnt = m.sum(axis=1)
@@ -81,7 +148,8 @@ def neighborhood_residual(x, nbr_idx, nbr_mask):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("max_iters", "single_hop", "step_fn"),
+    static_argnames=("max_iters", "single_hop", "step_fn", "sweep_chunk",
+                     "chunk_fn"),
 )
 def virtual_balance(
     node_loads: jax.Array,
@@ -93,6 +161,8 @@ def virtual_balance(
     max_iters: int = 512,
     single_hop: bool = True,
     step_fn: Optional[Callable] = None,
+    sweep_chunk: int = 8,
+    chunk_fn: Optional[Callable] = None,
 ) -> VirtualLBResult:
     """Iterate diffusion sweeps until every neighborhood is balanced.
 
@@ -104,14 +174,24 @@ def virtual_balance(
       tol: convergence threshold on max neighborhood deviation / mean load
         (the paper's "load variance in each neighborhood below a threshold").
       single_hop: freeze received load (paper default).
-      step_fn: sweep implementation (defaults to :func:`reference_sweep`).
+      step_fn: sweep implementation (defaults to :func:`reference_sweep`);
+        used only when ``chunk_fn`` is None.
+      sweep_chunk: sweeps per ``while_loop`` body (S).  Results are
+        bit-for-bit independent of this value (per-sweep activity mask);
+        larger chunks amortize the loop condition and, with a fused
+        ``chunk_fn``, the HBM table traffic.
+      chunk_fn: fused S-sweep block implementation with the
+        :func:`reference_nsweeps` signature (minus ``step_fn``).  The
+        production path passes ``kernels.diffusion.ops.diffusion_nsweeps``.
     """
     P, K = nbr_idx.shape
     if alpha is None:
         alpha = 1.0 / (K + 1.0)
     alpha = jnp.float32(alpha)
-    sweep = step_fn or reference_sweep
     rev = reverse_slots(nbr_idx, nbr_mask)
+    n_sweeps = max(1, min(int(sweep_chunk), int(max_iters)))
+    if chunk_fn is None:
+        chunk_fn = functools.partial(reference_nsweeps, step_fn=step_fn)
 
     class S(NamedTuple):
         x: jax.Array
@@ -128,14 +208,12 @@ def virtual_balance(
         return (s.it < max_iters) & (s.res > tol) & (s.stall < 3)
 
     def body(s: S):
-        x, own, df = sweep(
-            s.x, s.own, nbr_idx, nbr_mask, rev, alpha, single_hop
-        )
-        moved = jnp.abs(x - s.x).sum()
-        stalled = moved <= 1e-6 * (jnp.abs(x).mean() + 1e-30)
-        return S(x, own, s.flows + df, s.it + 1,
-                 neighborhood_residual(x, nbr_idx, nbr_mask),
-                 jnp.where(stalled, s.stall + 1, 0))
+        return S(*chunk_fn(
+            s.x, s.own, s.flows, s.it, s.res, s.stall,
+            nbr_idx, nbr_mask, rev, alpha,
+            n_sweeps=n_sweeps, single_hop=single_hop, tol=tol,
+            max_iters=max_iters,
+        ))
 
     x0 = node_loads.astype(jnp.float32)
     init = S(

@@ -7,4 +7,20 @@
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with backend dispatch) and ref.py (pure-jnp oracle); tests sweep
 shapes/dtypes and assert_allclose kernel-vs-oracle in interpret mode.
+
+Backend dispatch goes through :func:`on_tpu`, probed once per process —
+the default backend cannot change after JAX initializes, so the per-call
+``jax.default_backend()`` probe every ops.py used to run was pure
+overhead on eager hot paths.
 """
+from __future__ import annotations
+
+import functools
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    """True iff the default JAX backend is TPU (cached at first call)."""
+    import jax
+
+    return jax.default_backend() == "tpu"

@@ -1,26 +1,35 @@
-"""Pallas TPU kernel for the virtual-LB diffusion sweep (paper §III.B).
+"""Pallas TPU kernels for the virtual-LB diffusion sweep (paper §III.B).
 
 The sweep is the iterated hot loop of the balancer: at simulator scale
 (P ~ 10^5-10^6 nodes, K ≤ 16 neighbors) hundreds of sweeps run per LB round.
+Two kernels cover the P spectrum (``ops.py`` selects automatically):
 
-TPU adaptation (HBM→VMEM→VREG):
+**Fused multi-sweep kernel** (``diffusion_nsweeps_pallas``) — the default
+when the working set fits the VMEM budget.  One ``pallas_call`` runs S
+sweeps back-to-back: the neighbor/mask/reverse tables are loaded into VMEM
+*once per S-sweep block* (instead of twice per sweep), push+recv fuse into
+a single gather-only pass per sweep via the symmetric-graph identity
+    recv[i, k] = push[nbr[i, k], rev[i, k]]
+(the push matrix never round-trips HBM), and the (P, K) flow accumulator
+plus the neighborhood residual stay on-chip across the whole block.  Each
+sweep is gated by the same early-exit predicate the outer fixed-point loop
+checks (convergence / iteration cap / stall), so the block is bit-for-bit
+equal to S steps of the per-sweep loop — the sweep body is the *shared*
+``core.virtual_lb.sweep_chunk_body``, identical by construction.
+
+**Streaming two-pass kernel** (``diffusion_sweep_pallas``) — the large-P
+fallback.  Computes one sweep with the tables streamed through VMEM in
+``block_p`` node blocks (touched once per pass):
   * the load vector ``x`` (P f32 ≤ 4 MB at P = 10^6) and ``own`` stay fully
     VMEM-resident for every grid step — they are the gather targets;
-  * the per-node neighbor tables (P×K idx/mask/rev) stream through VMEM in
-    node blocks (``block_p`` rows per grid step) — they are touched once;
-  * all compute is VPU element-wise math over (block_p, K) tiles; there is
-    deliberately no scatter: the symmetric-graph identity
-        recv[i, k] = push[nbr[i, k], rev[i, k]]
-    turns "receive" into a second gather, so each sweep is gather-only
-    (scatters serialize on TPU; gathers vectorize).
+  * pass A computes the scaled ``push`` matrix (single-hop row scale);
+  * pass B gathers ``recv`` from the completed push matrix and forms
+    outputs — gather-only, no scatters (scatters serialize on TPU).
 
-The kernel computes *one* sweep; the fixed-point loop lives in
-``core/virtual_lb.py`` (jax.lax.while_loop) and passes
-``kernels.diffusion.ops.diffusion_sweep`` as ``step_fn``.
-
-Two-pass structure within a sweep (both passes tile over node blocks):
-  pass A computes the scaled ``push`` matrix (needs the single-hop row scale);
-  pass B gathers ``recv`` from the completed push matrix and forms outputs.
+The fixed-point loop lives in ``core/virtual_lb.py`` (a
+``jax.lax.while_loop`` over S-sweep chunks); ``ops.diffusion_nsweeps`` is
+the production ``chunk_fn`` and ``ops.diffusion_sweep`` the per-sweep
+``step_fn``.
 """
 from __future__ import annotations
 
@@ -29,6 +38,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.virtual_lb import sweep_chunk_body, reference_sweep
 
 
 def _push_kernel(x_ref, own_ref, nbr_ref, mask_ref, alpha_ref,
@@ -138,3 +149,99 @@ def diffusion_sweep_pallas(
     )(xp, ownp, push, nbrp, maskp, revp)
 
     return x_new[:P], own_new[:P], flow[:P]
+
+
+# ------------------------------------------------------ fused multi-sweep --
+
+
+def _nsweeps_kernel(x_ref, own_ref, flow_ref, nbr_ref, mask_ref, rev_ref,
+                    fscal_ref, iscal_ref,
+                    x_out_ref, own_out_ref, flow_out_ref, fstat_ref,
+                    istat_ref, *, n_sweeps: int, single_hop: bool, P: int):
+    """S early-exit-gated sweeps over fully VMEM-resident state.
+
+    The whole working set — ``x``/``own`` vectors, the (P, K) tables, the
+    flow accumulator and the per-sweep push/recv intermediates — lives in
+    VMEM for the entire block; HBM is touched exactly once on the way in
+    and once on the way out.  The sweep body is the shared
+    ``core.virtual_lb.sweep_chunk_body`` (gather-only, one pass per sweep),
+    so the block is bit-for-bit the per-sweep reference loop.  Padding rows
+    (layout alignment) are sliced off before compute: reductions (residual
+    mean, stall detection) see exactly the (P,) problem the reference sees.
+    """
+    pad = x_ref.shape[0] - P
+    x = x_ref[...][:P]
+    own = own_ref[...][:P]
+    flow = flow_ref[...][:P]
+    nbr = nbr_ref[...][:P]
+    mask = mask_ref[...][:P]
+    rev = rev_ref[...][:P]
+    alpha, tol, res0 = fscal_ref[0], fscal_ref[1], fscal_ref[2]
+    it0, max_iters, stall0 = iscal_ref[0], iscal_ref[1], iscal_ref[2]
+
+    body = sweep_chunk_body(reference_sweep, nbr, mask, rev, alpha,
+                            single_hop, tol, max_iters)
+    x, own, flow, it, res, stall = jax.lax.fori_loop(
+        0, n_sweeps, body, (x, own, flow, it0, res0, stall0))
+
+    x_out_ref[...] = jnp.pad(x, (0, pad))
+    own_out_ref[...] = jnp.pad(own, (0, pad))
+    flow_out_ref[...] = jnp.pad(flow, ((0, pad), (0, 0)))
+    fstat_ref[...] = res[None]
+    istat_ref[...] = jnp.stack([it, stall])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_sweeps", "single_hop", "interpret"),
+)
+def diffusion_nsweeps_pallas(
+    x: jax.Array,          # (P,) f32 current virtual loads
+    own: jax.Array,        # (P,) f32 remaining own (originating) load
+    flow: jax.Array,       # (P, K) f32 accumulated net flow (carried)
+    it: jax.Array,         # scalar i32 sweeps executed so far
+    res: jax.Array,        # scalar f32 current neighborhood residual
+    stall: jax.Array,      # scalar i32 consecutive stalled sweeps
+    nbr_idx: jax.Array,    # (P, K) i32, -1 padded
+    nbr_mask: jax.Array,   # (P, K) bool
+    rev: jax.Array,        # (P, K) i32 reverse slots
+    alpha,
+    *,
+    n_sweeps: int,
+    single_hop: bool = True,
+    tol=0.02,
+    max_iters=512,
+    interpret: bool = False,
+):
+    """Fused S-sweep block.  Returns the updated
+    ``(x, own, flow, it, res, stall)`` carry — the ``chunk_fn`` contract of
+    ``core.virtual_lb.virtual_balance`` (see :func:`reference_nsweeps`)."""
+    P, K = nbr_idx.shape
+    Pp = -(-P // 8) * 8                       # f32 sublane alignment
+    xp = _pad_to(x.astype(jnp.float32), Pp)
+    ownp = _pad_to(own.astype(jnp.float32), Pp)
+    flowp = _pad_to(flow.astype(jnp.float32), Pp)
+    nbrp = _pad_to(nbr_idx, Pp)
+    maskp = _pad_to(nbr_mask, Pp)
+    revp = _pad_to(rev, Pp)
+    fscal = jnp.stack([jnp.float32(alpha), jnp.float32(tol),
+                       jnp.float32(res)])
+    iscal = jnp.stack([jnp.int32(it), jnp.int32(max_iters),
+                       jnp.int32(stall)])
+
+    # no grid: one program, every operand fully VMEM-resident for the block
+    x_new, own_new, flow_new, fstat, istat = pl.pallas_call(
+        functools.partial(_nsweeps_kernel, n_sweeps=n_sweeps,
+                          single_hop=single_hop, P=P),
+        out_shape=[
+            jax.ShapeDtypeStruct((Pp,), jnp.float32),
+            jax.ShapeDtypeStruct((Pp,), jnp.float32),
+            jax.ShapeDtypeStruct((Pp, K), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, ownp, flowp, nbrp, maskp, revp, fscal, iscal)
+
+    return (x_new[:P], own_new[:P], flow_new[:P],
+            istat[0], fstat[0], istat[1])

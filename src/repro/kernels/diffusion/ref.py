@@ -4,9 +4,19 @@ This is exactly the reference implementation the balancer uses by default
 (core/virtual_lb.py); re-exported here so the kernel test sweep has a single
 canonical oracle path.
 """
-from repro.core.virtual_lb import reference_sweep
+from repro.core.virtual_lb import reference_nsweeps, reference_sweep
 
 
 def diffusion_sweep_ref(x, own, nbr_idx, nbr_mask, rev, alpha,
                         single_hop: bool = True):
     return reference_sweep(x, own, nbr_idx, nbr_mask, rev, alpha, single_hop)
+
+
+def diffusion_nsweeps_ref(x, own, flow, it, res, stall, nbr_idx, nbr_mask,
+                          rev, alpha, *, n_sweeps: int, single_hop: bool,
+                          tol, max_iters):
+    """S-sweep chunk oracle for ``diffusion_nsweeps_pallas``."""
+    return reference_nsweeps(
+        x, own, flow, it, res, stall, nbr_idx, nbr_mask, rev, alpha,
+        n_sweeps=n_sweeps, single_hop=single_hop, tol=tol,
+        max_iters=max_iters)

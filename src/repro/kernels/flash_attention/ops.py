@@ -1,20 +1,18 @@
 """Jitted wrapper: Pallas flash attention on TPU, oracle on CPU."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels import on_tpu
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 def flash_attention(q, k, v, q_pos, kv_pos, *, window=0, prefix_len=0,
                     use_kernel=None):
-    on_tpu = jax.default_backend() == "tpu"
     if use_kernel is None:
-        use_kernel = on_tpu
+        use_kernel = on_tpu()
     if use_kernel:
         return flash_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
                                       prefix_len=prefix_len,
-                                      interpret=not on_tpu)
+                                      interpret=not on_tpu())
     return flash_attention_ref(q, k, v, q_pos, kv_pos, window=window,
                                prefix_len=prefix_len)

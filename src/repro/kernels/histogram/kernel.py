@@ -24,7 +24,16 @@ def _hist_kernel(ids_ref, w_ref, out_ref, *, C: int):
     ids = ids_ref[...]                     # (bn,) i32, -1 = padding
     w = w_ref[...]                         # (bn,) f32
     onehot = (ids[:, None] == jax.lax.iota(jnp.int32, C)[None, :])
-    contrib = jnp.sum(jnp.where(onehot, w[:, None], 0.0), axis=0)
+    # contract weights against the one-hot mask on the MXU: a (1, bn) ×
+    # (bn, C) matmul replaces the (bn, C) masked where-sum the VPU would
+    # otherwise reduce serially.  Padding ids (-1) match no bin → zero
+    # columns, so no separate mask is needed.
+    # HIGHEST keeps the f32 weights exact on the MXU (default precision
+    # would round them through bf16, breaking the ops.py "numerically
+    # identical to the oracle" contract)
+    contrib = jnp.dot(w[None, :], onehot.astype(jnp.float32),
+                      preferred_element_type=jnp.float32,
+                      precision=jax.lax.Precision.HIGHEST)[0]
     out_ref[...] += contrib
 
 

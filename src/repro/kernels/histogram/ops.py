@@ -1,16 +1,14 @@
 """Jitted wrapper: Pallas on TPU, oracle on CPU (numerically identical)."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels import on_tpu
 from repro.kernels.histogram.kernel import histogram_pallas
 from repro.kernels.histogram.ref import histogram_ref
 
 
 def histogram(ids, weights, *, C: int, use_kernel: bool = None):
-    on_tpu = jax.default_backend() == "tpu"
     if use_kernel is None:
-        use_kernel = on_tpu
+        use_kernel = on_tpu()
     if use_kernel:
-        return histogram_pallas(ids, weights, C=C, interpret=not on_tpu)
+        return histogram_pallas(ids, weights, C=C, interpret=not on_tpu())
     return histogram_ref(ids, weights, C=C)

@@ -60,6 +60,11 @@ class PICConfig:
     lb_every: int = 10
     strategy: str = "diff-comm"
     strategy_kwargs: Optional[Dict] = None
+    # sweeps per fused diffusion block inside the planner (stage 2); None
+    # keeps the engine default.  Plumbed into the diff-* strategies only —
+    # the scanned path's lax.cond-gated planning then runs the chunked
+    # virtual-LB loop (kernels/diffusion fused kernel on TPU).
+    sweep_chunk: Optional[int] = None
     bytes_per_particle: float = 48.0
     seed: int = 0
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
@@ -117,6 +122,11 @@ class PICResult:
 
 
 def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
+    if cfg.sweep_chunk is not None and cfg.strategy.startswith("diff"):
+        cfg = dataclasses.replace(
+            cfg, sweep_chunk=None,
+            strategy_kwargs={**(cfg.strategy_kwargs or {}),
+                             "sweep_chunk": cfg.sweep_chunk})
     use_scan = cfg.scan
     if use_scan and not core_engine.get_strategy(cfg.strategy).jittable:
         raise ValueError(

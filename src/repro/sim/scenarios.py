@@ -94,6 +94,50 @@ def available() -> Tuple[str, ...]:
     return tuple(sorted(SCENARIOS))
 
 
+def batch_instances(batch: int = 16, *, grid: int = 16, num_nodes: int = 16):
+    """B ``(name, problem, evolve)`` instances at one common shape.
+
+    Feeds the batched replay layers (``simulator.run_series_batch``): every
+    registered scenario is instantiated at the same ``(N, P)`` envelope —
+    the stencil family at ``grid²`` objects / ``num_nodes`` nodes, the PIC
+    proxy at a ``grid×grid`` chare array over ``num_nodes`` PEs — and
+    replicas beyond one-per-scenario vary workload parameters (period,
+    dwell, churn seed, density) so the B lanes are genuinely independent
+    problems, not copies.  Edge-list lengths may still differ; the batch
+    stacker pads them.
+
+    Raises for a registered scenario without a common-shape variant entry
+    below: the batched benchmarks claim full-registry coverage, so a new
+    scenario must be taught its shape here rather than silently dropped.
+    """
+    variants = {
+        "stencil-wave": lambda v: dict(
+            grid=grid, num_nodes=num_nodes, period=40 + 10 * v,
+            amp=6.0 + 2.0 * v),
+        "adversarial-hotspot": lambda v: dict(
+            grid=grid, num_nodes=num_nodes, dwell=6 + 2 * v, seed=v),
+        "bimodal-churn": lambda v: dict(
+            grid=grid, num_nodes=num_nodes, churn_every=4 + v, seed=v),
+        "pic-geometric": lambda v: dict(
+            cx=grid, cy=grid, num_pes=num_nodes, rho=0.85 + 0.03 * v,
+            n_particles=20_000.0),
+    }
+    missing = sorted(set(SCENARIOS) - set(variants))
+    if missing:
+        raise ValueError(
+            f"scenarios {missing} have no common-shape variant entry in "
+            "batch_instances; add one so the batched sweeps keep covering "
+            "the whole registry")
+    names = sorted(SCENARIOS)
+    out = []
+    for i in range(batch):
+        name = names[i % len(names)]
+        problem, evolve = SCENARIOS[name].instantiate(
+            **variants[name](i // len(names)))
+        out.append((name, problem, evolve))
+    return out
+
+
 # ------------------------------------------------------------ stencil wave --
 
 

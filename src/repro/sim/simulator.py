@@ -17,6 +17,13 @@ with periodic rebalancing (used by the PIC driver and Fig 4/5 benchmarks).
     scenarios) pay tracing once.
   * **host loop** — the legacy eager path, kept for the NumPy baselines
     (greedy, metis, ...) and for host-side ``evolve`` callables.
+
+``run_series_batch`` is the third path: B independent workloads at a
+common shape (e.g. every registered scenario from ``sim/scenarios.py``,
+via ``scenarios.batch_instances``) replayed in **one** vmapped scan — a
+single compiled call plans and evolves all B lanes per step instead of a
+Python loop over scenarios, with the stacked problem buffers donated to
+the executable on accelerators.
 """
 from __future__ import annotations
 
@@ -209,6 +216,174 @@ def _canonical(problem: comm_graph.LBProblem) -> comm_graph.LBProblem:
         coords=None if problem.coords is None
         else jnp.asarray(problem.coords, jnp.float32),
     )
+
+
+# ---------------------------------------------------------- batched path --
+
+
+@dataclasses.dataclass
+class BatchSeriesResult:
+    """One vmapped replay of B workloads: per-lane series + batch wall."""
+
+    series: List[SeriesResult]   # one per input instance, in order
+    wall_seconds: float          # wall time of the whole batched replay
+    steps: int
+
+    @property
+    def batch(self) -> int:
+        return len(self.series)
+
+    @property
+    def lane_steps_per_sec(self) -> float:
+        """Aggregate throughput: (B × T) scenario-steps per second."""
+        return self.batch * self.steps / max(self.wall_seconds, 1e-12)
+
+
+def _shape_preserving(evolve):
+    """Wrap ``evolve`` to keep the batch's padded edge envelope.
+
+    Inside the batched scan each lane's problem carries edge lists padded
+    to the batch-wide maximum; an evolve that rebuilds ``edges_bytes`` at
+    its native length (the PIC proxy) would otherwise shrink the carry.
+    Re-pads with the standard (-1, -1, 0.0) edge padding."""
+
+    def ev(p, t):
+        q = evolve(p, t)
+        fixes = {}
+        for field, fill in (("edges_src", -1), ("edges_dst", -1),
+                            ("edges_bytes", 0.0)):
+            old, new = getattr(p, field), getattr(q, field)
+            if new.shape != old.shape:
+                fixes[field] = jnp.pad(
+                    jnp.asarray(new, old.dtype),
+                    (0, old.shape[0] - new.shape[0]), constant_values=fill)
+        return dataclasses.replace(q, **fixes) if fixes else q
+
+    return ev
+
+
+@functools.lru_cache(maxsize=16)
+def _batched_runner(evolves: tuple, lane_branch: tuple, steps: int,
+                    lb_every: int, strategy: str, kw_items: tuple):
+    """Compile-once vmapped scan over B lanes × ``steps`` steps.
+
+    ``evolves`` are the distinct evolve closures (``lax.switch`` branches);
+    ``lane_branch[b]`` maps lane b to its branch.  Cached on the closure
+    identities + replay shape, so re-running the same batch reuses the
+    executable."""
+    strat = engine.get_strategy(strategy)
+    plan = strat.bind(**dict(kw_items))
+    do_lb_at_all = strategy != "none" and lb_every > 0
+    branches = [_shape_preserving(ev) for ev in evolves]
+
+    # lane→evolve is static, so lanes are grouped per distinct evolve and
+    # each group vmapped over its slice — a lax.switch on a vmapped index
+    # would instead run *every* branch for *every* lane (O(B²) evolve work)
+    groups = sorted(
+        (b, tuple(l for l, lb in enumerate(lane_branch) if lb == b))
+        for b in set(lane_branch))
+    order = [l for _, lanes in groups for l in lanes]
+    inv_order = jnp.asarray(np.argsort(order), jnp.int32)
+    single = len(groups) == 1
+
+    def evolve_all(ps, t):
+        if single:
+            return jax.vmap(lambda p: branches[0](p, t))(ps)
+        parts = [
+            jax.vmap(lambda p, b=b: branches[b](p, t))(
+                jax.tree_util.tree_map(
+                    lambda a, lanes=lanes: a[jnp.asarray(lanes)], ps))
+            for b, lanes in groups
+        ]
+        merged = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        return jax.tree_util.tree_map(lambda a: a[inv_order], merged)
+
+    def run(problems):
+        def step(ps, t):
+            ps = evolve_all(ps, t)
+            if do_lb_at_all:
+                # the LB-period predicate is uniform across lanes, so the
+                # cond stays *outside* the vmap — a per-lane cond would
+                # batch into a select that runs the planner every step
+                do = (t > 0) & (t % lb_every == 0)
+                prev = ps.assignment                       # (B, N)
+                new_assignment = jax.lax.cond(
+                    do,
+                    lambda ps: jax.vmap(plan)(ps)[0].astype(jnp.int32),
+                    lambda ps: ps.assignment.astype(jnp.int32),
+                    ps,
+                )
+                moved = jnp.where(
+                    do,
+                    jnp.mean((new_assignment != prev).astype(jnp.float32),
+                             axis=1),
+                    jnp.zeros(prev.shape[0], jnp.float32))
+                ps = ps.with_assignment(new_assignment)
+            else:
+                moved = jnp.zeros(ps.assignment.shape[0], jnp.float32)
+            m = jax.vmap(metrics.evaluate_device)(ps)
+            return ps, (m.max_avg_load, m.ext_int_comm, moved)
+
+        return jax.lax.scan(step, problems, jnp.arange(steps))
+
+    # the stacked carry is staged by run_series_batch and never reused —
+    # donate it where the backend supports donation (not CPU XLA)
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(run, donate_argnums=donate)
+
+
+def run_series_batch(
+    instances: Sequence,
+    *,
+    steps: int,
+    lb_every: int,
+    strategy: str = "diff-comm",
+    strategy_kwargs: Optional[Dict] = None,
+) -> BatchSeriesResult:
+    """Replay B workloads in one vmapped scan (one compiled call).
+
+    ``instances`` is a sequence of ``(problem, evolve)`` pairs — or
+    ``(name, problem, evolve)`` triples as produced by
+    ``scenarios.batch_instances`` — at a common ``(num_nodes, num_objects)``
+    shape (edge lists are padded to the longest).  Every ``evolve`` must be
+    scan-safe and the strategy jittable; distinct evolves become
+    ``lax.switch`` branches selected per lane."""
+    strategy_kwargs = strategy_kwargs or {}
+    strat = engine.get_strategy(strategy)
+    if not strat.jittable:
+        raise ValueError(
+            f"strategy {strategy!r} is not jittable; the batched replay "
+            "needs a traceable plan_fn (diff-* / none)")
+    pairs = [inst[-2:] for inst in instances]
+    for _, ev in pairs:
+        if not getattr(ev, "jittable", False):
+            raise ValueError(
+                "every evolve in a batched replay must be scan-safe "
+                "(scenarios from sim/scenarios.py are)")
+    uniq: List = []
+    lane_branch = []
+    for _, ev in pairs:
+        if ev not in uniq:
+            uniq.append(ev)
+        lane_branch.append(uniq.index(ev))
+    runner = _batched_runner(
+        tuple(uniq), tuple(lane_branch), steps, lb_every, strategy,
+        tuple(sorted(strategy_kwargs.items())))
+    stacked = comm_graph.stack_problems(
+        [_canonical(p) for p, _ in pairs])
+    t_start = time.perf_counter()
+    _final, (ma, ei, mig) = runner(stacked)
+    ma, ei, mig = jax.device_get((ma, ei, mig))   # (T, B) each
+    wall = time.perf_counter() - t_start
+    series = [
+        SeriesResult(np.asarray(ma[:, b], np.float64),
+                     np.asarray(ei[:, b], np.float64),
+                     np.asarray(mig[:, b], np.float64),
+                     wall, scanned=True, wall_seconds=wall)
+        for b in range(len(pairs))
+    ]
+    return BatchSeriesResult(series, wall, steps)
 
 
 def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,

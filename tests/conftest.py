@@ -18,3 +18,25 @@ def ring_neighbors(P: int, hops: int = 1):
     nbr = np.stack(cols, axis=1).astype(np.int32)
     mask = np.ones_like(nbr, bool)
     return nbr, mask
+
+
+def random_symmetric_graph(P: int, K: int, seed: int):
+    """Random symmetric K-regular-ish padded neighbor table (test helper).
+
+    Greedily pairs nodes until slots fill: whenever i lists j, j lists i,
+    so the reverse-slot identity holds on every masked entry.  Returns
+    (nbr (P, K) i32 -1-padded, mask (P, K) bool) as numpy arrays."""
+    rng = np.random.default_rng(seed)
+    nbr = np.full((P, K), -1, np.int32)
+    mask = np.zeros((P, K), bool)
+    deg = np.zeros(P, np.int64)
+    for idx in rng.permutation(P * P):
+        i, j = divmod(int(idx), P)
+        if i >= j or deg[i] >= K or deg[j] >= K:
+            continue
+        nbr[i, deg[i]] = j
+        nbr[j, deg[j]] = i
+        mask[i, deg[i]] = mask[j, deg[j]] = True
+        deg[i] += 1
+        deg[j] += 1
+    return nbr, mask

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api, engine, metrics
+from repro.core import api, comm_graph, engine, metrics
 from repro.pic import driver
 from repro.sim import scenarios, simulator, stencil, synthetic
 
@@ -97,6 +97,64 @@ def test_zero_stats_dtypes_match_plan_stats():
     zero = engine.zero_stats()
     for a, b in zip(stats, zero):
         assert jnp.asarray(a).dtype == jnp.asarray(b).dtype
+
+
+# --------------------------------------------------------- batched path --
+
+
+def test_stack_problems_pads_edges_and_stacks_leaves():
+    probs = [p for _, p, _ in scenarios.batch_instances(4)]
+    stacked = comm_graph.stack_problems(probs)
+    E = max(p.num_edges for p in probs)
+    assert stacked.loads.shape == (4,) + probs[0].loads.shape
+    assert stacked.edges_src.shape == (4, E)
+    assert stacked.num_nodes == probs[0].num_nodes
+    # padding slots carry the standard (-1, -1, 0.0) convention
+    for b, p in enumerate(probs):
+        pad = np.asarray(stacked.edges_src[b, p.num_edges:])
+        assert (pad == -1).all()
+        assert (np.asarray(stacked.edges_bytes[b, p.num_edges:]) == 0).all()
+
+
+def test_stack_problems_rejects_mixed_shapes():
+    a = stencil.stencil_2d(8, 8, 4)
+    b = stencil.stencil_2d(12, 12, 4)
+    with pytest.raises(ValueError, match="common"):
+        comm_graph.stack_problems([a, b])
+
+
+def test_plan_batch_matches_per_problem_plans():
+    probs = [synthetic.hotspot(stencil.stencil_2d(12, 12, 9), node=n,
+                               factor=f)
+             for n, f in [(0, 6.0), (3, 2.0), (5, 9.0)]]
+    eng = engine.get_engine(k=4)
+    plans = eng.plan_batch(probs)
+    assert len(plans) == 3
+    for p, plan in zip(probs, plans):
+        single = api.diffusion_lb(p, k=4).assignment
+        np.testing.assert_array_equal(plan.assignment, single)
+        assert plan.info["batch_size"] == 3
+
+
+def test_run_series_batch_matches_single_lane_replays():
+    inst = scenarios.batch_instances(4, grid=8, num_nodes=4)
+    kw = dict(steps=12, lb_every=4, strategy="diff-comm",
+              strategy_kwargs=dict(k=2))
+    bres = simulator.run_series_batch(inst, **kw)
+    assert bres.batch == 4 and bres.steps == 12
+    for (_, p, ev), lane in zip(inst, bres.series):
+        single = simulator.run_series(p, ev, scan=True, **kw)
+        np.testing.assert_allclose(single.max_avg, lane.max_avg, rtol=1e-4)
+        np.testing.assert_allclose(single.ext_int, lane.ext_int, rtol=1e-4)
+        np.testing.assert_allclose(single.migrations, lane.migrations,
+                                   atol=1e-6)
+
+
+def test_run_series_batch_rejects_host_strategy():
+    inst = scenarios.batch_instances(2, grid=8, num_nodes=4)
+    with pytest.raises(ValueError, match="jittable"):
+        simulator.run_series_batch(inst, steps=4, lb_every=2,
+                                   strategy="greedy")
 
 
 # -------------------------------------------------------- scanned replay --
@@ -187,6 +245,19 @@ def test_pic_scanned_matches_host_loop():
     np.testing.assert_allclose(host.migrated_bytes, scan.migrated_bytes,
                                rtol=1e-5)
     np.testing.assert_allclose(host.final_x, scan.final_x, atol=1e-3)
+
+
+def test_pic_sweep_chunk_config_is_result_invariant():
+    """PICConfig.sweep_chunk reaches the planner through strategy_kwargs
+    and must not change any trajectory (chunking is bit-for-bit)."""
+    base = dict(L=100, n_particles=2000, steps=16, k=1, rho=0.9, cx=8,
+                cy=8, num_pes=4, mapping="striped", lb_every=5, seed=0,
+                strategy="diff-comm", strategy_kwargs=dict(k=2), scan=True)
+    r_def = driver.run(driver.PICConfig(**base))
+    r_chk = driver.run(driver.PICConfig(sweep_chunk=32, **base))
+    np.testing.assert_array_equal(r_def.max_avg, r_chk.max_avg)
+    np.testing.assert_array_equal(r_def.migrations, r_chk.migrations)
+    np.testing.assert_array_equal(r_def.final_x, r_chk.final_x)
 
 
 def test_pic_scan_chunking_invariant():

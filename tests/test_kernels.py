@@ -5,35 +5,32 @@ import numpy as np
 import pytest
 from tests._hyp import given, settings, st
 
-from repro.core.virtual_lb import reference_sweep, reverse_slots
-from repro.kernels.diffusion.kernel import diffusion_sweep_pallas
+from repro.core.virtual_lb import (
+    neighborhood_residual,
+    reference_sweep,
+    reverse_slots,
+)
+from repro.kernels.diffusion import ops as diffusion_ops
+from repro.kernels.diffusion.kernel import (
+    diffusion_nsweeps_pallas,
+    diffusion_sweep_pallas,
+)
+from repro.kernels.diffusion.ref import diffusion_nsweeps_ref
 from repro.kernels.histogram.kernel import histogram_pallas
 from repro.kernels.histogram.ref import histogram_ref
 from repro.kernels.pic_push.kernel import pic_push_pallas
 from repro.kernels.pic_push.ref import pic_push_ref
 from repro.pic.grid import alternating_grid
 from repro.pic.particles import initialize
+from tests.conftest import random_symmetric_graph
 
 
 # --------------------------------------------------------------- diffusion --
 
 
 def _graph(P, K, seed):
-    """Random symmetric K-regular-ish neighbor table."""
-    rng = np.random.default_rng(seed)
-    nbr = np.full((P, K), -1, np.int32)
-    mask = np.zeros((P, K), bool)
-    deg = np.zeros(P, np.int64)
-    order = rng.permutation(P * P)
-    for idx in order:
-        i, j = divmod(int(idx), P)
-        if i >= j or deg[i] >= K or deg[j] >= K:
-            continue
-        nbr[i, deg[i]] = j
-        nbr[j, deg[j]] = i
-        mask[i, deg[i]] = mask[j, deg[j]] = True
-        deg[i] += 1
-        deg[j] += 1
+    """Random symmetric K-regular-ish neighbor table (device arrays)."""
+    nbr, mask = random_symmetric_graph(P, K, seed)
     return jnp.asarray(nbr), jnp.asarray(mask)
 
 
@@ -68,6 +65,101 @@ def test_property_diffusion_kernel_conserves(P, K, seed):
     np.testing.assert_allclose(float(jnp.sum(xn)), float(jnp.sum(x)),
                                rtol=1e-4)
     assert (np.asarray(xn) >= -1e-4).all()
+
+
+# ------------------------------------------------------- fused multi-sweep --
+
+
+def _nsweeps_args(P, K, seed=0):
+    nbr, mask = _graph(P, K, seed=P + K)
+    rev = reverse_slots(nbr, mask)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(P).astype(np.float32) * 10)
+    own = x * 0.7
+    flow = jnp.zeros((P, K), jnp.float32)
+    res0 = neighborhood_residual(x, nbr, mask)
+    return x, own, flow, res0, nbr, mask, rev
+
+
+@pytest.mark.parametrize("P,K,S", [
+    (16, 2, 1), (16, 2, 4), (64, 4, 8), (100, 4, 3), (257, 8, 6),
+])
+@pytest.mark.parametrize("single_hop", [True, False])
+def test_nsweeps_kernel_bit_for_bit_vs_iterated_reference(P, K, S,
+                                                          single_hop):
+    """The fused S-sweep kernel must equal S iterated reference sweeps
+    *bit-for-bit* (interpret mode): same values, not just close ones —
+    the chunked loop is a compilation strategy, not a different scheme.
+    tol=-1 keeps every sweep active so all S sweeps actually run."""
+    x, own, flow, res0, nbr, mask, rev = _nsweeps_args(P, K)
+    alpha = 1.0 / (K + 1.0)
+    got = diffusion_nsweeps_pallas(
+        x, own, flow, jnp.int32(0), res0, jnp.int32(0), nbr, mask, rev,
+        alpha, n_sweeps=S, single_hop=single_hop, tol=-1.0,
+        max_iters=10 ** 6, interpret=True)
+    xs, os_, fl = x, own, flow
+    for _ in range(S):
+        xs, os_, df = reference_sweep(xs, os_, nbr, mask, rev,
+                                      jnp.float32(alpha), single_hop)
+        fl = fl + df
+    for a, b in zip(got[:3], (xs, os_, fl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(got[3]) == S
+
+
+@pytest.mark.parametrize("P,K,S,tol", [
+    (32, 3, 4, 0.02), (64, 4, 8, 0.1), (100, 4, 16, 0.02),
+])
+@pytest.mark.parametrize("single_hop", [True, False])
+def test_nsweeps_kernel_early_exit_parity(P, K, S, tol, single_hop):
+    """With a realistic tol the kernel's device-side early exit must make
+    the same per-sweep decisions as the reference chunk: identical carry
+    (x/own/flow) *and* identical iteration/stall/residual bookkeeping."""
+    x, own, flow, res0, nbr, mask, rev = _nsweeps_args(P, K)
+    alpha = jnp.float32(1.0 / (K + 1.0))
+    args = (x, own, flow, jnp.int32(0), res0, jnp.int32(0), nbr, mask, rev,
+            alpha)
+    kw = dict(n_sweeps=S, single_hop=single_hop, tol=tol, max_iters=512)
+    got = diffusion_nsweeps_pallas(*args, interpret=True, **kw)
+    want = diffusion_nsweeps_ref(*args, **kw)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nsweeps_kernel_resumes_mid_convergence():
+    """Chunk boundaries carry (it, res, stall) through: two chained 4-sweep
+    kernel calls equal one 8-sweep call."""
+    P, K = 48, 3
+    x, own, flow, res0, nbr, mask, rev = _nsweeps_args(P, K)
+    alpha = jnp.float32(1.0 / (K + 1.0))
+    kw = dict(single_hop=True, tol=0.02, max_iters=512, interpret=True)
+    one = diffusion_nsweeps_pallas(
+        x, own, flow, jnp.int32(0), res0, jnp.int32(0), nbr, mask, rev,
+        alpha, n_sweeps=8, **kw)
+    half = diffusion_nsweeps_pallas(
+        x, own, flow, jnp.int32(0), res0, jnp.int32(0), nbr, mask, rev,
+        alpha, n_sweeps=4, **kw)
+    two = diffusion_nsweeps_pallas(
+        *half, nbr, mask, rev, alpha, n_sweeps=4, **kw)
+    for a, b in zip(one, two):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sweep_impl_selection_rule():
+    """Non-TPU backends take the compiled reference chunk; the documented
+    VMEM budget splits fused vs streaming on TPU."""
+    from repro.kernels import on_tpu
+
+    small, huge = (4096, 8), (1_000_000, 8)
+    if on_tpu():
+        assert diffusion_ops.sweep_impl(*small) == "fused"
+        assert diffusion_ops.sweep_impl(*huge) == "streaming"
+    else:
+        assert diffusion_ops.sweep_impl(*small) == "reference"
+        assert diffusion_ops.sweep_impl(*huge) == "reference"
+    assert (diffusion_ops.fused_vmem_bytes(*small)
+            <= diffusion_ops.FUSED_VMEM_BUDGET
+            < diffusion_ops.fused_vmem_bytes(*huge))
 
 
 # --------------------------------------------------------------- histogram --

@@ -5,7 +5,7 @@ import pytest
 from tests._hyp import given, settings, st
 
 from repro.core import virtual_lb as vlb
-from tests.conftest import ring_neighbors
+from tests.conftest import random_symmetric_graph, ring_neighbors
 
 
 def _balance(loads, nbr, mask, **kw):
@@ -121,6 +121,52 @@ def test_reverse_slots_asymmetric_table_stays_in_range():
     assert ((rev >= 0) & (rev < K)).all()
     # the symmetric pair 0<->1 is still correctly inverted
     assert rev[0, 0] == 0 and rev[1, 0] == 0
+
+
+@pytest.mark.parametrize("chunks", [(1, 8), (1, 64), (3, 8)])
+def test_virtual_balance_chunk_size_invariant(chunks):
+    """The chunked fixed-point loop is a compilation strategy: results —
+    loads, flows, iteration count, residual — are bit-for-bit independent
+    of sweep_chunk (the per-sweep activity mask replicates the per-sweep
+    while_loop decisions exactly)."""
+    a, b = chunks
+    P = 32
+    nbr, mask = ring_neighbors(P, hops=2)
+    rng = np.random.default_rng(7)
+    loads = rng.random(P).astype(np.float32) * 10
+    ra = _balance(loads, nbr, mask, sweep_chunk=a)
+    rb = _balance(loads, nbr, mask, sweep_chunk=b)
+    for x, y in zip(ra, rb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_virtual_balance_chunk_fn_matches_default():
+    """The kernels-layer chunk_fn (auto-dispatching) must reproduce the
+    pure-core default exactly on this backend."""
+    from repro.kernels.diffusion import ops as dops
+
+    P = 24
+    nbr, mask = ring_neighbors(P, hops=1)
+    loads = np.random.default_rng(3).random(P).astype(np.float32) * 5
+    base = _balance(loads, nbr, mask)
+    fused = _balance(loads, nbr, mask, chunk_fn=dops.diffusion_nsweeps)
+    for x, y in zip(base, fused):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=15, deadline=None)
+@given(P=st.integers(6, 60), K=st.integers(1, 6), seed=st.integers(0, 500))
+def test_property_reverse_slots_inverts_random_symmetric_graphs(P, K, seed):
+    """On any symmetric padded table: masked entries invert the table
+    (nbr[nbr[i,k], rev[i,k]] == i), every slot index is in range, and
+    padded entries are exactly 0."""
+    nbr, mask = random_symmetric_graph(P, K, seed)
+    rev = np.asarray(vlb.reverse_slots(jnp.asarray(nbr), jnp.asarray(mask)))
+    assert rev.dtype == np.int32
+    assert ((rev >= 0) & (rev < K)).all()
+    assert (rev[~mask] == 0).all()
+    ii, kk = np.nonzero(mask)
+    assert (nbr[nbr[ii, kk], rev[ii, kk]] == ii).all()
 
 
 def test_stall_exit_fires():
