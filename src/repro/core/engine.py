@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, comm_graph
+from repro.core import baselines, comm_graph, hierarchical
 from repro.core import neighbor_selection as ns
 from repro.core import object_selection as osel
 from repro.core import virtual_lb as vlb
@@ -89,6 +89,7 @@ class LBEngine:
         single_hop: bool = True,
         step_fn: Optional[Callable] = None,
         sweep_chunk: int = 8,
+        threads_per_node: Optional[int] = None,
     ):
         if variant not in ("comm", "coord"):
             raise ValueError(f"unknown variant {variant!r}")
@@ -100,6 +101,9 @@ class LBEngine:
         self.single_hop = bool(single_hop)
         self.step_fn = step_fn
         self.sweep_chunk = int(sweep_chunk)
+        # optional stage 4 (paper §III.D): within-node LPT across T threads
+        self.threads_per_node = (None if threads_per_node is None
+                                 else int(threads_per_node))
         # production stage-2 path: the fused S-sweep chunk (auto-selected
         # fused/streaming/reference in kernels/diffusion/ops.py); an
         # explicit step_fn opts out and runs per-sweep inside the chunk.
@@ -107,6 +111,8 @@ class LBEngine:
                          if step_fn is None else None)
         self._jitted = jax.jit(self.plan_fn)
         self._jitted_batch = jax.jit(self.plan_batch_fn)
+        self._jitted_hier = (jax.jit(self.plan_hier_fn)
+                             if self.threads_per_node else None)
         # donating variant: only for batches plan_batch stages itself — a
         # caller-owned pre-stacked batch must survive the call.  CPU XLA
         # has no donation.
@@ -162,6 +168,37 @@ class LBEngine:
         )
         return sres.assignment.astype(jnp.int32), stats
 
+    # ------------------------------------------------- hierarchical stage --
+
+    def plan_hier_fn(
+        self, problem: comm_graph.LBProblem
+    ) -> Tuple[jax.Array, jax.Array, PlanStats]:
+        """Two-level placement: :meth:`plan_fn` + within-node LPT (§III.D).
+
+        Returns ``(assignment (N,), thread (N,), stats)`` where
+        ``thread[o] ∈ [0, threads_per_node)`` and the global PE id is
+        ``assignment * T + thread``.  Traceable like :meth:`plan_fn`
+        (the LPT is a vectorized device loop — ``hierarchical.lpt_threads``),
+        so the scanned replay layers can emit thread placements without
+        leaving device.  Requires ``threads_per_node`` to be configured.
+        """
+        if not self.threads_per_node:
+            raise ValueError(
+                "plan_hier_fn needs threads_per_node set on the engine "
+                "(get_engine(..., threads_per_node=T))")
+        assignment, stats = self.plan_fn(problem)
+        thread = hierarchical.lpt_threads(
+            problem.loads, assignment,
+            num_nodes=problem.num_nodes,
+            threads_per_node=self.threads_per_node)
+        return assignment, thread, stats
+
+    def plan_hier_batch_fn(
+        self, problems: comm_graph.LBProblem
+    ) -> Tuple[jax.Array, jax.Array, PlanStats]:
+        """Vmapped :meth:`plan_hier_fn` over a stacked problem batch."""
+        return jax.vmap(self.plan_hier_fn)(problems)
+
     # ------------------------------------------------------ batched path --
 
     def plan_batch_fn(
@@ -215,26 +252,71 @@ class LBEngine:
     # -------------------------------------------------------- host path --
 
     def plan(self, problem: comm_graph.LBProblem):
-        """Eager plan with wall-clock timing and the legacy info dict."""
-        from repro.core.api import LBPlan  # local import: api imports us
+        """Eager plan with wall-clock timing and the legacy info dict.
 
-        t0 = time.perf_counter()
-        assignment, stats = self._jitted(problem)
-        assignment = np.asarray(jax.device_get(assignment))
-        info = dict(
-            strategy=f"diff-{self.variant}",
-            k=self.k,
-            protocol_rounds=int(stats.protocol_rounds),
-            mean_degree=float(stats.mean_degree),
-            diffusion_iters=int(stats.diffusion_iters),
-            diffusion_residual=float(stats.diffusion_residual),
-            unrealized_flow=float(stats.unrealized_flow),
-            plan_seconds=time.perf_counter() - t0,
-        )
-        return LBPlan(assignment, info)
+        With ``threads_per_node`` configured, the returned ``info`` also
+        carries the two-level placement: ``thread`` ((N,) i32) and
+        ``threads_per_node`` (the global PE id of object ``o`` is
+        ``assignment[o] * T + thread[o]``)."""
+        return eager_plan(self, problem, f"diff-{self.variant}")
 
 
-@functools.lru_cache(maxsize=64)
+def eager_plan(eng, problem, strategy_name: str,
+               extra_info: Optional[Dict] = None):
+    """Shared eager planning body (``LBEngine`` and the mesh-sharded
+    ``distributed.lb_shard.ShardedLBEngine``): jitted dispatch — the
+    two-level variant when ``threads_per_node`` is configured — one
+    device transfer, wall-clock timing, and the legacy info dict."""
+    from repro.core.api import LBPlan  # local import: api imports us
+
+    t0 = time.perf_counter()
+    thread = None
+    if eng.threads_per_node:
+        assignment, thread, stats = eng._jitted_hier(problem)
+        thread = np.asarray(jax.device_get(thread))
+    else:
+        assignment, stats = eng._jitted(problem)
+    assignment = np.asarray(jax.device_get(assignment))
+    info = dict(
+        strategy=strategy_name,
+        k=eng.k,
+        **(extra_info or {}),
+        protocol_rounds=int(stats.protocol_rounds),
+        mean_degree=float(stats.mean_degree),
+        diffusion_iters=int(stats.diffusion_iters),
+        diffusion_residual=float(stats.diffusion_residual),
+        unrealized_flow=float(stats.unrealized_flow),
+        plan_seconds=time.perf_counter() - t0,
+    )
+    if thread is not None:
+        info.update(thread=thread, threads_per_node=eng.threads_per_node)
+    return LBPlan(assignment, info)
+
+
+_ENGINE_CACHE: Dict[tuple, LBEngine] = {}
+_ENGINE_CACHE_MAX = 64
+
+
+def _engine_key(cfg: Dict) -> tuple:
+    """Canonical hashable cache key: values coerced exactly as
+    ``LBEngine.__init__`` coerces them, so positional vs keyword spelling
+    and int/float spelling of the same configuration share one entry.  An
+    unhashable ``step_fn`` is keyed by identity (the cached engine holds a
+    strong reference, so the id stays valid for the entry's lifetime)."""
+    step_fn = cfg["step_fn"]
+    try:
+        hash(step_fn)
+    except TypeError:
+        step_fn = ("step_fn_id", id(step_fn))
+    return (
+        str(cfg["variant"]), int(cfg["k"]), float(cfg["tol"]),
+        int(cfg["max_iters"]), int(cfg["max_rounds"]),
+        bool(cfg["single_hop"]), step_fn, int(cfg["sweep_chunk"]),
+        None if cfg["threads_per_node"] is None
+        else int(cfg["threads_per_node"]),
+    )
+
+
 def get_engine(
     variant: str = "comm",
     k: int = 4,
@@ -244,11 +326,26 @@ def get_engine(
     single_hop: bool = True,
     step_fn: Optional[Callable] = None,
     sweep_chunk: int = 8,
+    threads_per_node: Optional[int] = None,
 ) -> LBEngine:
-    """Engine cache — one compiled planner per static configuration."""
-    return LBEngine(variant=variant, k=k, tol=tol, max_iters=max_iters,
-                    max_rounds=max_rounds, single_hop=single_hop,
-                    step_fn=step_fn, sweep_chunk=sweep_chunk)
+    """Engine cache — one compiled planner per static configuration.
+
+    Python's argument binding canonicalizes positional vs keyword
+    spelling, and ``_engine_key`` canonicalizes the values, so — unlike
+    the previous ``lru_cache`` — equivalent configurations share one
+    entry regardless of call spelling, and an unhashable ``step_fn``
+    does not raise."""
+    cfg = dict(variant=variant, k=k, tol=tol, max_iters=max_iters,
+               max_rounds=max_rounds, single_hop=single_hop,
+               step_fn=step_fn, sweep_chunk=sweep_chunk,
+               threads_per_node=threads_per_node)
+    key = _engine_key(cfg)
+    eng = _ENGINE_CACHE.get(key)
+    if eng is None:
+        eng = _ENGINE_CACHE[key] = LBEngine(**cfg)
+        while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:  # drop oldest entry
+            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+    return eng
 
 
 # ------------------------------------------------------ Strategy protocol --
@@ -290,7 +387,7 @@ class Strategy:
                     plan_seconds=time.perf_counter() - t0,
                     **{k: v for k, v in params.items()
                        if isinstance(v, (int, float, bool, str))})
-        if self.jittable and self.name.startswith("diff"):
+        if self.name.startswith("diff"):  # incl. the sharded variants
             info.update(
                 protocol_rounds=int(stats.protocol_rounds),
                 mean_degree=float(stats.mean_degree),

@@ -3,13 +3,98 @@
 After the inter-node stages commit (via "proxy tokens" in Charm++; via the
 final assignment array here), load is balanced across the ``T`` threads of
 each node considering *load only*, no communication.  We use exact LPT
-(longest-processing-time-first) per node — the planning set per node is
-small, so a host loop is appropriate; this phase is not jitted in Charm++
-either.
+(longest-processing-time-first) per node.
+
+:func:`lpt_threads` is the production implementation: a jittable,
+vectorized LPT that runs on device, so the engine can emit two-level
+(node, thread) placements inside ``jit`` / ``lax.scan`` / ``vmap``
+(``LBEngine.plan_hier_fn``, the scanned replay layers).  The classic
+sequential recurrence — "assign the next-heaviest object to the
+least-loaded thread" — is reformulated rank-parallel: objects are sorted
+once by ``(node, -load, index)`` (stable), giving every object a *rank*
+within its node, and a ``lax.while_loop`` over ranks assigns **every
+node's rank-r object in one step** (the per-node accumulator ``argmin``
+is a vectorized (P, T) reduction).  Sequential depth is therefore the
+largest per-node object count, not N.
+
+:func:`within_node_lpt` is the host NumPy reference, kept as the oracle.
+Both resolve ties identically — stable descending-load order (index
+breaks load ties) and ``argmin`` taking the lowest thread index — and
+both accumulate thread loads in float32 in the same order, so the two
+implementations agree bit-for-bit (tests/test_hierarchical.py).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "threads_per_node"))
+def lpt_threads(
+    loads: jax.Array,
+    assignment: jax.Array,
+    *,
+    num_nodes: int,
+    threads_per_node: int,
+) -> jax.Array:
+    """(N,) i32 thread index in [0, T) per object — exact per-node LPT.
+
+    Pure and traceable with static ``(num_nodes, threads_per_node)``;
+    safe under ``jit`` / ``lax.scan`` / ``lax.cond`` / ``vmap``.  Global
+    PE id of an object is ``assignment * T + thread``
+    (:func:`flatten_hierarchy`).
+    """
+    N = loads.shape[0]
+    P, T = int(num_nodes), int(threads_per_node)
+    loads = jnp.asarray(loads, jnp.float32)
+    assignment = jnp.asarray(assignment, jnp.int32)
+
+    # Stable (node asc, load desc, index asc) order: lexsort's last key is
+    # primary and the sort is stable, so equal loads keep index order.
+    order = jnp.lexsort((-loads, assignment))
+    counts = jax.ops.segment_sum(
+        jnp.ones(N, jnp.int32), assignment, num_segments=P)
+    starts = jnp.cumsum(counts) - counts                       # (P,)
+    max_rank = counts.max()
+
+    def cond(carry):
+        return carry[0] < max_rank
+
+    def body(carry):
+        r, acc, thread = carry
+        pos = jnp.clip(starts + r, 0, max(N - 1, 0))
+        obj = order[pos]                                       # (P,)
+        valid = r < counts                                     # (P,)
+        t = jnp.argmin(acc, axis=1).astype(jnp.int32)          # (P,)
+        add = jnp.where(valid, loads[obj], 0.0)
+        acc = acc.at[jnp.arange(P), t].add(add)
+        # out-of-range scatter indices are dropped, so invalid lanes
+        # (node exhausted; `obj` is a clipped duplicate) write nothing
+        thread = thread.at[jnp.where(valid, obj, N)].set(t, mode="drop")
+        return r + 1, acc, thread
+
+    init = (jnp.int32(0), jnp.zeros((P, T), jnp.float32),
+            jnp.zeros(N, jnp.int32))
+    _, _, thread = jax.lax.while_loop(cond, body, init)
+    return thread
+
+
+def thread_loads(
+    loads: jax.Array,
+    assignment: jax.Array,
+    thread: jax.Array,
+    *,
+    num_nodes: int,
+    threads_per_node: int,
+) -> jax.Array:
+    """(P*T,) total load per global PE (traceable)."""
+    pe = jnp.asarray(assignment) * threads_per_node + jnp.asarray(thread)
+    return jax.ops.segment_sum(
+        jnp.asarray(loads, jnp.float32), pe,
+        num_segments=num_nodes * threads_per_node)
 
 
 def within_node_lpt(
@@ -18,19 +103,17 @@ def within_node_lpt(
     num_nodes: int,
     threads_per_node: int,
 ) -> np.ndarray:
-    """Return (N,) thread index in [0, T) for every object.
-
-    Global PE id of an object is then ``assignment * T + thread``.
-    """
-    loads = np.asarray(loads, np.float64)
+    """Host NumPy LPT oracle — same ties, same f32 accumulation order as
+    :func:`lpt_threads` (stable descending sort; argmin lowest index)."""
+    loads = np.asarray(loads, np.float32)
     assignment = np.asarray(assignment)
     thread = np.zeros(assignment.shape[0], np.int32)
     for node in range(num_nodes):
         idx = np.nonzero(assignment == node)[0]
         if idx.size == 0:
             continue
-        order = idx[np.argsort(-loads[idx])]
-        tl = np.zeros(threads_per_node)
+        order = idx[np.argsort(-loads[idx], kind="stable")]
+        tl = np.zeros(threads_per_node, np.float32)
         for o in order:
             t = int(np.argmin(tl))
             tl[t] += loads[o]
@@ -39,5 +122,6 @@ def within_node_lpt(
 
 
 def flatten_hierarchy(assignment, thread, threads_per_node: int):
-    """Object→global-PE map from (node, thread)."""
-    return np.asarray(assignment) * threads_per_node + np.asarray(thread)
+    """Object→global-PE map from (node, thread).  Works on both NumPy and
+    JAX arrays (traceable)."""
+    return assignment * threads_per_node + thread

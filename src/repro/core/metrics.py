@@ -16,8 +16,17 @@ from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import comm_graph
+
+#: ``ext_int_comm`` sentinel for an all-external mapping (zero internal
+#: bytes).  The true ratio is unbounded; the previous ``ext / 1e-30``
+#: spelling produced ~1e30 garbage that poisoned benchmark JSON and every
+#: downstream mean.  1e6 is far above any physical ext/int ratio (paper
+#: Tables I/II top out near 10) yet finite and f32-exact, so aggregates
+#: stay meaningful and the condition remains detectable.
+EXT_INT_ALL_EXTERNAL = 1.0e6
 
 
 class StepMetrics(NamedTuple):
@@ -54,9 +63,14 @@ def evaluate_device(
     internal = jnp.where(src_n == dst_n, w, 0.0).sum()
 
     moved = jnp.mean((a != cur).astype(jnp.float32))
+    # zero internal bytes: finite documented sentinel (0 when ext is also
+    # zero — e.g. an edgeless problem — so "no comm at all" reads as 0)
+    ext_int = jnp.where(
+        internal > 0, ext / jnp.where(internal > 0, internal, 1.0),
+        jnp.where(ext > 0, EXT_INT_ALL_EXTERNAL, 0.0))
     return StepMetrics(
         max_avg_load=(nl.max() / avg).astype(jnp.float32),
-        ext_int_comm=(ext / (internal + 1e-30)).astype(jnp.float32),
+        ext_int_comm=ext_int.astype(jnp.float32),
         ext_bytes=ext.astype(jnp.float32),
         int_bytes=internal.astype(jnp.float32),
         pct_migrations=moved,
@@ -70,8 +84,17 @@ def evaluate(
     problem: comm_graph.LBProblem,
     assignment: Optional[jax.Array] = None,
 ) -> Dict[str, float]:
-    """Host dict view of :func:`evaluate_device` (legacy interface)."""
+    """Host dict view of :func:`evaluate_device` (legacy interface).
+
+    ``ext_int_comm`` is :data:`EXT_INT_ALL_EXTERNAL` when the mapping has
+    external but no internal bytes (and 0.0 when it has neither); every
+    value is guaranteed finite."""
     if assignment is not None:
         assignment = jnp.asarray(assignment)
     m = jax.device_get(evaluate_device(problem, assignment))  # one transfer
-    return {k: float(v) for k, v in m._asdict().items()}
+    out = {k: float(v) for k, v in m._asdict().items()}
+    # guard: no non-finite value may escape into benchmark JSON
+    for k, v in out.items():
+        if not np.isfinite(v):
+            out[k] = EXT_INT_ALL_EXTERNAL if v > 0 else 0.0
+    return out

@@ -61,7 +61,7 @@ def _segmented_take_while(
     return take
 
 
-@functools.partial(jax.jit, static_argnames=("metric",))
+@functools.partial(jax.jit, static_argnames=("metric", "score_psum_axis"))
 def select_objects(
     problem: comm_graph.LBProblem,
     nbr_idx: jax.Array,
@@ -70,8 +70,16 @@ def select_objects(
     *,
     metric: str = "comm",
     centroids: Optional[jax.Array] = None,
+    score_psum_axis: Optional[str] = None,
 ) -> SelectionResult:
-    """Pick objects realizing ``flows`` (stage-2 output, (P, K) net loads)."""
+    """Pick objects realizing ``flows`` (stage-2 output, (P, K) net loads).
+
+    ``score_psum_axis``: mesh axis name for the distributed planner
+    (``distributed/lb_shard.py``) — the problem's edge arrays are then the
+    *local shard* of an edge-sharded comm graph, and the per-phase comm
+    scores are completed with a ``lax.psum`` over that axis (loads /
+    assignment stay replicated).  ``None`` (default) is the single-device
+    path, unchanged."""
     N = problem.num_objects
     P, K = nbr_idx.shape
     loads = problem.loads
@@ -109,6 +117,8 @@ def select_objects(
                     jnp.where(hit, e_w, 0.0), a, num_segments=N)
 
             score = dir_score(e_src, e_dst) + dir_score(e_dst, e_src)
+            if score_psum_axis is not None:
+                score = jax.lax.psum(score, score_psum_axis)
         elif metric == "coord":
             assert problem.coords is not None, "coordinate variant needs coords"
             cent = _centroids(problem.coords, assignment, P)

@@ -85,7 +85,8 @@ def reference_sweep(x, own, nbr_idx, nbr_mask, rev, alpha, single_hop):
 
 
 def sweep_chunk_body(sweep, nbr_idx, nbr_mask, rev, alpha, single_hop,
-                     tol, max_iters):
+                     tol, max_iters, *, residual_fn=None, sum_fn=None,
+                     mean_abs_fn=None):
     """``(i, carry) -> carry`` applying one masked early-exit sweep.
 
     ``carry = (x, own, flow, it, res, stall)``.  The activity predicate is
@@ -96,16 +97,30 @@ def sweep_chunk_body(sweep, nbr_idx, nbr_mask, rev, alpha, single_hop,
     (:func:`reference_nsweeps`) and the fused Pallas kernel
     (``kernels/diffusion/kernel.py``), which keeps the two paths
     semantically identical by construction.
+
+    The three reduction hooks default to the local (single-device) forms;
+    the mesh-sharded planner (``distributed/lb_shard.py``) passes
+    collective equivalents (``psum``/``pmax`` over the node shards) so the
+    early-exit and stall decisions — the only global state in the loop —
+    are made on the same quantities, keeping the sharded and single-device
+    iteration counts identical by construction.
     """
+    if residual_fn is None:
+        residual_fn = lambda x2: neighborhood_residual(  # noqa: E731
+            x2, nbr_idx, nbr_mask)
+    if sum_fn is None:
+        sum_fn = lambda v: v.sum()                       # noqa: E731
+    if mean_abs_fn is None:
+        mean_abs_fn = lambda x2: jnp.abs(x2).mean()      # noqa: E731
 
     def body(_, carry):
         x, own, flow, it, res, stall = carry
         active = (it < max_iters) & (res > tol) & (stall < 3)
         x2, own2, df = sweep(x, own, nbr_idx, nbr_mask, rev, alpha,
                              single_hop)
-        moved = jnp.abs(x2 - x).sum()
-        stalled = moved <= 1e-6 * (jnp.abs(x2).mean() + 1e-30)
-        res2 = neighborhood_residual(x2, nbr_idx, nbr_mask)
+        moved = sum_fn(jnp.abs(x2 - x))
+        stalled = moved <= 1e-6 * (mean_abs_fn(x2) + 1e-30)
+        res2 = residual_fn(x2)
 
         def keep(new, old):
             return jnp.where(active, new, old)
@@ -132,16 +147,27 @@ def reference_nsweeps(x, own, flow, it, res, stall, nbr_idx, nbr_mask, rev,
                              (x, own, flow, it, res, stall))
 
 
+def neighborhood_deviation(x, xn, nbr_mask):
+    """(P,) max |load - neighborhood mean| over {i}∪N(i), given the
+    *pre-gathered* neighbor loads ``xn`` (P, K).
+
+    The local core of :func:`neighborhood_residual`, shared with the
+    mesh-sharded planner (``distributed/lb_shard.py``), whose ``xn``
+    arrives via the ppermute halo ring — keeping the two residuals
+    identical by construction."""
+    allx = jnp.concatenate([x[:, None], xn], axis=1)       # (P, K+1)
+    m = jnp.concatenate([jnp.ones_like(x[:, None], bool), nbr_mask], axis=1)
+    cnt = m.sum(axis=1)
+    mean = jnp.where(cnt > 0, (allx * m).sum(axis=1) / cnt, x)
+    return jnp.where(m, jnp.abs(allx - mean[:, None]), 0.0).max(axis=1)
+
+
 def neighborhood_residual(x, nbr_idx, nbr_mask):
     """max over nodes of (max deviation in {i}∪N(i)) / global mean load."""
     safe_nbr = jnp.where(nbr_mask, nbr_idx, 0)
     xn = jnp.where(nbr_mask, jnp.take(x, safe_nbr, axis=0, mode="clip"),
                    x[:, None])
-    allx = jnp.concatenate([x[:, None], xn], axis=1)       # (P, K+1)
-    m = jnp.concatenate([jnp.ones_like(x[:, None], bool), nbr_mask], axis=1)
-    cnt = m.sum(axis=1)
-    mean = jnp.where(cnt > 0, (allx * m).sum(axis=1) / cnt, x)
-    dev = jnp.where(m, jnp.abs(allx - mean[:, None]), 0.0).max(axis=1)
+    dev = neighborhood_deviation(x, xn, nbr_mask)
     gmean = x.mean() + 1e-30
     return (dev / gmean).max()
 

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import api as core_api
 from repro.core import engine as core_engine
+from repro.core import hierarchical
 from repro.kernels.histogram.ops import histogram
 from repro.kernels.pic_push.ops import pic_push
 from repro.pic import chares as ch
@@ -65,6 +66,11 @@ class PICConfig:
     # the scanned path's lax.cond-gated planning then runs the chunked
     # virtual-LB loop (kernels/diffusion fused kernel on TPU).
     sweep_chunk: Optional[int] = None
+    # two-level placement (paper §III.D): when set, every step also
+    # records max/avg particles per *global PE* ((num_pes × T) threads,
+    # chare→thread via the device-resident within-node LPT) in
+    # PICResult.thread_max_avg — computed inside the scan, no host trip.
+    threads_per_node: Optional[int] = None
     bytes_per_particle: float = 48.0
     seed: int = 0
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
@@ -110,6 +116,9 @@ class PICResult:
     final_y: np.ndarray
     scanned: bool = False
     wall_seconds: float = 0.0  # end-to-end wall time of the replay loop
+    # (T,) max/avg load over global PEs under the two-level (node,
+    # thread) placement; None unless PICConfig.threads_per_node was set
+    thread_max_avg: Optional[np.ndarray] = None
 
     def summary(self) -> Dict[str, float]:
         return dict(
@@ -151,6 +160,7 @@ def _chunk_runner(
     L: int, cx: int, cy: int, num_pes: int, k: int, vy0: float,
     lb_every: int, strategy: str, kw_items: tuple, bpp: float,
     use_kernel: Optional[bool], chunk_len: int,
+    threads_per_node: Optional[int] = None,
 ):
     """Compiled ``lax.scan`` over ``chunk_len`` device-resident PIC steps."""
     n_chares = cx * cy
@@ -203,7 +213,18 @@ def _chunk_runner(
             migf = jnp.float32(0.0)
             migb = jnp.float32(0.0)
 
-        ys = (ma, pe_max, ext, intra, migf, migb)
+        if threads_per_node:
+            thr = hierarchical.lpt_threads(
+                loads, assignment, num_nodes=num_pes,
+                threads_per_node=threads_per_node)
+            tl = hierarchical.thread_loads(
+                loads, assignment, thr, num_nodes=num_pes,
+                threads_per_node=threads_per_node)
+            tma = (tl.max() / (tl.mean() + 1e-30)).astype(jnp.float32)
+        else:
+            tma = jnp.float32(0.0)
+
+        ys = (ma, pe_max, ext, intra, migf, migb, tma)
         return (xn, yn, vxn, vyn, q, new_chare, assignment), ys
 
     def run_chunk(carry, ts):
@@ -254,14 +275,14 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
         runner = _chunk_runner(
             cfg.L, cfg.cx, cfg.cy, cfg.num_pes, cfg.k, cfg.vy0,
             cfg.lb_every, cfg.strategy, kw_items, cfg.bytes_per_particle,
-            cfg.use_kernel, n)
+            cfg.use_kernel, n, cfg.threads_per_node)
         carry, ys = runner(carry, jnp.arange(s, s + n))
         ys_host.append(jax.device_get(ys))   # host transfer per chunk only
     wall = time.perf_counter() - t_start
 
-    ma, pe_max, ext_b, int_b, mig, mig_bytes = (
+    ma, pe_max, ext_b, int_b, mig, mig_bytes, tma = (
         np.concatenate([np.asarray(c[i], np.float64) for c in ys_host])
-        for i in range(6))
+        for i in range(7))
 
     lb_steps = np.array([lb_on and t > 0 and t % cfg.lb_every == 0
                          for t in range(T)])
@@ -275,7 +296,8 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
     fx, fy = np.asarray(carry[0]), np.asarray(carry[1])
     return PICResult(ma, ext_b, int_b, mig, mig_bytes,
                      float(lb_est * lb_steps.sum()), step_s, fx, fy,
-                     scanned=True, wall_seconds=wall)
+                     scanned=True, wall_seconds=wall,
+                     thread_max_avg=(tma if cfg.threads_per_node else None))
 
 
 # --------------------------------------------------------------- host loop --
@@ -299,6 +321,7 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
     int_b = np.zeros(T)
     mig = np.zeros(T)
     mig_bytes = np.zeros(T)
+    tma = np.zeros(T)
     step_s = np.zeros(T)
     lb_seconds = 0.0
 
@@ -349,6 +372,20 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
             )
             assignment = new_assignment.astype(np.int32)
 
+        if cfg.threads_per_node:
+            # same device-resident LPT as the scanned path (f32 parity)
+            thr = hierarchical.lpt_threads(
+                jnp.asarray(loads, jnp.float32),
+                jnp.asarray(assignment, jnp.int32),
+                num_nodes=cfg.num_pes,
+                threads_per_node=cfg.threads_per_node)
+            tl = hierarchical.thread_loads(
+                jnp.asarray(loads, jnp.float32),
+                jnp.asarray(assignment, jnp.int32), thr,
+                num_nodes=cfg.num_pes,
+                threads_per_node=cfg.threads_per_node)
+            tma[t] = float(tl.max() / (tl.mean() + 1e-30))
+
         # modeled step time: slowest PE compute + boundary traffic + LB
         step_s[t] = (
             pe_loads.max() * cost.t_particle
@@ -359,4 +396,5 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
 
     return PICResult(ma, ext_b, int_b, mig, mig_bytes, lb_seconds, step_s,
                      np.asarray(x), np.asarray(y), scanned=False,
-                     wall_seconds=time.perf_counter() - t_start)
+                     wall_seconds=time.perf_counter() - t_start,
+                     thread_max_avg=(tma if cfg.threads_per_node else None))

@@ -143,8 +143,9 @@ def batch_instances(batch: int = 16, *, grid: int = 16, num_nodes: int = 16):
 
 def _stencil_wave(*, grid: int = 32, num_nodes: int = 16,
                   mapping: str = "tiled", period: int = 60,
-                  amp: float = 8.0):
-    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping)
+                  amp: float = 8.0, seed: int = 0):
+    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping,
+                                 seed=seed)
     coords = jnp.asarray(problem.coords)
     base = jnp.ones(grid * grid, jnp.float32)
     sigma2 = jnp.float32(2.0 * (grid / 8.0) ** 2)
@@ -165,7 +166,7 @@ register(Scenario(
     "load hotspot orbiting a 2D stencil grid (paper §V)",
     _stencil_wave,
     defaults=dict(grid=32, num_nodes=16, mapping="tiled", period=60,
-                  amp=8.0),
+                  amp=8.0, seed=0),
 ))
 
 
@@ -225,7 +226,9 @@ def _adversarial_hotspot(*, grid: int = 32, num_nodes: int = 16,
                          mapping: str = "tiled", dwell: int = 8,
                          amp: float = 12.0, n_sites: int = 16,
                          seed: int = 0):
-    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping)
+    # seed drives both the teleport sites and a "random" initial mapping
+    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping,
+                                 seed=seed)
     coords = jnp.asarray(problem.coords)
     rng = np.random.default_rng(seed)
     # teleport sites sampled once: far-apart corners-and-interior points
@@ -260,7 +263,9 @@ def _bimodal_churn(*, grid: int = 32, num_nodes: int = 16,
                    mapping: str = "tiled", heavy_frac: float = 0.1,
                    heavy_load: float = 20.0, churn_every: int = 5,
                    stride: int = 7919, seed: int = 0):
-    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping)
+    # seed drives both the churn permutation and a "random" initial mapping
+    problem = stencil.stencil_2d(grid, grid, num_nodes, mapping=mapping,
+                                 seed=seed)
     N = grid * grid
     rng = np.random.default_rng(seed)
     perm = jnp.asarray(rng.permutation(N).astype(np.int32))

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, comm_graph, engine, metrics
+from repro.core import api, comm_graph, engine, hierarchical, metrics
 
 
 @dataclasses.dataclass
@@ -92,6 +92,10 @@ class SeriesResult:
                                # scanned path: wall time of the whole replay
     scanned: bool = False
     wall_seconds: float = 0.0  # total replay wall time (both paths)
+    # (T,) per-step max/avg load across all P*T global PEs under the
+    # two-level (node, thread) placement — only when ``threads_per_node``
+    # was requested (None otherwise)
+    thread_max_avg: Optional[np.ndarray] = None
 
 
 def run_series(
@@ -103,13 +107,21 @@ def run_series(
     strategy: str = "diff-comm",
     strategy_kwargs: Optional[Dict] = None,
     scan: Optional[bool] = None,
+    threads_per_node: Optional[int] = None,
 ) -> SeriesResult:
     """Replay ``steps`` of a workload, rebalancing every ``lb_every`` steps.
 
     ``evolve(problem, t)`` advances loads/comm one application step while
     preserving the current assignment (the simulator's stand-in for the
     application's own dynamics).  ``scan=None`` auto-selects the scanned
-    path when both the strategy and ``evolve`` are jit-traceable."""
+    path when both the strategy and ``evolve`` are jit-traceable.
+
+    ``threads_per_node`` enables the two-level (node, thread) view (paper
+    §III.D): each step additionally records the max/avg load across all
+    ``P * T`` global PEs under the within-node LPT placement
+    (``hierarchical.lpt_threads`` — computed on device in the scanned
+    path) in ``SeriesResult.thread_max_avg``.  The batched replay
+    (``run_series_batch``) does not take it."""
     strategy_kwargs = strategy_kwargs or {}
     if scan:
         strat = engine.get_strategy(strategy)
@@ -127,20 +139,22 @@ def run_series(
     if scan:
         return _run_series_scanned(
             initial, evolve, steps=steps, lb_every=lb_every,
-            strategy=strategy, strategy_kwargs=strategy_kwargs)
+            strategy=strategy, strategy_kwargs=strategy_kwargs,
+            threads_per_node=threads_per_node)
     return _run_series_host(
         initial, evolve, steps=steps, lb_every=lb_every,
-        strategy=strategy, strategy_kwargs=strategy_kwargs)
+        strategy=strategy, strategy_kwargs=strategy_kwargs,
+        threads_per_node=threads_per_node)
 
 
 # ------------------------------------------------------------- host loop --
 
 
 def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
-                     strategy_kwargs) -> SeriesResult:
+                     strategy_kwargs, threads_per_node=None) -> SeriesResult:
     t_start = time.perf_counter()
     problem = initial
-    ma, ei, mig = [], [], []
+    ma, ei, mig, tma = [], [], [], []
     plan_s = 0.0
     for t in range(steps):
         problem = evolve(problem, t)
@@ -157,17 +171,36 @@ def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
         m = metrics.evaluate(problem)
         ma.append(m["max_avg_load"])
         ei.append(m["ext_int_comm"])
+        if threads_per_node:
+            tma.append(float(_thread_max_avg(
+                problem.loads, problem.assignment,
+                problem.num_nodes, threads_per_node)))
     return SeriesResult(np.array(ma), np.array(ei), np.array(mig), plan_s,
                         scanned=False,
-                        wall_seconds=time.perf_counter() - t_start)
+                        wall_seconds=time.perf_counter() - t_start,
+                        thread_max_avg=(np.array(tma) if threads_per_node
+                                        else None))
 
 
 # ---------------------------------------------------------- scanned path --
 
 
+def _thread_max_avg(loads, assignment, num_nodes: int,
+                    threads_per_node: int):
+    """Traceable max/avg PE load under the two-level LPT placement."""
+    thr = hierarchical.lpt_threads(
+        jnp.asarray(loads, jnp.float32),
+        jnp.asarray(assignment, jnp.int32),
+        num_nodes=num_nodes, threads_per_node=threads_per_node)
+    tl = hierarchical.thread_loads(
+        loads, assignment, thr, num_nodes=num_nodes,
+        threads_per_node=threads_per_node)
+    return (tl.max() / (tl.mean() + 1e-30)).astype(jnp.float32)
+
+
 @functools.lru_cache(maxsize=64)
 def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
-                    kw_items: tuple):
+                    kw_items: tuple, threads_per_node: Optional[int] = None):
     """Compile-once scan over the whole replay.
 
     Cache key: the evolve closure (identity), the static replay shape, and
@@ -196,7 +229,12 @@ def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
         else:
             moved = jnp.float32(0.0)
         m = metrics.evaluate_device(problem)
-        return problem, (m.max_avg_load, m.ext_int_comm, moved)
+        if threads_per_node:
+            tma = _thread_max_avg(problem.loads, problem.assignment,
+                                  problem.num_nodes, threads_per_node)
+        else:
+            tma = jnp.float32(0.0)
+        return problem, (m.max_avg_load, m.ext_int_comm, moved, tma)
 
     def run(problem):
         return jax.lax.scan(step, problem, jnp.arange(steps))
@@ -387,13 +425,14 @@ def run_series_batch(
 
 
 def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,
-                        strategy_kwargs) -> SeriesResult:
+                        strategy_kwargs,
+                        threads_per_node=None) -> SeriesResult:
     runner = _scanned_runner(
         evolve, steps, lb_every, strategy,
-        tuple(sorted(strategy_kwargs.items())))
+        tuple(sorted(strategy_kwargs.items())), threads_per_node)
     t_start = time.perf_counter()
     try:
-        _final, (ma, ei, mig) = runner(_canonical(initial))
+        _final, (ma, ei, mig, tma) = runner(_canonical(initial))
     except jax.errors.TracerArrayConversionError as e:
         # scan=True forced with a host-NumPy evolve: surface the cause
         # instead of the opaque tracer leak from inside lax.scan
@@ -401,8 +440,10 @@ def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,
             "the evolve callable is not jit-traceable (it converts traced "
             "arrays to NumPy); use scan=False or a pure-jnp evolve — "
             "scenarios from sim/scenarios.py are scan-safe") from e
-    ma, ei, mig = jax.device_get((ma, ei, mig))
+    ma, ei, mig, tma = jax.device_get((ma, ei, mig, tma))
     wall = time.perf_counter() - t_start
     return SeriesResult(np.asarray(ma, np.float64), np.asarray(ei, np.float64),
                         np.asarray(mig, np.float64), wall, scanned=True,
-                        wall_seconds=wall)
+                        wall_seconds=wall,
+                        thread_max_avg=(np.asarray(tma, np.float64)
+                                        if threads_per_node else None))

@@ -43,8 +43,12 @@ def stencil_2d(
     periodic: bool = True,
     bytes_per_edge: float = 1.0,
     base_load: float = 1.0,
+    seed: int = 0,
 ) -> comm_graph.LBProblem:
-    """One object per grid point, 5-point neighbor edges."""
+    """One object per grid point, 5-point neighbor edges.
+
+    ``seed`` drives the ``"random"`` mapping only (other mappings are
+    deterministic); the default 0 reproduces the legacy behavior."""
     N = nx * ny
     ii, jj = np.meshgrid(np.arange(nx), np.arange(ny), indexing="ij")
     ii, jj = ii.ravel(), jj.ravel()
@@ -64,7 +68,7 @@ def stencil_2d(
         edges.append(np.stack([src, dst], axis=1))
     edges = np.concatenate(edges)
 
-    assignment = _map_2d(ii, jj, nx, ny, num_nodes, mapping)
+    assignment = _map_2d(ii, jj, nx, ny, num_nodes, mapping, seed)
     return comm_graph.make_problem(
         loads=np.full(N, base_load, np.float32),
         assignment=assignment,
@@ -75,7 +79,7 @@ def stencil_2d(
     )
 
 
-def _map_2d(ii, jj, nx, ny, P, mapping):
+def _map_2d(ii, jj, nx, ny, P, mapping, seed=0):
     if mapping == "tiled":
         px, py = _factor2(P)
         tx = (ii * px // nx).clip(0, px - 1)
@@ -88,7 +92,7 @@ def _map_2d(ii, jj, nx, ny, P, mapping):
         # 1D ring of nodes along x (Table I setting)
         return (ii * P // nx).clip(0, P - 1).astype(np.int32)
     if mapping == "random":
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(seed)
         return rng.integers(0, P, ii.shape[0]).astype(np.int32)
     raise ValueError(f"unknown mapping {mapping!r}")
 
@@ -103,13 +107,15 @@ def stencil_3d(
     periodic: bool = True,
     bytes_per_edge: float = 1.0,
     base_load: float = 1.0,
+    seed: int = 0,
 ) -> comm_graph.LBProblem:
     """7-point 3D stencil (Table II benchmarks).
 
     ``mapping``: "tiled" (contiguous 3D blocks — near-optimal locality),
     "striped" (x-slabs: contiguous along x only — the poor-locality initial
     placement under which partitioners show their locality edge, cf. the
-    paper's striped PIC mapping §VI), or "random"."""
+    paper's striped PIC mapping §VI), or "random" (seeded by ``seed``;
+    default 0 reproduces the legacy behavior)."""
     N = nx * ny * nz
     ii, jj, kk = np.meshgrid(
         np.arange(nx), np.arange(ny), np.arange(nz), indexing="ij"
@@ -147,7 +153,7 @@ def stencil_3d(
         assignment = (lin_id * num_nodes // N).clip(
             0, num_nodes - 1).astype(np.int32)
     elif mapping == "random":
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(seed)
         assignment = rng.integers(0, num_nodes, N).astype(np.int32)
     else:
         raise ValueError(f"unknown mapping {mapping!r}")

@@ -1,0 +1,130 @@
+"""Correctness sweep regressions: engine cache keying, the ext/int comm
+sentinel, and seeded "random" stencil mappings (ISSUE 3 satellites)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, metrics
+from repro.core.comm_graph import make_problem
+from repro.sim import scenarios, stencil
+
+
+# ------------------------------------------------------- engine cache --
+
+
+def test_get_engine_positional_and_keyword_share_one_entry():
+    e1 = engine.get_engine("comm", 6)
+    e2 = engine.get_engine(variant="comm", k=6)
+    e3 = engine.get_engine(k=6)            # variant defaults to "comm"
+    assert e1 is e2 is e3
+
+
+def test_get_engine_numeric_spelling_shares_one_entry():
+    # int/float spellings of the same config must not compile twice
+    assert engine.get_engine(k=7, tol=0.02) is engine.get_engine(
+        k=7.0, tol=0.02)
+
+
+class _UnhashableStep:
+    """A callable planner step that cannot be hashed (regression: the old
+    ``lru_cache`` raised TypeError for such step_fns)."""
+    __hash__ = None
+
+    def __call__(self, *args):
+        from repro.core import virtual_lb
+        return virtual_lb.reference_sweep(*args)
+
+
+def test_get_engine_accepts_unhashable_step_fn():
+    step = _UnhashableStep()
+    with pytest.raises(TypeError):
+        hash(step)
+    e1 = engine.get_engine(k=3, step_fn=step)
+    assert e1 is engine.get_engine(k=3, step_fn=step)   # keyed by identity
+    assert e1.step_fn is step
+
+
+def test_get_engine_rejects_bad_arguments():
+    with pytest.raises(TypeError, match="unexpected"):
+        engine.get_engine(bogus=1)
+    with pytest.raises(TypeError, match="multiple values"):
+        engine.get_engine("comm", variant="comm")
+
+
+# --------------------------------------------------- ext/int sentinel --
+
+
+def _two_node_problem(edges, edge_bytes):
+    return make_problem(
+        loads=[1.0, 1.0], assignment=[0, 1], edges=edges,
+        edge_bytes=edge_bytes, num_nodes=2)
+
+
+def test_ext_int_all_external_returns_finite_sentinel():
+    # the only edge crosses the node boundary: internal bytes == 0 — the
+    # old epsilon division produced ~1e30 garbage
+    prob = _two_node_problem([[0, 1]], [8.0])
+    m = metrics.evaluate(prob)
+    assert m["ext_int_comm"] == metrics.EXT_INT_ALL_EXTERNAL
+    assert all(np.isfinite(v) for v in m.values())
+    d = metrics.evaluate_device(prob)
+    assert float(d.ext_int_comm) == metrics.EXT_INT_ALL_EXTERNAL
+
+
+def test_ext_int_no_comm_at_all_is_zero():
+    prob = _two_node_problem(np.zeros((0, 2), np.int32), np.zeros(0))
+    m = metrics.evaluate(prob)
+    assert m["ext_int_comm"] == 0.0
+
+
+def test_ext_int_normal_ratio_unchanged():
+    # one internal (node 0) + one external edge: ratio = 4/2
+    prob = make_problem(
+        loads=[1.0, 1.0, 1.0], assignment=[0, 0, 1],
+        edges=[[0, 1], [1, 2]], edge_bytes=[2.0, 4.0], num_nodes=2)
+    m = metrics.evaluate(prob)
+    assert m["ext_int_comm"] == pytest.approx(2.0)
+
+
+# ----------------------------------------------- seeded random mapping --
+
+
+def test_stencil_2d_random_mapping_seed_varies():
+    a0 = np.asarray(stencil.stencil_2d(8, 8, 4, mapping="random").assignment)
+    a0b = np.asarray(
+        stencil.stencil_2d(8, 8, 4, mapping="random", seed=0).assignment)
+    a1 = np.asarray(
+        stencil.stencil_2d(8, 8, 4, mapping="random", seed=1).assignment)
+    np.testing.assert_array_equal(a0, a0b)   # default seed=0 == legacy
+    assert (a0 != a1).any()                  # different seed, new instance
+    legacy = np.random.default_rng(0).integers(0, 4, 64).astype(np.int32)
+    np.testing.assert_array_equal(a0, legacy)
+
+
+def test_stencil_3d_random_mapping_seed_varies():
+    a0 = np.asarray(
+        stencil.stencil_3d(4, 4, 4, 4, mapping="random").assignment)
+    a2 = np.asarray(
+        stencil.stencil_3d(4, 4, 4, 4, mapping="random", seed=2).assignment)
+    legacy = np.random.default_rng(0).integers(0, 4, 64).astype(np.int32)
+    np.testing.assert_array_equal(a0, legacy)
+    assert (a0 != a2).any()
+
+
+def test_scenario_registry_threads_seed_to_random_mapping():
+    for name in ("stencil-wave", "adversarial-hotspot", "bimodal-churn"):
+        p1, _ = scenarios.get(name).instantiate(
+            grid=8, num_nodes=4, mapping="random", seed=1)
+        p2, _ = scenarios.get(name).instantiate(
+            grid=8, num_nodes=4, mapping="random", seed=2)
+        assert (np.asarray(p1.assignment) != np.asarray(p2.assignment)).any(), \
+            name
+
+
+def test_scenario_default_seed_keeps_legacy_instances():
+    # default parameters are unchanged: the memoized instance for the
+    # registry defaults must still be the legacy deterministic one
+    p, _ = scenarios.get("stencil-wave").instantiate(grid=8, num_nodes=4)
+    q = stencil.stencil_2d(8, 8, 4, mapping="tiled")
+    np.testing.assert_array_equal(np.asarray(p.assignment),
+                                  np.asarray(q.assignment))

@@ -1,0 +1,224 @@
+"""Within-node LPT (paper §III.D): the jittable device implementation.
+
+Covers: LPT exactness on small hand-checkable cases, the classic LPT
+approximation bound against brute-force optima, empty-node and
+threads>objects edge cases, bit-for-bit parity between the vectorized
+device LPT and the host NumPy oracle, and the two-level wiring through
+``LBEngine`` / ``run_series`` / the PIC driver.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, hierarchical
+from repro.pic import driver
+from repro.sim import scenarios, simulator, stencil, synthetic
+
+
+def _makespans(loads, assignment, thread, P, T):
+    pe = np.asarray(assignment) * T + np.asarray(thread)
+    return np.bincount(pe, weights=np.asarray(loads), minlength=P * T)
+
+
+def _lpt(loads, assignment, P, T):
+    return np.asarray(hierarchical.lpt_threads(
+        np.asarray(loads, np.float32), np.asarray(assignment, np.int32),
+        num_nodes=P, threads_per_node=T))
+
+
+# ------------------------------------------------------------ exactness --
+
+
+def test_lpt_balances_hand_checked_case_exactly():
+    # [5,4,3,2,1] over 3 threads: LPT reaches the perfect 5/5/5 split
+    loads = np.array([5, 4, 3, 2, 1], np.float32)
+    thread = _lpt(loads, np.zeros(5, np.int32), 1, 3)
+    tl = _makespans(loads, np.zeros(5, np.int32), thread, 1, 3)
+    np.testing.assert_array_equal(tl, [5.0, 5.0, 5.0])
+
+
+def test_lpt_descending_order_and_tie_breaks():
+    # equal loads: rank r object goes to thread r (argmin lowest index),
+    # and equal-load objects keep index order (stable sort)
+    loads = np.ones(7, np.float32)
+    thread = _lpt(loads, np.zeros(7, np.int32), 1, 3)
+    np.testing.assert_array_equal(thread, [0, 1, 2, 0, 1, 2, 0])
+
+
+def _brute_force_makespan(loads, T):
+    best = np.inf
+    for assign in itertools.product(range(T), repeat=len(loads)):
+        tl = np.zeros(T)
+        for load, t in zip(loads, assign):
+            tl[t] += load
+        best = min(best, tl.max())
+    return best
+
+
+def test_lpt_within_classic_bound_of_bruteforce_optimum():
+    rng = np.random.default_rng(7)
+    for trial in range(6):
+        n, T = int(rng.integers(4, 9)), int(rng.integers(2, 4))
+        loads = rng.integers(1, 20, n).astype(np.float32)
+        thread = _lpt(loads, np.zeros(n, np.int32), 1, T)
+        got = _makespans(loads, np.zeros(n, np.int32), thread, 1, T).max()
+        opt = _brute_force_makespan(loads, T)
+        # Graham's LPT bound: makespan <= (4/3 - 1/(3T)) * OPT
+        assert got <= (4.0 / 3.0 - 1.0 / (3 * T)) * opt + 1e-5, (
+            trial, loads, got, opt)
+
+
+# ----------------------------------------------------------- edge cases --
+
+
+def test_lpt_empty_node_and_uneven_nodes():
+    # node 1 has no objects at all
+    loads = np.array([3, 1, 2, 5], np.float32)
+    assignment = np.array([0, 0, 2, 2], np.int32)
+    thread = _lpt(loads, assignment, 3, 2)
+    assert (thread >= 0).all() and (thread < 2).all()
+    tl = _makespans(loads, assignment, thread, 3, 2)
+    np.testing.assert_array_equal(tl, [3, 1, 0, 0, 5, 2])
+
+
+def test_lpt_more_threads_than_objects():
+    loads = np.array([2.0, 1.0], np.float32)
+    thread = _lpt(loads, np.zeros(2, np.int32), 1, 8)
+    # each object gets its own thread, heaviest first
+    np.testing.assert_array_equal(thread, [0, 1])
+
+
+def test_lpt_single_thread_is_all_zero():
+    rng = np.random.default_rng(0)
+    loads = rng.random(50).astype(np.float32)
+    assignment = rng.integers(0, 5, 50).astype(np.int32)
+    np.testing.assert_array_equal(_lpt(loads, assignment, 5, 1),
+                                  np.zeros(50, np.int32))
+
+
+# -------------------------------------------------- new vs old parity --
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_device_lpt_matches_host_oracle_bit_for_bit(seed):
+    rng = np.random.default_rng(seed)
+    N, P, T = 300, 9, 4
+    loads = (rng.random(N) * 10).astype(np.float32)
+    assignment = rng.integers(0, P, N).astype(np.int32)
+    dev = _lpt(loads, assignment, P, T)
+    host = hierarchical.within_node_lpt(loads, assignment, P, T)
+    np.testing.assert_array_equal(dev, host)
+
+
+def test_device_lpt_matches_host_with_ties():
+    # heavy tie pressure: few distinct load values
+    rng = np.random.default_rng(3)
+    loads = rng.integers(1, 4, 120).astype(np.float32)
+    assignment = rng.integers(0, 4, 120).astype(np.int32)
+    np.testing.assert_array_equal(
+        _lpt(loads, assignment, 4, 3),
+        hierarchical.within_node_lpt(loads, assignment, 4, 3))
+
+
+def test_flatten_hierarchy_and_thread_loads():
+    loads = np.array([1, 2, 3, 4], np.float32)
+    assignment = np.array([0, 1, 0, 1], np.int32)
+    thread = np.array([1, 0, 0, 1], np.int32)
+    pe = hierarchical.flatten_hierarchy(assignment, thread, 2)
+    np.testing.assert_array_equal(pe, [1, 2, 0, 3])
+    tl = np.asarray(hierarchical.thread_loads(
+        loads, assignment, thread, num_nodes=2, threads_per_node=2))
+    np.testing.assert_array_equal(tl, [3, 1, 2, 4])
+
+
+# ------------------------------------------------------- engine wiring --
+
+
+def _fixture_problem():
+    prob = stencil.stencil_2d(12, 12, 9, mapping="tiled")
+    return synthetic.hotspot(prob, node=0, factor=6.0)
+
+
+def test_engine_plan_hier_fn_is_plan_fn_plus_lpt():
+    prob = _fixture_problem()
+    eng = engine.get_engine(k=4, threads_per_node=4)
+    a, thread, stats = jax.jit(eng.plan_hier_fn)(prob)
+    a_ref, stats_ref = jax.jit(engine.get_engine(k=4).plan_fn)(prob)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    assert int(stats.diffusion_iters) == int(stats_ref.diffusion_iters)
+    thr_ref = hierarchical.lpt_threads(
+        prob.loads, a, num_nodes=9, threads_per_node=4)
+    np.testing.assert_array_equal(np.asarray(thread), np.asarray(thr_ref))
+
+
+def test_engine_plan_emits_thread_placement_in_info():
+    prob = _fixture_problem()
+    plan = engine.get_engine(k=4, threads_per_node=3).plan(prob)
+    assert plan.info["threads_per_node"] == 3
+    thread = plan.info["thread"]
+    assert thread.shape == plan.assignment.shape
+    assert (thread >= 0).all() and (thread < 3).all()
+
+
+def test_engine_without_threads_rejects_hier_plan():
+    with pytest.raises(ValueError, match="threads_per_node"):
+        engine.get_engine(k=4).plan_hier_fn(_fixture_problem())
+
+
+def test_plan_hier_batch_fn_matches_per_problem():
+    from repro.core import comm_graph
+
+    probs = [synthetic.hotspot(stencil.stencil_2d(10, 10, 4), node=n,
+                               factor=f)
+             for n, f in [(0, 5.0), (2, 3.0)]]
+    eng = engine.get_engine(k=2, threads_per_node=2)
+    stacked = comm_graph.stack_problems(probs)
+    a_b, t_b, _ = jax.jit(eng.plan_hier_batch_fn)(stacked)
+    for b, p in enumerate(probs):
+        a1, t1, _ = eng.plan_hier_fn(p)
+        np.testing.assert_array_equal(np.asarray(a_b)[b], np.asarray(a1))
+        np.testing.assert_array_equal(np.asarray(t_b)[b], np.asarray(t1))
+
+
+# -------------------------------------------------- replay-layer wiring --
+
+
+def test_run_series_thread_metrics_host_vs_scan_parity():
+    problem, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=12, num_nodes=4)
+    kw = dict(steps=12, lb_every=4, strategy="diff-comm",
+              strategy_kwargs=dict(k=2), threads_per_node=4)
+    host = simulator.run_series(problem, evolve, scan=False, **kw)
+    scan = simulator.run_series(problem, evolve, scan=True, **kw)
+    assert host.thread_max_avg is not None
+    assert scan.thread_max_avg is not None
+    assert scan.thread_max_avg.shape == (12,)
+    np.testing.assert_allclose(host.thread_max_avg, scan.thread_max_avg,
+                               rtol=1e-5)
+    # thread-level imbalance can't beat perfect balance
+    assert (scan.thread_max_avg >= 1.0 - 1e-5).all()
+
+
+def test_run_series_without_threads_has_no_thread_series():
+    problem, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    res = simulator.run_series(problem, evolve, steps=6, lb_every=3,
+                               strategy="none")
+    assert res.thread_max_avg is None
+
+
+def test_pic_driver_thread_metrics_host_vs_scan_parity():
+    base = dict(L=100, n_particles=2000, steps=12, k=1, rho=0.9, cx=8,
+                cy=8, num_pes=4, mapping="striped", lb_every=5, seed=0,
+                strategy="diff-comm", strategy_kwargs=dict(k=2),
+                threads_per_node=2)
+    host = driver.run(driver.PICConfig(scan=False, **base))
+    scan = driver.run(driver.PICConfig(scan=True, **base))
+    assert host.thread_max_avg is not None
+    assert scan.thread_max_avg is not None
+    np.testing.assert_allclose(host.thread_max_avg, scan.thread_max_avg,
+                               rtol=1e-5)
+    assert (scan.thread_max_avg >= 1.0 - 1e-5).all()
