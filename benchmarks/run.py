@@ -12,7 +12,8 @@ import traceback
 
 from benchmarks import (engine_bench, ep_balance_bench, fig2_stencil,
                         fig4_pic_lb, fig5_scaling, kernel_bench, roofline,
-                        table1_neighbor_count, table2_strategies)
+                        runtime_bench, table1_neighbor_count,
+                        table2_strategies)
 
 ALL = {
     "fig2": fig2_stencil.run,
@@ -21,6 +22,7 @@ ALL = {
     "fig4": fig4_pic_lb.run,
     "fig5": fig5_scaling.run,
     "engine": engine_bench.run,
+    "runtime": runtime_bench.run,
     "ep_balance": ep_balance_bench.run,
     "kernels": kernel_bench.run,
     "roofline": roofline.run,

@@ -360,12 +360,19 @@ class Strategy:
     ``jit`` / ``scan`` / ``cond``); otherwise it runs host-side NumPy and
     may only be called eagerly.  ``defaults`` are merged under caller
     params by :meth:`run` and by the scanned replay layers.
+
+    ``trigger`` names the strategy's default online rebalancing policy
+    (``runtime.triggers`` — e.g. the ``diff-comm+threshold`` registration
+    carries ``trigger="threshold"``).  The replay layers resolve it when
+    the caller passes ``trigger=None``; a plain strategy (``trigger is
+    None``) keeps the legacy fixed ``lb_every`` cadence.
     """
 
     name: str
     plan_fn: Callable[..., Tuple[jax.Array, PlanStats]]
     jittable: bool = False
     defaults: Mapping = dataclasses.field(default_factory=dict)
+    trigger: Optional[str] = None
 
     def params(self, **overrides) -> Dict:
         return {**self.defaults, **overrides}
@@ -452,3 +459,14 @@ register(Strategy("greedy", _host(baselines.greedy)))
 register(Strategy("greedy-refine", _host(baselines.greedy_refine)))
 register(Strategy("metis", _host(baselines.metis_like)))
 register(Strategy("parmetis", _host(baselines.parmetis_like)))
+
+# trigger-wrapped variants: same planner, adaptive rebalance policy — the
+# replay layers pick the trigger up when called with ``trigger=None``
+# (single snapshots via ``compare``/``run_strategy`` plan identically to
+# the base strategy; the wrapping only matters over time)
+for _variant in ("comm", "coord"):
+    for _trig in ("threshold", "predictive"):
+        register(Strategy(f"diff-{_variant}+{_trig}",
+                          _diffusion_plan_fn(_variant), jittable=True,
+                          trigger=_trig))
+del _variant, _trig

@@ -373,6 +373,27 @@ class ShardedLBEngine:
             threads_per_node=self.threads_per_node)
         return assignment, thread, stats
 
+    # ---------------------------------------------------- sharded apply --
+
+    def apply(self, owner_new, arrays, *, num_nodes: int, capacity: int):
+        """Execute a plan across this engine's mesh: relocate per-item
+        payload between the shard-owned slot regions.
+
+        ``owner_new`` is the (n,) post-plan node id per item (e.g.
+        ``assignment[chare_id]`` per particle); ``arrays`` are the
+        row-sharded payload buffers; ``num_nodes`` is the planner's P
+        (must divide the mesh, like :meth:`plan_fn`).  Delegates to
+        ``runtime.migrate.migrate_sharded`` — a ``ppermute`` ring
+        all-to-all whose concatenated valid prefixes reproduce the
+        single-device bucketed layout bit-for-bit.  ``capacity`` is the
+        static per-shard slot budget (≥ the largest per-shard item
+        count)."""
+        from repro.runtime import migrate as rt_migrate
+
+        return rt_migrate.migrate_sharded(
+            owner_new, arrays, num_nodes=num_nodes, mesh=self.mesh,
+            capacity=capacity)
+
     # -------------------------------------------------------- host path --
 
     def plan(self, problem: comm_graph.LBProblem):

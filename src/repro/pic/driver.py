@@ -1,13 +1,20 @@
 """PIC PRK end-to-end driver with integrated load balancing (paper §VI).
 
 Reproduces the paper's evaluation loop: particles advance each step (Pallas
-push kernel), chare loads are measured (histogram kernel), and every
-``lb_every`` steps the chare→PE assignment is rebalanced by any registered
-strategy.  Records the paper's metrics per step:
+push kernel), chare loads are measured (histogram kernel), and the
+chare→PE assignment is rebalanced by any registered strategy whenever the
+online trigger fires (``PICConfig.trigger`` — fixed ``lb_every`` cadence
+by default, adaptive threshold/predictive policies via
+``runtime.triggers``).  A fired rebalance is **executed**, not just
+counted: particle payload is relocated between PE-owned slot regions
+(``runtime.migrate`` bucketed gather, device-resident in the scanned
+path) and the migration volume is measured from that exchange.  Records
+the paper's metrics per step:
 
   * max/avg particles per PE            (Fig 3, Fig 4)
   * external/internal comm bytes        (particle handoffs crossing PEs)
-  * migration volume at LB steps
+  * migration volume at LB steps        (measured from the executed
+    exchange; ``final_x/final_y`` are restored to particle-id order)
   * modeled step time (compute + comm + LB amortization) for the
     strong-scaling study (Fig 5/6) — see ``CostModel``; wall-clock
     multi-node timing needs real nodes, the model is calibrated per-term
@@ -43,6 +50,8 @@ from repro.kernels.pic_push.ops import pic_push
 from repro.pic import chares as ch
 from repro.pic.grid import alternating_grid
 from repro.pic.particles import initialize
+from repro.runtime import migrate as rt_migrate
+from repro.runtime import triggers as rt_triggers
 
 
 @dataclasses.dataclass
@@ -61,6 +70,15 @@ class PICConfig:
     lb_every: int = 10
     strategy: str = "diff-comm"
     strategy_kwargs: Optional[Dict] = None
+    # online rebalancing policy (runtime.triggers): None resolves to the
+    # strategy's registered trigger and then to the legacy fixed
+    # ``lb_every`` cadence (bit-for-bit the pre-runtime driver); "every" /
+    # "threshold" / "predictive" or a Trigger instance select adaptive
+    # policies, decided per step on device from the pre-LB PE loads.
+    # Every LB step *executes* the plan: particle payload is relocated
+    # between PE-owned slot regions (runtime.migrate) and
+    # ``PICResult.migrated_bytes`` is measured from that exchange.
+    trigger: Optional[object] = None
     # sweeps per fused diffusion block inside the planner (stage 2); None
     # keeps the engine default.  Plumbed into the diff-* strategies only —
     # the scanned path's lax.cond-gated planning then runs the chunked
@@ -119,15 +137,46 @@ class PICResult:
     # (T,) max/avg load over global PEs under the two-level (node,
     # thread) placement; None unless PICConfig.threads_per_node was set
     thread_max_avg: Optional[np.ndarray] = None
+    # (T,) 1.0 where the trigger fired and a rebalance was executed
+    lb_steps: Optional[np.ndarray] = None
 
     def summary(self) -> Dict[str, float]:
+        # mean ext/int ratio over steps with internal traffic; all-external
+        # steps use the finite metrics sentinel, no-comm steps read 0
+        from repro.core.metrics import EXT_INT_ALL_EXTERNAL
+
+        ratio = np.where(
+            self.int_bytes > 0,
+            self.ext_bytes / np.where(self.int_bytes > 0,
+                                      self.int_bytes, 1.0),
+            np.where(self.ext_bytes > 0, EXT_INT_ALL_EXTERNAL, 0.0))
         return dict(
             mean_max_avg=float(self.max_avg.mean()),
             mean_ext_bytes=float(self.ext_bytes.mean()),
+            mean_ext_int=float(ratio.mean()),
             total_migrated_bytes=float(self.migrated_bytes.sum()),
             lb_seconds=float(self.lb_seconds),
             modeled_time=float(self.step_seconds.sum()),
+            wall_seconds=float(self.wall_seconds),
         )
+
+
+def _lb_amort(cfg: PICConfig, trig) -> int:
+    """Steps one plan's cost is amortized over in the modeled step time:
+    the fixed cadence serves exactly ``lb_every`` steps per plan (the
+    legacy accounting); an adaptive trigger's plan serves an interval
+    known only after the fact, so its cost is charged where it fires."""
+    if isinstance(trig, rt_triggers.EveryTrigger):
+        return max(cfg.lb_every, 1)
+    return 1
+
+
+def _resolve_trigger(cfg: PICConfig):
+    """Canonical trigger for a config (the strategy's registered policy
+    backs ``cfg.trigger=None``; unknown strategies keep the legacy
+    cadence)."""
+    return rt_triggers.resolve_for_strategy(
+        cfg.trigger, lb_every=cfg.lb_every, strategy=cfg.strategy)
 
 
 def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
@@ -161,16 +210,18 @@ def _chunk_runner(
     lb_every: int, strategy: str, kw_items: tuple, bpp: float,
     use_kernel: Optional[bool], chunk_len: int,
     threads_per_node: Optional[int] = None,
+    trig=None,
 ):
     """Compiled ``lax.scan`` over ``chunk_len`` device-resident PIC steps."""
     n_chares = cx * cy
     grid_q = jnp.asarray(alternating_grid(L))
-    lb_on = strategy != "none" and lb_every > 0
+    trig = trig or rt_triggers.resolve(None, lb_every=lb_every)
+    lb_on = strategy != "none" and not trig.never
     plan = (core_engine.get_strategy(strategy).bind(**dict(kw_items))
             if lb_on else None)
 
     def step(carry, t):
-        x, y, vx, vy, q, chare_id, assignment = carry
+        x, y, vx, vy, q, chare_id, assignment, perm, tstate = carry
         xn, yn, vxn, vyn = pic_push(grid_q, x, y, vx, vy, q, L=L,
                                     use_kernel=use_kernel)
         new_chare = ch.chare_of_device(xn, yn, L, cx, cy)
@@ -189,7 +240,9 @@ def _chunk_runner(
         ma = pe_max / (pe_loads.mean() + 1e-30)
 
         if lb_on:
-            do = (t > 0) & (t % lb_every == 0)
+            mx, av, tot = rt_triggers.load_stats(loads, assignment,
+                                                 num_pes)
+            do, tstate = trig.decide(tstate, t, mx, av, tot)
 
             def do_plan(args):
                 loads_, assignment_ = args
@@ -206,12 +259,29 @@ def _chunk_runner(
             delta = new_assignment != assignment
             migf = jnp.where(
                 do, jnp.mean(delta.astype(jnp.float32)), 0.0)
-            migb = jnp.where(
-                do, jnp.where(delta, loads, 0.0).sum() * bpp, 0.0)
+
+            # execute the plan: relocate particle payload between the
+            # PE-owned slot regions (bucketed gather — runtime.migrate);
+            # migrated_bytes is measured from this exchange, not modeled
+            owner_old = jnp.take(assignment, new_chare)
+            owner_new = jnp.take(new_assignment, new_chare)
+
+            def do_move(args):
+                man = rt_migrate.build_manifest(owner_old, owner_new,
+                                                num_pes)
+                return rt_migrate.apply_manifest(man, *args), \
+                    man.moved_count
+
+            (xn, yn, vxn, vyn, q, new_chare, perm), moved_n = jax.lax.cond(
+                do, do_move, lambda args: (args, jnp.int32(0)),
+                (xn, yn, vxn, vyn, q, new_chare, perm))
+            migb = moved_n.astype(jnp.float32) * bpp
+            fired = do.astype(jnp.float32)
             assignment = new_assignment
         else:
             migf = jnp.float32(0.0)
             migb = jnp.float32(0.0)
+            fired = jnp.float32(0.0)
 
         if threads_per_node:
             thr = hierarchical.lpt_threads(
@@ -224,8 +294,9 @@ def _chunk_runner(
         else:
             tma = jnp.float32(0.0)
 
-        ys = (ma, pe_max, ext, intra, migf, migb, tma)
-        return (xn, yn, vxn, vyn, q, new_chare, assignment), ys
+        ys = (ma, pe_max, ext, intra, migf, migb, tma, fired)
+        return (xn, yn, vxn, vyn, q, new_chare, assignment, perm,
+                tstate), ys
 
     def run_chunk(carry, ts):
         return jax.lax.scan(step, carry, ts)
@@ -246,7 +317,8 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
     n_chares = cfg.cx * cfg.cy
 
     kw_items = tuple(sorted((cfg.strategy_kwargs or {}).items()))
-    lb_on = cfg.strategy != "none" and cfg.lb_every > 0
+    trig = _resolve_trigger(cfg)
+    lb_on = cfg.strategy != "none" and not trig.never
 
     # LB planning cost for the CostModel: the scanned path fuses planning
     # into the step executable, so per-call wall time is measured once on
@@ -267,7 +339,9 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
 
     T = cfg.steps
     chunk = max(1, min(cfg.scan_chunk, T))
-    carry = (x, y, vx, vy, q, chare_id, assignment)
+    carry = (x, y, vx, vy, q, chare_id, assignment,
+             jnp.arange(cfg.n_particles, dtype=jnp.int32),
+             trig.init_state())
     ys_host = []
     t_start = time.perf_counter()
     for s in range(0, T, chunk):
@@ -275,29 +349,34 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
         runner = _chunk_runner(
             cfg.L, cfg.cx, cfg.cy, cfg.num_pes, cfg.k, cfg.vy0,
             cfg.lb_every, cfg.strategy, kw_items, cfg.bytes_per_particle,
-            cfg.use_kernel, n, cfg.threads_per_node)
+            cfg.use_kernel, n, cfg.threads_per_node, trig)
         carry, ys = runner(carry, jnp.arange(s, s + n))
         ys_host.append(jax.device_get(ys))   # host transfer per chunk only
     wall = time.perf_counter() - t_start
 
-    ma, pe_max, ext_b, int_b, mig, mig_bytes, tma = (
+    ma, pe_max, ext_b, int_b, mig, mig_bytes, tma, fired = (
         np.concatenate([np.asarray(c[i], np.float64) for c in ys_host])
-        for i in range(7))
+        for i in range(8))
 
-    lb_steps = np.array([lb_on and t > 0 and t % cfg.lb_every == 0
-                         for t in range(T)])
+    lb_steps = fired > 0
     lb_s_t = np.where(lb_steps, lb_est, 0.0)
     step_s = (
         pe_max * cost.t_particle
         + (ext_b + mig_bytes) * cost.t_byte
         + np.array([cost.lb_seconds(s_, cfg.strategy, cfg.num_pes)
-                    for s_ in lb_s_t]) / max(cfg.lb_every, 1)
+                    for s_ in lb_s_t]) / _lb_amort(cfg, trig)
     )
-    fx, fy = np.asarray(carry[0]), np.asarray(carry[1])
+    # the carry holds slot-ordered particles (bucketed by owning PE);
+    # report them in original particle-id order, undoing the exchanges
+    perm = np.asarray(carry[7])
+    xs, ys_ = np.asarray(carry[0]), np.asarray(carry[1])
+    fx, fy = np.empty_like(xs), np.empty_like(ys_)
+    fx[perm], fy[perm] = xs, ys_
     return PICResult(ma, ext_b, int_b, mig, mig_bytes,
                      float(lb_est * lb_steps.sum()), step_s, fx, fy,
                      scanned=True, wall_seconds=wall,
-                     thread_max_avg=(tma if cfg.threads_per_node else None))
+                     thread_max_avg=(tma if cfg.threads_per_node else None),
+                     lb_steps=fired)
 
 
 # --------------------------------------------------------------- host loop --
@@ -314,6 +393,11 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
     n_chares = cfg.cx * cfg.cy
     assignment = ch.initial_mapping(cfg.cx, cfg.cy, cfg.num_pes, cfg.mapping)
     chare_id = np.asarray(ch.chare_of(p.x, p.y, cfg.L, cfg.cx, cfg.cy))
+    perm = np.arange(cfg.n_particles, dtype=np.int32)
+
+    trig = _resolve_trigger(cfg)
+    lb_on = cfg.strategy != "none" and not trig.never
+    tstate = trig.init_state()
 
     T = cfg.steps
     ma = np.zeros(T)
@@ -323,6 +407,7 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
     mig_bytes = np.zeros(T)
     tma = np.zeros(T)
     step_s = np.zeros(T)
+    fired = np.zeros(T)
     lb_seconds = 0.0
 
     t_start = time.perf_counter()
@@ -350,8 +435,22 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
         ext_b[t], int_b[t] = ext, intra
 
         lb_s = 0.0
-        if (cfg.strategy != "none" and cfg.lb_every > 0
-                and t > 0 and t % cfg.lb_every == 0):
+        do = False
+        if lb_on:
+            if isinstance(trig, rt_triggers.EveryTrigger):
+                # fixed cadence ignores the stats: legacy predicate,
+                # no per-step device trip
+                do = t > 0 and t % trig.every == 0
+            else:
+                # identical expression graph to the scanned path (f32
+                # stats + jnp decide), so adaptive triggers fire on the
+                # same steps
+                mx, av, tot = rt_triggers.load_stats_jit(
+                    jnp.asarray(loads, jnp.float32),
+                    jnp.asarray(assignment, jnp.int32), cfg.num_pes)
+                d, tstate = trig.decide(tstate, jnp.int32(t), mx, av, tot)
+                do = bool(d)
+        if do:
             problem = ch.build_problem(
                 loads, assignment, L=cfg.L, cx=cfg.cx, cy=cfg.cy,
                 num_pes=cfg.num_pes, k=cfg.k, vy0=cfg.vy0,
@@ -367,9 +466,22 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
             new_assignment = np.asarray(plan.assignment)
             moved_chares = new_assignment != assignment
             mig[t] = float(moved_chares.mean())
+            fired[t] = 1.0
+
+            # execute the plan: bucket particles into PE-owned slot
+            # regions; migrated bytes measured from the exchange
+            owner_old = assignment[chare_id]
+            owner_new = new_assignment[chare_id].astype(np.int32)
+            order = np.argsort(owner_new, kind="stable")
             mig_bytes[t] = float(
-                loads[moved_chares].sum() * cfg.bytes_per_particle
-            )
+                (owner_old != owner_new).sum() * cfg.bytes_per_particle)
+            x = jnp.asarray(np.asarray(x)[order])
+            y = jnp.asarray(np.asarray(y)[order])
+            vx = jnp.asarray(np.asarray(vx)[order])
+            vy = jnp.asarray(np.asarray(vy)[order])
+            q = jnp.asarray(np.asarray(q)[order])
+            chare_id = chare_id[order]
+            perm = perm[order]
             assignment = new_assignment.astype(np.int32)
 
         if cfg.threads_per_node:
@@ -391,10 +503,14 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
             pe_loads.max() * cost.t_particle
             + (ext + mig_bytes[t]) * cost.t_byte
             + cost.lb_seconds(lb_s, cfg.strategy, cfg.num_pes)
-            / max(cfg.lb_every, 1)
+            / _lb_amort(cfg, trig)
         )
 
+    xs, ys_ = np.asarray(x), np.asarray(y)
+    fx, fy = np.empty_like(xs), np.empty_like(ys_)
+    fx[perm], fy[perm] = xs, ys_     # undo the executed exchanges
     return PICResult(ma, ext_b, int_b, mig, mig_bytes, lb_seconds, step_s,
-                     np.asarray(x), np.asarray(y), scanned=False,
+                     fx, fy, scanned=False,
                      wall_seconds=time.perf_counter() - t_start,
-                     thread_max_avg=(tma if cfg.threads_per_node else None))
+                     thread_max_avg=(tma if cfg.threads_per_node else None),
+                     lb_steps=fired)

@@ -1,0 +1,16 @@
+"""Online rebalancing runtime: the third pillar beside planning and
+kernels.
+
+``triggers`` decides *when* to rebalance (scan-safe adaptive policies),
+``migrate`` executes the resulting exchange (device-resident payload
+relocation, single-device and mesh-sharded), and ``cost`` prices the
+trade-off (migration/amortization model shared by triggers and the
+benchmarks).  Wired through ``sim/simulator.run_series`` (``trigger=``),
+``pic/driver`` (executed particle migration) and
+``distributed/lb_shard`` (sharded apply).
+"""
+from repro.runtime import cost, migrate, triggers  # noqa: F401
+from repro.runtime.cost import RuntimeCostModel  # noqa: F401
+from repro.runtime.triggers import (  # noqa: F401
+    EveryTrigger, PredictiveTrigger, ThresholdTrigger, TriggerState,
+)

@@ -1,0 +1,118 @@
+"""Migration / amortization cost model for the online rebalancing runtime.
+
+The paper treats migration cost as a first-class term of the LB objective
+(§II metric 3/4): a rebalance is only worth taking when the load-imbalance
+time it recovers amortizes the bytes it moves plus the planning overhead.
+This module is the single place where that trade-off is priced.  It
+unifies
+
+  * the PIC driver's :class:`repro.pic.driver.CostModel` per-term model
+    (``t_particle``/``t_byte``/``lb_seconds``) — see :meth:`from_pic`;
+  * the replay layers' bytes accounting (``StepMetrics`` ext/int bytes,
+    ``PICResult.migrated_bytes``) — see :meth:`step_seconds` /
+    :func:`series_modeled_seconds`.
+
+Everything is a pure function of scalars/arrays (jnp-traceable), and the
+model itself is a frozen dataclass of floats — hashable, so triggers that
+embed one can key the replay layers' compiled-runner caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeCostModel:
+    """Per-term cost model in seconds, shared by triggers and benchmarks.
+
+    Attributes:
+      t_load:         seconds one unit of object load costs the critical
+                      path per application step (PIC: seconds/particle —
+                      ``CostModel.t_particle``).
+      t_byte:         seconds per byte crossing a node boundary.
+      bytes_per_load: migration payload bytes carried by one unit of load
+                      (PIC: ``bytes_per_particle``; simulator workloads
+                      default to 1 byte/load-unit).
+      lb_overhead:    fixed seconds charged per executed rebalance —
+                      planning + barrier + manifest exchange (the
+                      amortized ``CostModel.lb_seconds`` term).
+      moved_frac_est: a-priori estimate of the load fraction a rebalance
+                      migrates, used by predictive triggers *before* the
+                      plan exists (the paper's diffusion strategies move
+                      ~15-19% — Table II).
+    """
+
+    t_load: float = 1.0
+    t_byte: float = 1.0
+    bytes_per_load: float = 1.0
+    lb_overhead: float = 0.0
+    moved_frac_est: float = 0.15
+
+    # --------------------------------------------------------- pricing --
+
+    def imbalance_seconds(self, max_load, avg_load):
+        """Per-step time lost to imbalance: the excess of the slowest
+        node over the average, priced at ``t_load`` (traceable)."""
+        return jnp.maximum(max_load - avg_load, 0.0) * self.t_load
+
+    def migration_seconds(self, moved_load):
+        """Executed-exchange cost: payload bytes on the wire plus the
+        fixed per-rebalance overhead (traceable)."""
+        return (moved_load * self.bytes_per_load * self.t_byte
+                + self.lb_overhead)
+
+    def est_migration_seconds(self, total_load):
+        """A-priori migration cost for a rebalance that has not been
+        planned yet: ``moved_frac_est`` of the total load (traceable)."""
+        return self.migration_seconds(self.moved_frac_est * total_load)
+
+    def step_seconds(self, max_load, moved_load, lb_fired):
+        """Modeled wall seconds of one application step: slowest-node
+        compute + executed migration traffic + LB overhead when fired."""
+        fired = jnp.asarray(lb_fired, jnp.float32)
+        return (jnp.asarray(max_load, jnp.float32) * self.t_load
+                + jnp.asarray(moved_load, jnp.float32)
+                * self.bytes_per_load * self.t_byte
+                + fired * self.lb_overhead)
+
+    # --------------------------------------------------------- bridges --
+
+    @classmethod
+    def from_pic(cls, pic_cost, *, strategy: str, num_pes: int,
+                 bytes_per_particle: float, plan_seconds: float = 0.0,
+                 moved_frac_est: float = 0.15) -> "RuntimeCostModel":
+        """Bridge from the PIC driver's :class:`CostModel`.
+
+        ``plan_seconds`` is the measured planning wall time; it is
+        amortized exactly as ``CostModel.lb_seconds`` amortizes it
+        (diffusion is distributed — divided by ``num_pes``; centralized
+        planners are charged in full)."""
+        return cls(
+            t_load=float(pic_cost.t_particle),
+            t_byte=float(pic_cost.t_byte),
+            bytes_per_load=float(bytes_per_particle),
+            lb_overhead=float(
+                pic_cost.lb_seconds(plan_seconds, strategy, num_pes)),
+            moved_frac_est=float(moved_frac_est),
+        )
+
+
+def series_modeled_seconds(result, model: RuntimeCostModel) -> np.ndarray:
+    """(T,) modeled seconds per step of a :class:`SeriesResult`.
+
+    Requires the runtime-era per-step records (``max_load``,
+    ``migrated_load``, ``lb_fired`` — populated by every
+    ``sim.simulator.run_series`` path since the trigger runtime landed).
+    """
+    for field in ("max_load", "migrated_load", "lb_fired"):
+        if getattr(result, field, None) is None:
+            raise ValueError(
+                f"SeriesResult.{field} missing — series_modeled_seconds "
+                "needs a result from sim.simulator.run_series")
+    return np.asarray(model.step_seconds(
+        jnp.asarray(result.max_load, jnp.float32),
+        jnp.asarray(result.migrated_load, jnp.float32),
+        jnp.asarray(result.lb_fired, jnp.float32)))

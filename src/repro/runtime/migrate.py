@@ -1,0 +1,228 @@
+"""Device-resident payload migration: the *apply* half of a rebalance.
+
+Planning produces an old→new assignment pair; this module turns that
+pair into per-node send/recv manifests and **executes** them, so the
+replay layers stop merely counting migration and actually move payload
+(the paper's §II migration-cost term, Demiralp et al.'s dominant
+end-to-end cost).  Two execution paths:
+
+  * **single device** — :func:`build_manifest` + :func:`apply_manifest`:
+    a bucketed gather that reorders the payload arrays so each node's
+    items occupy one contiguous slot region (stable order: by new owner,
+    ties by previous position).  Pure and shape-stable, so it runs under
+    ``jit`` / ``lax.scan`` / ``lax.cond`` — the scanned PIC driver
+    executes it inside the replay scan.  :func:`migrate` is the eager
+    entry with the payload buffers donated to the executable on
+    accelerators (double-buffered exchange: XLA may write the relocated
+    arrays over the originals).
+  * **mesh-sharded** — :func:`migrate_sharded`: a ``ppermute`` ring
+    all-to-all under ``shard_map`` on a 1-D device mesh.  Each shard
+    owns a contiguous node range; the local payload block rotates D-1
+    hops around the ring and every shard scatters the items it owns into
+    its slot region as they pass.  Destination offsets are computed from
+    an all-gathered (D, P) count matrix, so the concatenated per-shard
+    regions are **bit-for-bit** the single-device bucketed layout.
+
+Conservation is structural: both paths apply a permutation (plus
+padding on the sharded path), so item count, total bytes, and every
+per-item payload value are preserved exactly — tests/test_runtime.py
+asserts all three on both paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P_
+
+from repro.distributed import compat  # noqa: F401  (installs jax.shard_map)
+
+AXIS = "mig"
+
+
+class Manifest(NamedTuple):
+    """Executable exchange plan for one old→new ownership pair.
+
+    ``order`` is the bucketed gather permutation (stable sort by new
+    owner); ``offsets[p]:offsets[p+1]`` is node ``p``'s slot region in
+    the relocated layout; ``send_counts[s, d]`` counts items moving from
+    node ``s`` to node ``d`` — the off-diagonal is the executed exchange,
+    the diagonal stays put."""
+
+    order: jax.Array        # (n,) i32 gather permutation
+    offsets: jax.Array      # (P+1,) i32 slot-region boundaries
+    send_counts: jax.Array  # (P, P) i32 per-node send/recv matrix
+    moved: jax.Array        # (n,) bool — item changed owner
+
+    @property
+    def moved_count(self) -> jax.Array:
+        """i32 scalar — items actually exchanged (equals the
+        off-diagonal ``send_counts`` sum)."""
+        return self.moved.sum().astype(jnp.int32)
+
+    def moved_bytes(self, bytes_per_item) -> jax.Array:
+        """f32 scalar — executed exchange volume."""
+        return self.moved_count.astype(jnp.float32) * bytes_per_item
+
+
+def build_manifest(owner_old, owner_new, num_nodes: int) -> Manifest:
+    """Traceable manifest for relocating items between node slot regions.
+
+    ``owner_old``/``owner_new`` are (n,) i32 per-item node ids (for PIC:
+    ``assignment[chare_id]`` before/after the plan)."""
+    owner_old = jnp.asarray(owner_old, jnp.int32)
+    owner_new = jnp.asarray(owner_new, jnp.int32)
+    order = jnp.argsort(owner_new, stable=True).astype(jnp.int32)
+    ones = jnp.ones(owner_new.shape, jnp.int32)
+    counts = jax.ops.segment_sum(ones, owner_new, num_segments=num_nodes)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    pair = owner_old * num_nodes + owner_new
+    send = jax.ops.segment_sum(
+        ones, pair, num_segments=num_nodes * num_nodes
+    ).reshape(num_nodes, num_nodes)
+    return Manifest(order=order, offsets=offsets, send_counts=send,
+                    moved=owner_old != owner_new)
+
+
+def apply_manifest(manifest: Manifest, *arrays) -> Tuple[jax.Array, ...]:
+    """Gather every payload array into the manifest's bucketed layout."""
+    return tuple(jnp.take(jnp.asarray(a), manifest.order, axis=0)
+                 for a in arrays)
+
+
+def inverse_permutation(order) -> jax.Array:
+    """Scatter permutation undoing :func:`apply_manifest`'s gather."""
+    order = jnp.asarray(order, jnp.int32)
+    return (jnp.zeros(order.shape, jnp.int32)
+            .at[order].set(jnp.arange(order.shape[0], dtype=jnp.int32)))
+
+
+@functools.lru_cache(maxsize=32)
+def _migrate_exec(num_nodes: int, donate: bool):
+    def fn(owner_old, owner_new, arrays):
+        m = build_manifest(owner_old, owner_new, num_nodes)
+        return apply_manifest(m, *arrays), m
+
+    return jax.jit(fn, donate_argnums=(2,) if donate else ())
+
+
+def migrate(owner_old, owner_new, arrays: Sequence, *, num_nodes: int,
+            donate: Optional[bool] = None):
+    """Eager single-device migration: ``(relocated_arrays, manifest)``.
+
+    ``donate=None`` donates the payload buffers wherever the backend
+    supports donation (not CPU XLA) — the executed exchange then
+    double-buffers in place instead of allocating a second copy."""
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    return _migrate_exec(int(num_nodes), bool(donate))(
+        jnp.asarray(owner_old, jnp.int32),
+        jnp.asarray(owner_new, jnp.int32), tuple(arrays))
+
+
+# ----------------------------------------------------- sharded exchange --
+
+
+def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
+                  capacity: int, axis: str):
+    """Per-shard ring all-to-all (runs under ``shard_map``).
+
+    Shard ``d`` owns nodes ``[d*rpd, (d+1)*rpd)``.  The local block
+    rotates D-1 ``ppermute`` hops; at hop ``s`` shard ``me`` sees the
+    block of shard ``(me+s) % D`` and scatters the items it owns into
+    its (capacity,) output at exact global-bucket positions, computed
+    from the all-gathered (D, P) per-shard count matrix — so the
+    concatenated valid prefixes reproduce the single-device stable
+    bucketed order bit-for-bit."""
+    rpd = num_nodes // D
+    me = jax.lax.axis_index(axis)
+    cnt_loc = jax.ops.segment_sum(
+        jnp.ones(owner_loc.shape, jnp.int32), owner_loc,
+        num_segments=num_nodes)
+    counts = jax.lax.all_gather(cnt_loc, axis)          # (D, P)
+    bucket = counts.sum(axis=0)                         # (P,) global sizes
+    my_sizes = jax.lax.dynamic_slice(bucket, (me * rpd,), (rpd,))
+    my_base = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(my_sizes).astype(jnp.int32)])[:rpd]  # (rpd,)
+
+    outs = tuple(jnp.zeros((capacity,), a.dtype) for a in arr_loc)
+    out_owner = jnp.zeros((capacity,), jnp.int32)
+    buf = (owner_loc,) + tuple(arr_loc)
+    pe_ids = jnp.arange(num_nodes, dtype=jnp.int32)
+    for s in range(D):
+        src = (me + s) % D
+        pe = buf[0]
+        accept = (pe // rpd) == me
+        # items from earlier source shards land first within each bucket
+        # (source order == global index order: shards hold contiguous
+        # global ranges), preserving the stable-sort tie order
+        before = (counts * (jnp.arange(D)[:, None] < src)).sum(0)  # (P,)
+        onehot = (pe[:, None] == pe_ids[None, :]) & accept[:, None]
+        rank = (jnp.take_along_axis(
+            jnp.cumsum(onehot.astype(jnp.int32), axis=0),
+            pe[:, None], axis=1)[:, 0] - 1)
+        r = jnp.clip(pe - me * rpd, 0, rpd - 1)
+        pos = jnp.where(
+            accept, my_base[r] + jnp.take(before, pe) + rank, capacity)
+        out_owner = out_owner.at[pos].set(pe, mode="drop")
+        outs = tuple(o.at[pos].set(v, mode="drop")
+                     for o, v in zip(outs, buf[1:]))
+        if s + 1 < D:
+            buf = tuple(
+                jax.lax.ppermute(
+                    b, axis, [(d, (d - 1) % D) for d in range(D)])
+                for b in buf)
+    count_me = my_sizes.sum().astype(jnp.int32)
+    return (out_owner,) + outs + (count_me[None],)
+
+
+def migrate_sharded(owner_new, arrays: Sequence, *, num_nodes: int,
+                    mesh: Optional[Mesh] = None, capacity: int):
+    """Ring all-to-all payload exchange across a 1-D device mesh.
+
+    ``owner_new`` / ``arrays`` are the *global* (n,) buffers, row-sharded
+    over the mesh (n and ``num_nodes`` must divide the shard count; the
+    caller pads if not).  ``capacity`` is the static per-shard slot
+    budget and must be ≥ the largest per-shard item count — an
+    overflowing exchange raises ``ValueError`` (payload is never lost
+    silently); size it from a known bound (``n`` is always safe).
+
+    Returns ``(owner_out, arrays_out, counts)`` where the outputs are
+    (D*capacity,) padded global buffers (shard ``d``'s valid prefix is
+    ``[d*capacity, d*capacity + counts[d])``) and ``counts`` is (D,).
+    Concatenating the valid prefixes equals the single-device
+    ``apply_manifest`` layout bit-for-bit."""
+    if mesh is None:
+        mesh = Mesh(np.asarray(jax.devices()), (AXIS,))
+    if len(mesh.axis_names) != 1:
+        raise ValueError("migrate_sharded needs a 1-D mesh")
+    ax = mesh.axis_names[0]
+    D = int(np.prod(mesh.devices.shape))
+    owner_new = jnp.asarray(owner_new, jnp.int32)
+    n = owner_new.shape[0]
+    if n % D or num_nodes % D:
+        raise ValueError(
+            f"n={n} and num_nodes={num_nodes} must divide the {D}-device "
+            "mesh")
+    body = functools.partial(
+        _sharded_body, num_nodes=int(num_nodes), D=D,
+        capacity=int(capacity), axis=ax)
+    arrays = tuple(jnp.asarray(a) for a in arrays)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P_(ax),) * (1 + len(arrays)),
+        out_specs=(P_(ax),) * (2 + len(arrays)),
+        check_vma=False)
+    out = fn(owner_new, *arrays)
+    counts = np.asarray(out[-1])
+    if (counts > capacity).any():
+        raise ValueError(
+            f"per-shard capacity={capacity} overflowed (largest shard "
+            f"holds {int(counts.max())} items); the scatter would have "
+            "dropped payload — raise capacity (n is always safe)")
+    return out[0], out[1:-1], out[-1]

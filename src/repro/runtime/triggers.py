@@ -1,0 +1,268 @@
+"""Scan-safe LB triggers: *when* to rebalance, decided on device.
+
+The replay layers historically rebalanced on a fixed cadence
+(``lb_every``).  The paper's objective (§II) and the anticipation
+literature (Boulmier et al., PAPERS.md) both say the decision should be
+adaptive: rebalance when the imbalance-time a plan would recover
+amortizes the migration it costs.  This module provides that decision as
+a pure, ``lax.cond``-compatible function so the scanned replay paths can
+keep the whole loop device-resident.
+
+Every trigger is a frozen dataclass (hashable — it participates in the
+compiled-runner cache keys of ``sim/simulator`` and ``pic/driver``) with
+
+  * ``init_state() -> TriggerState`` — fixed-shape device carry;
+  * ``decide(state, t, max_load, avg_load, total_load)
+       -> (do: bool scalar, TriggerState)`` — traceable, called every
+    step *before* planning with the pre-LB load statistics;
+  * ``never`` — static Python bool; True means the trigger can be
+    elided from the trace entirely (matching the legacy
+    ``lb_every <= 0`` fast path).
+
+Triggers:
+
+  ``EveryTrigger``      — fixed period; ``decide`` reproduces the legacy
+                          ``(t > 0) & (t % lb_every == 0)`` predicate
+                          bit-for-bit.
+  ``ThresholdTrigger``  — fires when max/avg exceeds ``hi``, with
+                          hysteresis (re-arms when imbalance falls below
+                          ``lo`` or after ``rearm_after`` steps) and a
+                          ``min_interval`` refractory period.
+  ``PredictiveTrigger`` — linear-trend anticipation: fits a least-squares
+                          slope to the last ``window`` excess-load
+                          samples and fires only when the predicted
+                          imbalance-time over ``horizon`` steps exceeds
+                          the modeled migration cost
+                          (``RuntimeCostModel.est_migration_seconds``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.cost import RuntimeCostModel
+
+
+class TriggerState(NamedTuple):
+    """Fixed-shape device carry shared by every trigger kind.
+
+    ``history`` is a ring-free rolling window (newest sample last) sized
+    by the trigger's static ``window``; simple triggers carry a length-1
+    window they never read."""
+
+    last_lb: jax.Array    # i32 — step index of the last fired rebalance
+    armed: jax.Array      # bool — hysteresis arm flag
+    history: jax.Array    # (W,) f32 — recent excess-load samples
+    hist_len: jax.Array   # i32 — valid entries at the tail of history
+
+
+def _init_state(window: int) -> TriggerState:
+    return TriggerState(
+        last_lb=jnp.int32(-(1 << 30)),
+        armed=jnp.asarray(True),
+        history=jnp.zeros((max(1, int(window)),), jnp.float32),
+        hist_len=jnp.int32(0),
+    )
+
+
+def load_stats(loads, assignment, num_nodes: int):
+    """(max, avg, total) node load as f32 device scalars — the trigger
+    inputs, computed identically on the host and scanned paths (both
+    route through this function, so threshold comparisons agree
+    bitwise)."""
+    nl = jax.ops.segment_sum(
+        jnp.asarray(loads, jnp.float32),
+        jnp.asarray(assignment, jnp.int32),
+        num_segments=num_nodes)
+    total = nl.sum()
+    return nl.max(), total / num_nodes, total
+
+
+#: jitted host-path entry (the scanned paths trace ``load_stats`` inline;
+#: both execute the same expression graph)
+load_stats_jit = jax.jit(load_stats, static_argnums=(2,))
+
+
+@dataclasses.dataclass(frozen=True)
+class EveryTrigger:
+    """Fixed-period trigger — the legacy ``lb_every`` behavior.
+
+    ``decide`` emits the literal legacy predicate, so a replay with
+    ``trigger="every"`` is bit-for-bit the pre-runtime replay."""
+
+    every: int = 10
+
+    @property
+    def never(self) -> bool:
+        return self.every <= 0
+
+    def init_state(self) -> TriggerState:
+        return _init_state(1)
+
+    def decide(self, state: TriggerState, t, max_load, avg_load,
+               total_load) -> Tuple[jax.Array, TriggerState]:
+        if self.never:
+            return jnp.asarray(False), state
+        do = (t > 0) & (t % self.every == 0)
+        return do, state
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdTrigger:
+    """Imbalance-threshold trigger with hysteresis.
+
+    Fires when ``max/avg > hi`` while armed and at least ``min_interval``
+    steps have passed since the last rebalance.  Firing disarms the
+    trigger; it re-arms when the imbalance falls below ``lo`` (the
+    rebalance worked — watch for the next spike) or ``rearm_after`` steps
+    elapse (it didn't — retry rather than wedge).  The hysteresis band
+    prevents rebalance thrash when the balancer cannot push the workload
+    below ``hi``."""
+
+    hi: float = 1.10
+    lo: float = 1.05
+    min_interval: int = 2
+    rearm_after: int = 4
+
+    @property
+    def never(self) -> bool:
+        return False
+
+    def init_state(self) -> TriggerState:
+        return _init_state(1)
+
+    def decide(self, state: TriggerState, t, max_load, avg_load,
+               total_load) -> Tuple[jax.Array, TriggerState]:
+        ma = max_load / jnp.maximum(avg_load, 1e-30)
+        since = t - state.last_lb
+        armed = (state.armed | (ma < self.lo)
+                 | (since >= self.rearm_after))
+        do = ((t > 0) & armed & (ma > self.hi)
+              & (since >= self.min_interval))
+        return do, state._replace(
+            last_lb=jnp.where(do, jnp.asarray(t, jnp.int32),
+                              state.last_lb),
+            armed=jnp.where(do, False, armed),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictiveTrigger:
+    """Linear-trend predictive trigger with cost amortization.
+
+    Keeps the last ``window`` samples of the excess load
+    ``max_load - avg_load``, fits a least-squares slope, and projects the
+    imbalance-time that *not* rebalancing would cost over the next
+    ``horizon`` steps: ``sum_h max(0, excess + slope*h) * t_load``.
+    Fires when that projected loss (scaled by ``efficiency`` — the
+    fraction a rebalance actually recovers) exceeds the modeled a-priori
+    migration cost ``cost.est_migration_seconds(total_load)``, subject to
+    the ``min_interval`` refractory period."""
+
+    window: int = 8
+    horizon: int = 8
+    min_interval: int = 2
+    efficiency: float = 0.8
+    cost: RuntimeCostModel = RuntimeCostModel()
+
+    @property
+    def never(self) -> bool:
+        return False
+
+    def init_state(self) -> TriggerState:
+        return _init_state(self.window)
+
+    def decide(self, state: TriggerState, t, max_load, avg_load,
+               total_load) -> Tuple[jax.Array, TriggerState]:
+        W = self.window
+        excess = jnp.maximum(
+            jnp.asarray(max_load, jnp.float32)
+            - jnp.asarray(avg_load, jnp.float32), 0.0)
+        hist = jnp.roll(state.history, -1).at[W - 1].set(excess)
+        # a rebalance resets the trend: old samples describe the
+        # pre-rebalance trajectory and would keep re-firing the trigger
+        hist_len = jnp.minimum(
+            jnp.where(state.last_lb == t - 1, 1, state.hist_len + 1), W)
+
+        # masked least-squares slope over the valid tail of the window
+        x = jnp.arange(W, dtype=jnp.float32)
+        valid = (x >= W - hist_len).astype(jnp.float32)
+        n = jnp.maximum(valid.sum(), 1.0)
+        xm = (x * valid).sum() / n
+        ym = (hist * valid).sum() / n
+        var = (valid * (x - xm) ** 2).sum()
+        slope = jnp.where(
+            var > 0, (valid * (x - xm) * (hist - ym)).sum() / var, 0.0)
+
+        h = jnp.arange(1, self.horizon + 1, dtype=jnp.float32)
+        projected = jnp.maximum(excess + slope * h, 0.0).sum()
+        loss = projected * self.cost.t_load * self.efficiency
+        gate = self.cost.est_migration_seconds(
+            jnp.asarray(total_load, jnp.float32))
+
+        do = ((t > 0) & (hist_len >= 2) & (loss > gate)
+              & (t - state.last_lb >= self.min_interval))
+        return do, TriggerState(
+            last_lb=jnp.where(do, jnp.asarray(t, jnp.int32),
+                              state.last_lb),
+            armed=state.armed,
+            history=hist,
+            hist_len=hist_len.astype(jnp.int32),
+        )
+
+
+Trigger = Union[EveryTrigger, ThresholdTrigger, PredictiveTrigger]
+
+_BY_NAME = {
+    "every": EveryTrigger,
+    "threshold": ThresholdTrigger,
+    "predictive": PredictiveTrigger,
+}
+
+
+@functools.lru_cache(maxsize=256)
+def _named(name: str, lb_every: int) -> Trigger:
+    if name == "every":
+        return EveryTrigger(every=lb_every)
+    return _BY_NAME[name]()
+
+
+def resolve(spec, *, lb_every: int,
+            strategy_trigger: Optional[str] = None) -> Trigger:
+    """Canonical trigger from a user spec.
+
+    ``spec`` may be ``None`` (fall back to the strategy's registered
+    trigger policy, else the legacy fixed period), a name
+    (``"every" | "threshold" | "predictive"``), or a trigger instance.
+    Instances come back memoized-or-identical, so the compiled-runner
+    caches keyed on the trigger hit across calls."""
+    if spec is None:
+        spec = strategy_trigger or "every"
+    if isinstance(spec, str):
+        if spec not in _BY_NAME:
+            raise KeyError(
+                f"unknown trigger {spec!r}; available: {sorted(_BY_NAME)}")
+        return _named(spec, int(lb_every))
+    if not all(hasattr(spec, a) for a in ("decide", "init_state", "never")):
+        raise TypeError(
+            f"trigger must be a name or a Trigger instance (decide / "
+            f"init_state / never), got {spec!r}")
+    return spec
+
+
+def resolve_for_strategy(spec, *, lb_every: int, strategy: str) -> Trigger:
+    """:func:`resolve` with the strategy registry as the ``None``
+    fallback — the one place the replay layers (sim and PIC) share the
+    spec → registry-trigger → legacy-cadence resolution order."""
+    from repro.core import engine  # local: keep runtime importable alone
+
+    try:
+        strategy_trigger = engine.get_strategy(strategy).trigger
+    except KeyError:
+        strategy_trigger = None
+    return resolve(spec, lb_every=lb_every,
+                   strategy_trigger=strategy_trigger)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api, comm_graph, engine, hierarchical, metrics
+from repro.runtime import triggers as rt_triggers
 
 
 @dataclasses.dataclass
@@ -96,6 +97,13 @@ class SeriesResult:
     # two-level (node, thread) placement — only when ``threads_per_node``
     # was requested (None otherwise)
     thread_max_avg: Optional[np.ndarray] = None
+    # runtime-era per-step records (None on the batched path): whether the
+    # trigger fired, the pre-metrics max node load, and the total load of
+    # the objects the rebalance moved — the inputs to
+    # ``runtime.cost.series_modeled_seconds``
+    lb_fired: Optional[np.ndarray] = None      # (T,) 0/1
+    max_load: Optional[np.ndarray] = None      # (T,)
+    migrated_load: Optional[np.ndarray] = None  # (T,)
 
 
 def run_series(
@@ -108,21 +116,35 @@ def run_series(
     strategy_kwargs: Optional[Dict] = None,
     scan: Optional[bool] = None,
     threads_per_node: Optional[int] = None,
+    trigger=None,
 ) -> SeriesResult:
-    """Replay ``steps`` of a workload, rebalancing every ``lb_every`` steps.
+    """Replay ``steps`` of a workload with trigger-policed rebalancing.
 
     ``evolve(problem, t)`` advances loads/comm one application step while
     preserving the current assignment (the simulator's stand-in for the
     application's own dynamics).  ``scan=None`` auto-selects the scanned
     path when both the strategy and ``evolve`` are jit-traceable.
 
+    ``trigger`` selects the online rebalancing policy
+    (``runtime.triggers``): ``None`` falls back to the strategy's
+    registered trigger (e.g. ``"diff-comm+threshold"``) and then to the
+    legacy fixed period — ``trigger="every"`` (or ``None`` on a plain
+    strategy) reproduces the pre-runtime ``lb_every`` replay
+    **bit-for-bit** on both paths.  ``"threshold"`` / ``"predictive"``
+    (or a configured ``Trigger`` instance) decide per step from the
+    pre-LB load statistics, identically on the host and scanned paths.
+    Per-step ``lb_fired`` / ``max_load`` / ``migrated_load`` records feed
+    ``runtime.cost.series_modeled_seconds``.
+
     ``threads_per_node`` enables the two-level (node, thread) view (paper
     §III.D): each step additionally records the max/avg load across all
     ``P * T`` global PEs under the within-node LPT placement
     (``hierarchical.lpt_threads`` — computed on device in the scanned
     path) in ``SeriesResult.thread_max_avg``.  The batched replay
-    (``run_series_batch``) does not take it."""
+    (``run_series_batch``) takes neither knob."""
     strategy_kwargs = strategy_kwargs or {}
+    trig = rt_triggers.resolve_for_strategy(trigger, lb_every=lb_every,
+                                            strategy=strategy)
     if scan:
         strat = engine.get_strategy(strategy)
         if not strat.jittable:
@@ -140,37 +162,64 @@ def run_series(
         return _run_series_scanned(
             initial, evolve, steps=steps, lb_every=lb_every,
             strategy=strategy, strategy_kwargs=strategy_kwargs,
-            threads_per_node=threads_per_node)
+            threads_per_node=threads_per_node, trig=trig)
     return _run_series_host(
         initial, evolve, steps=steps, lb_every=lb_every,
         strategy=strategy, strategy_kwargs=strategy_kwargs,
-        threads_per_node=threads_per_node)
+        threads_per_node=threads_per_node, trig=trig)
 
 
 # ------------------------------------------------------------- host loop --
 
 
 def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
-                     strategy_kwargs, threads_per_node=None) -> SeriesResult:
+                     strategy_kwargs, threads_per_node=None,
+                     trig=None) -> SeriesResult:
+    trig = trig or rt_triggers.resolve(None, lb_every=lb_every)
     t_start = time.perf_counter()
     problem = initial
     ma, ei, mig, tma = [], [], [], []
+    fired, mxl, migl = [], [], []
     plan_s = 0.0
+    lb_on = strategy != "none" and not trig.never
+    # the fixed cadence ignores the load stats: keep the legacy pure-
+    # Python predicate (bit-identical) instead of a per-step device trip
+    is_every = isinstance(trig, rt_triggers.EveryTrigger)
+    tstate = trig.init_state()
     for t in range(steps):
         problem = evolve(problem, t)
-        if strategy != "none" and lb_every > 0 and t % lb_every == 0 and t > 0:
+        do = False
+        if lb_on:
+            if is_every:
+                do = t > 0 and t % trig.every == 0
+            else:
+                # same jnp expression graph as the scanned path, so
+                # adaptive threshold comparisons agree bitwise across
+                # paths
+                mx, av, tot = rt_triggers.load_stats_jit(
+                    jnp.asarray(problem.loads, jnp.float32),
+                    jnp.asarray(problem.assignment, jnp.int32),
+                    problem.num_nodes)
+                d, tstate = trig.decide(tstate, jnp.int32(t), mx, av, tot)
+                do = bool(d)
+        if do:
             plan = api.run_strategy(strategy, problem, **strategy_kwargs)
-            moved = float(
-                np.mean(plan.assignment != np.asarray(problem.assignment))
-            )
+            delta = plan.assignment != np.asarray(problem.assignment)
+            moved = float(np.mean(delta))
+            migl.append(float(jnp.where(
+                jnp.asarray(delta),
+                jnp.asarray(problem.loads, jnp.float32), 0.0).sum()))
             problem = problem.with_assignment(jnp.asarray(plan.assignment))
             plan_s += plan.info.get("plan_seconds", 0.0)
             mig.append(moved)
         else:
             mig.append(0.0)
+            migl.append(0.0)
+        fired.append(1.0 if do else 0.0)
         m = metrics.evaluate(problem)
         ma.append(m["max_avg_load"])
         ei.append(m["ext_int_comm"])
+        mxl.append(m["max_load"])
         if threads_per_node:
             tma.append(float(_thread_max_avg(
                 problem.loads, problem.assignment,
@@ -179,7 +228,9 @@ def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
                         scanned=False,
                         wall_seconds=time.perf_counter() - t_start,
                         thread_max_avg=(np.array(tma) if threads_per_node
-                                        else None))
+                                        else None),
+                        lb_fired=np.array(fired), max_load=np.array(mxl),
+                        migrated_load=np.array(migl))
 
 
 # ---------------------------------------------------------- scanned path --
@@ -200,21 +251,27 @@ def _thread_max_avg(loads, assignment, num_nodes: int,
 
 @functools.lru_cache(maxsize=64)
 def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
-                    kw_items: tuple, threads_per_node: Optional[int] = None):
+                    kw_items: tuple, threads_per_node: Optional[int] = None,
+                    trig=None):
     """Compile-once scan over the whole replay.
 
-    Cache key: the evolve closure (identity), the static replay shape, and
-    the strategy binding — re-running the same scenario/strategy reuses
+    Cache key: the evolve closure (identity), the static replay shape,
+    the strategy binding and the trigger policy (triggers are frozen
+    dataclasses) — re-running the same scenario/strategy/trigger reuses
     the compiled executable."""
     strat = engine.get_strategy(strategy)
     plan = strat.bind(**dict(kw_items))
-    do_lb_at_all = strategy != "none" and lb_every > 0
+    trig = trig or rt_triggers.resolve(None, lb_every=lb_every)
+    do_lb_at_all = strategy != "none" and not trig.never
 
-    def step(problem, t):
+    def step(carry, t):
+        problem, tstate = carry
         problem = evolve(problem, t)
         prev = problem.assignment
         if do_lb_at_all:
-            do = (t > 0) & (t % lb_every == 0)
+            mx, av, tot = rt_triggers.load_stats(
+                problem.loads, problem.assignment, problem.num_nodes)
+            do, tstate = trig.decide(tstate, t, mx, av, tot)
             new_assignment, _stats = jax.lax.cond(
                 do,
                 plan,
@@ -222,22 +279,33 @@ def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
                            engine.zero_stats()),
                 problem,
             )
+            delta = new_assignment != prev
             moved = jnp.where(
-                do, jnp.mean((new_assignment != prev).astype(jnp.float32)),
+                do, jnp.mean(delta.astype(jnp.float32)), 0.0)
+            migrated_load = jnp.where(
+                do,
+                jnp.where(delta,
+                          jnp.asarray(problem.loads, jnp.float32),
+                          0.0).sum(),
                 0.0)
+            fired = do.astype(jnp.float32)
             problem = problem.with_assignment(new_assignment)
         else:
             moved = jnp.float32(0.0)
+            migrated_load = jnp.float32(0.0)
+            fired = jnp.float32(0.0)
         m = metrics.evaluate_device(problem)
         if threads_per_node:
             tma = _thread_max_avg(problem.loads, problem.assignment,
                                   problem.num_nodes, threads_per_node)
         else:
             tma = jnp.float32(0.0)
-        return problem, (m.max_avg_load, m.ext_int_comm, moved, tma)
+        return (problem, tstate), (m.max_avg_load, m.ext_int_comm, moved,
+                                   tma, fired, m.max_load, migrated_load)
 
     def run(problem):
-        return jax.lax.scan(step, problem, jnp.arange(steps))
+        return jax.lax.scan(step, (problem, trig.init_state()),
+                            jnp.arange(steps))
 
     return jax.jit(run)
 
@@ -393,6 +461,14 @@ def run_series_batch(
         raise ValueError(
             f"strategy {strategy!r} is not jittable; the batched replay "
             "needs a traceable plan_fn (diff-* / none)")
+    if strat.trigger is not None:
+        # refuse rather than silently downgrade the wrapped strategy's
+        # adaptive policy to the fixed cadence (per-lane trigger state in
+        # the vmapped carry is a ROADMAP item)
+        raise ValueError(
+            f"strategy {strategy!r} carries an adaptive trigger; the "
+            "batched replay only supports the fixed lb_every cadence — "
+            f"use run_series or the base strategy")
     pairs = [inst[-2:] for inst in instances]
     for _, ev in pairs:
         if not getattr(ev, "jittable", False):
@@ -425,14 +501,14 @@ def run_series_batch(
 
 
 def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,
-                        strategy_kwargs,
-                        threads_per_node=None) -> SeriesResult:
+                        strategy_kwargs, threads_per_node=None,
+                        trig=None) -> SeriesResult:
     runner = _scanned_runner(
         evolve, steps, lb_every, strategy,
-        tuple(sorted(strategy_kwargs.items())), threads_per_node)
+        tuple(sorted(strategy_kwargs.items())), threads_per_node, trig)
     t_start = time.perf_counter()
     try:
-        _final, (ma, ei, mig, tma) = runner(_canonical(initial))
+        _final, ys = runner(_canonical(initial))
     except jax.errors.TracerArrayConversionError as e:
         # scan=True forced with a host-NumPy evolve: surface the cause
         # instead of the opaque tracer leak from inside lax.scan
@@ -440,10 +516,13 @@ def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,
             "the evolve callable is not jit-traceable (it converts traced "
             "arrays to NumPy); use scan=False or a pure-jnp evolve — "
             "scenarios from sim/scenarios.py are scan-safe") from e
-    ma, ei, mig, tma = jax.device_get((ma, ei, mig, tma))
+    ma, ei, mig, tma, fired, mxl, migl = jax.device_get(ys)
     wall = time.perf_counter() - t_start
     return SeriesResult(np.asarray(ma, np.float64), np.asarray(ei, np.float64),
                         np.asarray(mig, np.float64), wall, scanned=True,
                         wall_seconds=wall,
                         thread_max_avg=(np.asarray(tma, np.float64)
-                                        if threads_per_node else None))
+                                        if threads_per_node else None),
+                        lb_fired=np.asarray(fired, np.float64),
+                        max_load=np.asarray(mxl, np.float64),
+                        migrated_load=np.asarray(migl, np.float64))

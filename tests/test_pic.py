@@ -58,6 +58,25 @@ def test_diffusion_lower_migration_than_greedy_global():
     assert (r_d.migrated_bytes.sum() <= r_g.migrated_bytes.sum())
 
 
+def test_summary_reports_wall_and_comm_ratio():
+    r = driver.run(_cfg(strategy="diff-comm", steps=20, lb_every=8,
+                        strategy_kwargs=dict(k=2)))
+    s = r.summary()
+    # schema-stable additions: wall seconds + mean ext/int ratio
+    for key in ("mean_max_avg", "mean_ext_bytes", "mean_ext_int",
+                "total_migrated_bytes", "lb_seconds", "modeled_time",
+                "wall_seconds"):
+        assert key in s and np.isfinite(s[key]), key
+    assert s["wall_seconds"] > 0
+    assert s["mean_ext_int"] >= 0
+    # hand-check the ratio definition on the recorded series
+    with_int = r.int_bytes > 0
+    expect = np.where(with_int, r.ext_bytes / np.where(with_int,
+                                                       r.int_bytes, 1.0),
+                      np.where(r.ext_bytes > 0, 1.0e6, 0.0)).mean()
+    assert s["mean_ext_int"] == float(expect)
+
+
 def test_build_problem_edges_follow_motion():
     loads = np.ones(16, np.float32)
     assign = chares.initial_mapping(4, 4, 2, "striped")
