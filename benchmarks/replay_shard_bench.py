@@ -1,0 +1,190 @@
+"""Sharded replay vs single-device replay: the whole step loop on a mesh.
+
+Replays every registered scenario (sim/scenarios.py) twice — through the
+single-device scanned path (``sim.simulator.run_series``) and through the
+mesh-sharded replay runtime (``distributed.replay_shard`` — evolve,
+trigger, sharded three-stage planning and the assignment update all
+inside one ``shard_map``) — plus the PIC driver end-to-end (executed
+particle exchange via the in-scan ``ppermute`` ring all-to-all,
+``PICConfig(sharded_replay=True)``).  The headline gate is **parity, not
+speed**: on an emulated CPU mesh the sharded wall time measures virtual-
+device overhead, not distributed planning time (the same caveat
+fig5_scaling documents), so wall numbers are reported honestly but not
+asserted.  Every scenario must reproduce the single-device trajectory
+**bit-for-bit** — per-step metrics, trigger fire steps, migration
+counts/loads and final assignments (PIC: final particle order too).
+
+Results are written twice: ``artifacts/bench/replay_shard_bench.json``
+(legacy location) and the stable-schema ``BENCH_replay.json`` at the
+repo root (schema ``replay-bench/v1``; keys are append-only; committed +
+CI-uploaded so the perf trajectory has sharded-replay data).
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src:. python benchmarks/replay_shard_bench.py
+
+(running the file directly forces the 8-virtual-device mesh itself when
+XLA_FLAGS does not already pin a device count)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+SCHEMA = "replay-bench/v1"
+REPEATS = 3
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_replay.json")
+
+SERIES_FIELDS = ("max_avg", "ext_int", "migrations", "lb_fired",
+                 "max_load", "migrated_load", "final_assignment")
+PIC_FIELDS = ("max_avg", "ext_bytes", "int_bytes", "migrations",
+              "migrated_bytes", "lb_steps", "final_x", "final_y")
+
+
+def _parity(ref, got, fields):
+    """Per-field bit-for-bit equality (wall-derived fields excluded —
+    ``plan_seconds``/``step_seconds`` embed measured wall clock, which
+    differs between *any* two runs, sharded or not)."""
+    import numpy as np
+
+    return {f: bool(np.array_equal(np.asarray(getattr(ref, f)),
+                                   np.asarray(getattr(got, f))))
+            for f in fields}
+
+
+def _bench_scenarios(out, *, steps=200, lb_every=10, k=4):
+    import numpy as np
+
+    from benchmarks.common import table, timeit_median
+    from repro.distributed import replay_shard
+    from repro.sim import scenarios, simulator
+
+    out["scenarios"] = {}
+    rows = []
+    for name in scenarios.available():
+        prob, evolve = scenarios.get(name).instantiate()
+        kw = dict(steps=steps, lb_every=lb_every, strategy="diff-comm",
+                  strategy_kwargs=dict(k=k))
+        single, single_wall = timeit_median(
+            lambda: simulator.run_series(prob, evolve, scan=True, **kw),
+            repeat=REPEATS)
+        mesh = replay_shard._resolve_mesh(None, None, (prob.num_nodes,))
+        D = int(np.prod(mesh.devices.shape))
+        sharded, sharded_wall = timeit_median(
+            lambda: simulator.run_series_sharded(prob, evolve, **kw),
+            repeat=REPEATS)
+        par = _parity(single, sharded, SERIES_FIELDS)
+        out["scenarios"][name] = dict(
+            num_nodes=prob.num_nodes,
+            num_shards=D,
+            rebalances=float(single.lb_fired.sum()),
+            migrated_load=float(single.migrated_load.sum()),
+            single_wall_seconds=single_wall,
+            sharded_wall_seconds=sharded_wall,
+            parity=par,
+            bit_for_bit=all(par.values()),
+        )
+        rows.append([name, prob.num_nodes, D, int(single.lb_fired.sum()),
+                     f"{single_wall:.3f}", f"{sharded_wall:.3f}",
+                     all(par.values())])
+        assert all(par.values()), \
+            f"sharded replay diverged from single-device on {name}: " \
+            f"{ {f: v for f, v in par.items() if not v} }"
+    print(f"\nscenario registry replay (diff-comm k={k}, {steps} steps, "
+          f"median of {REPEATS})")
+    print(table(["scenario", "P", "shards", "rebalances", "single s",
+                 "sharded s", "bit-for-bit"], rows))
+
+
+def _bench_pic(out, *, steps=60, lb_every=10):
+    import numpy as np
+
+    from benchmarks.common import table, timeit_median
+    from repro.distributed import replay_shard
+    from repro.pic import driver
+
+    base = dict(L=200, n_particles=20_000, steps=steps, k=2, rho=0.9,
+                cx=10, cy=10, num_pes=8, mapping="striped",
+                lb_every=lb_every, strategy="diff-comm",
+                strategy_kwargs=dict(k=4))
+    single_cfg = driver.PICConfig(scan=True, **base)
+    sharded_cfg = driver.PICConfig(sharded_replay=True, **base)
+    single, single_wall = timeit_median(
+        lambda: driver.run(single_cfg), repeat=REPEATS)
+    mesh = replay_shard._resolve_mesh(
+        None, None, (base["n_particles"], base["num_pes"]))
+    D = int(np.prod(mesh.devices.shape))
+    sharded, sharded_wall = timeit_median(
+        lambda: driver.run(sharded_cfg), repeat=REPEATS)
+    par = _parity(single, sharded, PIC_FIELDS)
+    conserved = bool(sharded.final_x.shape[0] == base["n_particles"]
+                     and np.isfinite(sharded.final_x).all())
+    out["pic"] = dict(
+        n_particles=base["n_particles"],
+        num_pes=base["num_pes"],
+        num_shards=D,
+        rebalances=float(single.lb_steps.sum()),
+        migrated_bytes=float(single.migrated_bytes.sum()),
+        particles_conserved=conserved,
+        single_wall_seconds=single_wall,
+        sharded_wall_seconds=sharded_wall,
+        parity=par,
+        bit_for_bit=all(par.values()),
+    )
+    print(f"\nPIC driver 20k particles, {steps} steps, {D}-shard mesh, "
+          f"executed in-scan exchange")
+    print(table(
+        ["path", "rebalances", "migrated bytes", "wall s", "bit-for-bit"],
+        [["single", int(single.lb_steps.sum()),
+          f"{single.migrated_bytes.sum():.0f}", f"{single_wall:.3f}", "-"],
+         ["sharded", int(sharded.lb_steps.sum()),
+          f"{sharded.migrated_bytes.sum():.0f}", f"{sharded_wall:.3f}",
+          all(par.values())]]))
+    assert conserved, "sharded exchange must conserve particles"
+    assert all(par.values()), \
+        f"sharded PIC replay diverged: " \
+        f"{ {f: v for f, v in par.items() if not v} }"
+
+
+def write_bench_json(out) -> str:
+    """Stable-schema perf-trajectory artifact at the repo root."""
+    payload = dict(
+        schema=SCHEMA,
+        generated_by="benchmarks/replay_shard_bench.py",
+        repeats=REPEATS,
+        **out,
+    )
+    path = os.path.abspath(BENCH_PATH)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def run():
+    import jax
+
+    from benchmarks.common import save_result
+
+    out = {"devices": len(jax.devices()),
+           "backend": jax.default_backend(),
+           # wall numbers on a forced CPU mesh measure virtual-device
+           # overhead, not distributed planning time — flagged so the
+           # perf trajectory never reads them as a regression
+           "emulated_mesh": "xla_force_host_platform_device_count"
+                            in os.environ.get("XLA_FLAGS", "")}
+    _bench_scenarios(out)
+    _bench_pic(out)
+
+    path = save_result("replay_shard_bench", out)
+    bench_path = write_bench_json(out)
+    print(f"\nsaved {path}\nsaved {bench_path}")
+    return out
+
+
+if __name__ == "__main__":
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+    run()

@@ -11,9 +11,9 @@ import time
 import traceback
 
 from benchmarks import (engine_bench, ep_balance_bench, fig2_stencil,
-                        fig4_pic_lb, fig5_scaling, kernel_bench, roofline,
-                        runtime_bench, table1_neighbor_count,
-                        table2_strategies)
+                        fig4_pic_lb, fig5_scaling, kernel_bench,
+                        replay_shard_bench, roofline, runtime_bench,
+                        table1_neighbor_count, table2_strategies)
 
 ALL = {
     "fig2": fig2_stencil.run,
@@ -23,6 +23,7 @@ ALL = {
     "fig5": fig5_scaling.run,
     "engine": engine_bench.run,
     "runtime": runtime_bench.run,
+    "replay": replay_shard_bench.run,
     "ep_balance": ep_balance_bench.run,
     "kernels": kernel_bench.run,
     "roofline": roofline.run,

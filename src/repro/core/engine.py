@@ -366,6 +366,13 @@ class Strategy:
     carries ``trigger="threshold"``).  The replay layers resolve it when
     the caller passes ``trigger=None``; a plain strategy (``trigger is
     None``) keeps the legacy fixed ``lb_every`` cadence.
+
+    ``variant`` names the diffusion-planner variant (``"comm"`` /
+    ``"coord"``) behind a diff-* strategy.  The sharded replay runtime
+    (``distributed/replay_shard.py``) reads it to instantiate the
+    mesh-sharded twin of the same planner configuration; ``None`` marks
+    strategies with no diffusion engine behind them (baselines,
+    ``"none"``), which the sharded replay cannot distribute.
     """
 
     name: str
@@ -373,6 +380,7 @@ class Strategy:
     jittable: bool = False
     defaults: Mapping = dataclasses.field(default_factory=dict)
     trigger: Optional[str] = None
+    variant: Optional[str] = None
 
     def params(self, **overrides) -> Dict:
         return {**self.defaults, **overrides}
@@ -453,8 +461,10 @@ def _host(fn):
 
 
 register(Strategy("none", _none_plan_fn, jittable=True))
-register(Strategy("diff-comm", _diffusion_plan_fn("comm"), jittable=True))
-register(Strategy("diff-coord", _diffusion_plan_fn("coord"), jittable=True))
+register(Strategy("diff-comm", _diffusion_plan_fn("comm"), jittable=True,
+                  variant="comm"))
+register(Strategy("diff-coord", _diffusion_plan_fn("coord"), jittable=True,
+                  variant="coord"))
 register(Strategy("greedy", _host(baselines.greedy)))
 register(Strategy("greedy-refine", _host(baselines.greedy_refine)))
 register(Strategy("metis", _host(baselines.metis_like)))
@@ -468,5 +478,5 @@ for _variant in ("comm", "coord"):
     for _trig in ("threshold", "predictive"):
         register(Strategy(f"diff-{_variant}+{_trig}",
                           _diffusion_plan_fn(_variant), jittable=True,
-                          trigger=_trig))
+                          trigger=_trig, variant=_variant))
 del _variant, _trig

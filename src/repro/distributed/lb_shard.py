@@ -375,7 +375,8 @@ class ShardedLBEngine:
 
     # ---------------------------------------------------- sharded apply --
 
-    def apply(self, owner_new, arrays, *, num_nodes: int, capacity: int):
+    def apply(self, owner_new, arrays, *, num_nodes: int,
+              capacity: Optional[int] = None):
         """Execute a plan across this engine's mesh: relocate per-item
         payload between the shard-owned slot regions.
 
@@ -386,8 +387,9 @@ class ShardedLBEngine:
         ``runtime.migrate.migrate_sharded`` — a ``ppermute`` ring
         all-to-all whose concatenated valid prefixes reproduce the
         single-device bucketed layout bit-for-bit.  ``capacity`` is the
-        static per-shard slot budget (≥ the largest per-shard item
-        count)."""
+        static per-shard slot budget; the ``None`` default sizes it
+        from the plan's own max per-shard inflow
+        (``runtime.migrate.planned_capacity``)."""
         from repro.runtime import migrate as rt_migrate
 
         return rt_migrate.migrate_sharded(
@@ -467,6 +469,8 @@ def _sharded_plan_fn(variant: str):
 # to be dispatched eagerly (the replay layers' scanned paths keep using
 # the single-device engine; the two agree — that is the parity test)
 core_engine.register(core_engine.Strategy(
-    "diff-comm-sharded", _sharded_plan_fn("comm"), jittable=False))
+    "diff-comm-sharded", _sharded_plan_fn("comm"), jittable=False,
+    variant="comm"))
 core_engine.register(core_engine.Strategy(
-    "diff-coord-sharded", _sharded_plan_fn("coord"), jittable=False))
+    "diff-coord-sharded", _sharded_plan_fn("coord"), jittable=False,
+    variant="coord"))

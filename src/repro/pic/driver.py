@@ -89,6 +89,19 @@ class PICConfig:
     # chare→thread via the device-resident within-node LPT) in
     # PICResult.thread_max_avg — computed inside the scan, no host trip.
     threads_per_node: Optional[int] = None
+    # mesh-sharded replay (distributed/replay_shard.py): the whole run —
+    # push, trigger, planning, executed particle exchange — inside ONE
+    # shard_map over the 1-D "lb" device mesh, particle slabs
+    # row-sharded, bit-for-bit the single-device scanned path.  Needs a
+    # jittable strategy; the mesh auto-sizes to the largest device count
+    # dividing both n_particles and num_pes (replay_shards overrides).
+    # replay_capacity is the static per-shard slot budget for the in-scan
+    # ring all-to-all (None = worst-case n_particles, always safe; an
+    # undersized budget raises ValueError after the run rather than
+    # dropping payload).
+    sharded_replay: bool = False
+    replay_shards: Optional[int] = None
+    replay_capacity: Optional[int] = None
     bytes_per_particle: float = 48.0
     seed: int = 0
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
@@ -185,6 +198,13 @@ def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
             cfg, sweep_chunk=None,
             strategy_kwargs={**(cfg.strategy_kwargs or {}),
                              "sweep_chunk": cfg.sweep_chunk})
+    if cfg.sharded_replay:
+        if cfg.scan is False:
+            raise ValueError(
+                "sharded_replay is a scanned path; drop scan=False")
+        from repro.distributed import replay_shard
+
+        return replay_shard.run_pic_sharded(cfg, cost)
     use_scan = cfg.scan
     if use_scan and not core_engine.get_strategy(cfg.strategy).jittable:
         raise ValueError(
@@ -275,6 +295,9 @@ def _chunk_runner(
             (xn, yn, vxn, vyn, q, new_chare, perm), moved_n = jax.lax.cond(
                 do, do_move, lambda args: (args, jnp.int32(0)),
                 (xn, yn, vxn, vyn, q, new_chare, perm))
+            # feed the executed exchange back (measured predictive gate):
+            # load units are particles, matching the trigger's load stats
+            tstate = trig.observe(tstate, moved_n.astype(jnp.float32), do)
             migb = moved_n.astype(jnp.float32) * bpp
             fired = do.astype(jnp.float32)
             assignment = new_assignment
@@ -473,8 +496,8 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
             owner_old = assignment[chare_id]
             owner_new = new_assignment[chare_id].astype(np.int32)
             order = np.argsort(owner_new, kind="stable")
-            mig_bytes[t] = float(
-                (owner_old != owner_new).sum() * cfg.bytes_per_particle)
+            moved_n = int((owner_old != owner_new).sum())
+            mig_bytes[t] = float(moved_n * cfg.bytes_per_particle)
             x = jnp.asarray(np.asarray(x)[order])
             y = jnp.asarray(np.asarray(y)[order])
             vx = jnp.asarray(np.asarray(vx)[order])
@@ -483,6 +506,13 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
             chare_id = chare_id[order]
             perm = perm[order]
             assignment = new_assignment.astype(np.int32)
+        if lb_on and not isinstance(trig, rt_triggers.EveryTrigger):
+            # measured predictive gate: same f32 particle count the
+            # scanned path observes (moved_n for fired steps, else 0)
+            tstate = trig.observe(
+                tstate,
+                jnp.float32(mig_bytes[t] / cfg.bytes_per_particle),
+                jnp.asarray(bool(do)))
 
         if cfg.threads_per_node:
             # same device-resident LPT as the scanned path (f32 parity)

@@ -127,19 +127,38 @@ def migrate(owner_old, owner_new, arrays: Sequence, *, num_nodes: int,
 # ----------------------------------------------------- sharded exchange --
 
 
-def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
-                  capacity: int, axis: str):
-    """Per-shard ring all-to-all (runs under ``shard_map``).
+def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
+                  capacity: int, axis: str, count_loc=None):
+    """Per-shard ring all-to-all core (runs under ``shard_map``).
 
     Shard ``d`` owns nodes ``[d*rpd, (d+1)*rpd)``.  The local block
     rotates D-1 ``ppermute`` hops; at hop ``s`` shard ``me`` sees the
     block of shard ``(me+s) % D`` and scatters the items it owns into
     its (capacity,) output at exact global-bucket positions, computed
-    from the all-gathered (D, P) per-shard count matrix — so the
-    concatenated valid prefixes reproduce the single-device stable
-    bucketed order bit-for-bit."""
+    from the all-gathered (D, P) count matrix — so the concatenated
+    per-shard valid prefixes reproduce the single-device stable
+    bucketed order bit-for-bit.
+
+    ``count_loc`` (i32 scalar, optional) marks only the first
+    ``count_loc`` slots of this shard's slab as live items; the rest are
+    padding and are neither counted nor scattered.  ``None`` treats the
+    whole slab as live (the :func:`migrate_sharded` entry).  The masked
+    form is what lets the **sharded replay loop**
+    (``distributed/replay_shard.py``) carry fixed-``capacity`` payload
+    slabs through ``lax.scan`` and re-bucket them at every fired
+    rebalance without a host trip.
+
+    Returns ``(out_owner, outs, count_me)``: the (capacity,) relocated
+    owner/payload slabs (valid prefix ``count_me``) for this shard.
+    """
     rpd = num_nodes // D
     me = jax.lax.axis_index(axis)
+    slots = jnp.arange(owner_loc.shape[0], dtype=jnp.int32)
+    live = (jnp.ones(owner_loc.shape, bool) if count_loc is None
+            else slots < jnp.asarray(count_loc, jnp.int32))
+    # padding slots carry stale owner ids: segment them out of range so
+    # they contribute to no bucket
+    owner_loc = jnp.where(live, owner_loc, num_nodes)
     cnt_loc = jax.ops.segment_sum(
         jnp.ones(owner_loc.shape, jnp.int32), owner_loc,
         num_segments=num_nodes)
@@ -157,7 +176,7 @@ def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
     for s in range(D):
         src = (me + s) % D
         pe = buf[0]
-        accept = (pe // rpd) == me
+        accept = (pe // rpd) == me      # padding (pe == P) accepts nowhere
         # items from earlier source shards land first within each bucket
         # (source order == global index order: shards hold contiguous
         # global ranges), preserving the stable-sort tie order
@@ -165,10 +184,12 @@ def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
         onehot = (pe[:, None] == pe_ids[None, :]) & accept[:, None]
         rank = (jnp.take_along_axis(
             jnp.cumsum(onehot.astype(jnp.int32), axis=0),
-            pe[:, None], axis=1)[:, 0] - 1)
+            jnp.clip(pe[:, None], 0, num_nodes - 1), axis=1)[:, 0] - 1)
         r = jnp.clip(pe - me * rpd, 0, rpd - 1)
         pos = jnp.where(
-            accept, my_base[r] + jnp.take(before, pe) + rank, capacity)
+            accept,
+            my_base[r] + jnp.take(before, pe, mode="clip") + rank,
+            capacity)
         out_owner = out_owner.at[pos].set(pe, mode="drop")
         outs = tuple(o.at[pos].set(v, mode="drop")
                      for o, v in zip(outs, buf[1:]))
@@ -178,19 +199,49 @@ def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
                     b, axis, [(d, (d - 1) % D) for d in range(D)])
                 for b in buf)
     count_me = my_sizes.sum().astype(jnp.int32)
+    return out_owner, outs, count_me
+
+
+def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
+                  capacity: int, axis: str):
+    """``shard_map`` adapter over :func:`ring_exchange` (whole slab live)."""
+    out_owner, outs, count_me = ring_exchange(
+        owner_loc, tuple(arr_loc), num_nodes=num_nodes, D=D,
+        capacity=capacity, axis=axis)
     return (out_owner,) + outs + (count_me[None],)
 
 
+def planned_capacity(owner_new, *, num_nodes: int, num_shards: int) -> int:
+    """Static per-shard slot budget planned from an executed plan.
+
+    The exchange's exact space requirement on shard ``d`` is the total
+    bucket size of the nodes it owns — the **max inflow bound** the
+    planner's flow budget realizes once stage 3 has assigned objects.
+    This host-side helper computes that tight bound from ``owner_new``
+    (one transfer; the eager :func:`migrate_sharded` entry already
+    synchronizes on the result).  Callers that need a trace-time
+    constant (the sharded replay loop, which sizes its ``lax.scan``
+    payload slabs before any plan exists) must fall back to the
+    worst-case ``n``."""
+    counts = np.bincount(np.asarray(owner_new), minlength=num_nodes)
+    per_shard = counts.reshape(num_shards, num_nodes // num_shards).sum(1)
+    return max(1, int(per_shard.max()))
+
+
 def migrate_sharded(owner_new, arrays: Sequence, *, num_nodes: int,
-                    mesh: Optional[Mesh] = None, capacity: int):
+                    mesh: Optional[Mesh] = None,
+                    capacity: Optional[int] = None):
     """Ring all-to-all payload exchange across a 1-D device mesh.
 
     ``owner_new`` / ``arrays`` are the *global* (n,) buffers, row-sharded
     over the mesh (n and ``num_nodes`` must divide the shard count; the
     caller pads if not).  ``capacity`` is the static per-shard slot
-    budget and must be ≥ the largest per-shard item count — an
-    overflowing exchange raises ``ValueError`` (payload is never lost
-    silently); size it from a known bound (``n`` is always safe).
+    budget; ``None`` (the default) derives the tight bound from the
+    plan itself — :func:`planned_capacity`, the max per-shard inflow —
+    so callers no longer have to pass the worst-case ``n``.  An explicit
+    ``capacity`` overrides the planned bound (e.g. to keep one compiled
+    executable across calls); a value below the largest per-shard item
+    count raises ``ValueError`` (payload is never lost silently).
 
     Returns ``(owner_out, arrays_out, counts)`` where the outputs are
     (D*capacity,) padded global buffers (shard ``d``'s valid prefix is
@@ -209,6 +260,9 @@ def migrate_sharded(owner_new, arrays: Sequence, *, num_nodes: int,
         raise ValueError(
             f"n={n} and num_nodes={num_nodes} must divide the {D}-device "
             "mesh")
+    if capacity is None:
+        capacity = planned_capacity(owner_new, num_nodes=num_nodes,
+                                    num_shards=D)
     body = functools.partial(
         _sharded_body, num_nodes=int(num_nodes), D=D,
         capacity=int(capacity), axis=ax)

@@ -52,12 +52,18 @@ class TriggerState(NamedTuple):
 
     ``history`` is a ring-free rolling window (newest sample last) sized
     by the trigger's static ``window``; simple triggers carry a length-1
-    window they never read."""
+    window they never read.  ``last_moved`` is the measured load volume
+    of the most recent *executed* exchange (fed back by the replay
+    layers via :meth:`PredictiveTrigger.observe`); negative means no
+    exchange has been observed yet — the cold-start regime, where the
+    predictive gate falls back to ``RuntimeCostModel.moved_frac_est``."""
 
-    last_lb: jax.Array    # i32 — step index of the last fired rebalance
-    armed: jax.Array      # bool — hysteresis arm flag
-    history: jax.Array    # (W,) f32 — recent excess-load samples
-    hist_len: jax.Array   # i32 — valid entries at the tail of history
+    last_lb: jax.Array     # i32 — step index of the last fired rebalance
+    armed: jax.Array       # bool — hysteresis arm flag
+    history: jax.Array     # (W,) f32 — recent excess-load samples
+    hist_len: jax.Array    # i32 — valid entries at the tail of history
+    last_moved: jax.Array  # f32 — load moved by the last executed
+    #                        exchange; < 0 until one has been observed
 
 
 def _init_state(window: int) -> TriggerState:
@@ -66,6 +72,7 @@ def _init_state(window: int) -> TriggerState:
         armed=jnp.asarray(True),
         history=jnp.zeros((max(1, int(window)),), jnp.float32),
         hist_len=jnp.int32(0),
+        last_moved=jnp.float32(-1.0),
     )
 
 
@@ -110,6 +117,11 @@ class EveryTrigger:
         do = (t > 0) & (t % self.every == 0)
         return do, state
 
+    def observe(self, state: TriggerState, moved_load,
+                fired) -> TriggerState:
+        """Fixed cadence ignores execution feedback (no-op)."""
+        return state
+
 
 @dataclasses.dataclass(frozen=True)
 class ThresholdTrigger:
@@ -149,6 +161,11 @@ class ThresholdTrigger:
             armed=jnp.where(do, False, armed),
         )
 
+    def observe(self, state: TriggerState, moved_load,
+                fired) -> TriggerState:
+        """Hysteresis looks only at load stats (no-op)."""
+        return state
+
 
 @dataclasses.dataclass(frozen=True)
 class PredictiveTrigger:
@@ -159,15 +176,25 @@ class PredictiveTrigger:
     imbalance-time that *not* rebalancing would cost over the next
     ``horizon`` steps: ``sum_h max(0, excess + slope*h) * t_load``.
     Fires when that projected loss (scaled by ``efficiency`` — the
-    fraction a rebalance actually recovers) exceeds the modeled a-priori
-    migration cost ``cost.est_migration_seconds(total_load)``, subject to
-    the ``min_interval`` refractory period."""
+    fraction a rebalance actually recovers) exceeds the migration cost
+    it would pay, subject to the ``min_interval`` refractory period.
+
+    The migration-cost gate is **measured when possible** (Boulmier et
+    al.: anticipate against what rebalancing actually costs): once the
+    replay layer has executed an exchange and fed its moved-load volume
+    back through :meth:`observe`, the gate prices that *last executed*
+    volume (``cost.migration_seconds(state.last_moved)``).  Before any
+    exchange has been observed — the cold start — it falls back to the
+    a-priori estimate ``cost.est_migration_seconds(total_load)``
+    (``moved_frac_est`` of the total load).  ``measured_gate=False``
+    pins the estimate-only legacy behavior."""
 
     window: int = 8
     horizon: int = 8
     min_interval: int = 2
     efficiency: float = 0.8
     cost: RuntimeCostModel = RuntimeCostModel()
+    measured_gate: bool = True
 
     @property
     def never(self) -> bool:
@@ -201,8 +228,17 @@ class PredictiveTrigger:
         h = jnp.arange(1, self.horizon + 1, dtype=jnp.float32)
         projected = jnp.maximum(excess + slope * h, 0.0).sum()
         loss = projected * self.cost.t_load * self.efficiency
-        gate = self.cost.est_migration_seconds(
+        est = self.cost.est_migration_seconds(
             jnp.asarray(total_load, jnp.float32))
+        if self.measured_gate:
+            # amortize against the last *executed* exchange volume once
+            # one exists; the modeled estimate is only the cold-start
+            # prior (ROADMAP: measured, not estimated, predictive gate)
+            gate = jnp.where(
+                state.last_moved >= 0.0,
+                self.cost.migration_seconds(state.last_moved), est)
+        else:
+            gate = est
 
         do = ((t > 0) & (hist_len >= 2) & (loss > gate)
               & (t - state.last_lb >= self.min_interval))
@@ -212,7 +248,22 @@ class PredictiveTrigger:
             armed=state.armed,
             history=hist,
             hist_len=hist_len.astype(jnp.int32),
+            last_moved=state.last_moved,
         )
+
+    def observe(self, state: TriggerState, moved_load,
+                fired) -> TriggerState:
+        """Record the measured volume of an executed exchange.
+
+        Called by every replay layer *after* a fired rebalance has been
+        applied, with the load total the exchange actually moved (the
+        same quantity ``SeriesResult.migrated_load`` /
+        ``PICResult.migrated_bytes / bytes_per_load`` records).
+        Traceable — safe inside the scanned and sharded replay loops."""
+        fired = jnp.asarray(fired)
+        return state._replace(last_moved=jnp.where(
+            fired.astype(bool),
+            jnp.asarray(moved_load, jnp.float32), state.last_moved))
 
 
 Trigger = Union[EveryTrigger, ThresholdTrigger, PredictiveTrigger]
@@ -247,10 +298,11 @@ def resolve(spec, *, lb_every: int,
             raise KeyError(
                 f"unknown trigger {spec!r}; available: {sorted(_BY_NAME)}")
         return _named(spec, int(lb_every))
-    if not all(hasattr(spec, a) for a in ("decide", "init_state", "never")):
+    if not all(hasattr(spec, a)
+               for a in ("decide", "init_state", "never", "observe")):
         raise TypeError(
             f"trigger must be a name or a Trigger instance (decide / "
-            f"init_state / never), got {spec!r}")
+            f"init_state / never / observe), got {spec!r}")
     return spec
 
 

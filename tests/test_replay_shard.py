@@ -1,0 +1,382 @@
+"""Sharded replay runtime: the whole step loop inside one ``shard_map``.
+
+The load-bearing guarantees:
+
+  * ``run_series_sharded`` is **bit-for-bit** the single-device scanned
+    ``run_series`` — per-step metrics, trigger fire steps, migration
+    fractions/loads and the final assignment — on any mesh size
+    (in-process tests degrade to a 1-device mesh; the subprocess test
+    forces an 8-virtual-device mesh so the genuinely distributed case is
+    asserted in every CI run);
+  * the sharded PIC driver (``PICConfig(sharded_replay=True)``) executes
+    its particle exchanges *inside the scan* via the masked ``ppermute``
+    ring all-to-all and still reproduces the single-device scanned
+    ``PICResult`` bit-for-bit, including ``final_x/final_y`` restored to
+    particle-id order (wall-derived fields — ``step_seconds``,
+    ``lb_seconds`` — embed measured plan wall time and are excluded:
+    they differ between any two runs of *either* path);
+  * repeated in-scan exchanges conserve the particle population exactly
+    (the slab prefixes always hold a permutation of the particle ids);
+  * the measured predictive gate (``TriggerState.last_moved``) amortizes
+    against the last executed exchange and falls back to the modeled
+    estimate only before one exists.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.pic import driver
+from repro.runtime import cost as rt_cost
+from repro.runtime import migrate as rt_migrate
+from repro.runtime import triggers as rt
+from repro.sim import scenarios, simulator
+
+SERIES_FIELDS = ("max_avg", "ext_int", "migrations", "lb_fired",
+                 "max_load", "migrated_load", "final_assignment")
+PIC_FIELDS = ("max_avg", "ext_bytes", "int_bytes", "migrations",
+              "migrated_bytes", "lb_steps", "final_x", "final_y")
+
+
+def _assert_parity(ref, got, fields):
+    for f in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
+            err_msg=f"sharded replay diverged on {f}")
+
+
+# ------------------------------------------------------- series replay --
+
+
+def test_series_sharded_matches_scanned():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    kw = dict(steps=14, lb_every=4, strategy="diff-comm",
+              strategy_kwargs=dict(k=2))
+    ref = simulator.run_series(prob, evolve, scan=True, **kw)
+    sh = simulator.run_series_sharded(prob, evolve, **kw)
+    assert sh.scanned and sh.lb_fired.sum() > 0
+    _assert_parity(ref, sh, SERIES_FIELDS)
+
+
+@pytest.mark.parametrize("trigger", ["threshold", "predictive"])
+def test_series_sharded_adaptive_trigger_parity(trigger):
+    prob, evolve = scenarios.get("bimodal-churn").instantiate(
+        grid=8, num_nodes=4)
+    kw = dict(steps=20, lb_every=5, strategy="diff-comm",
+              strategy_kwargs=dict(k=2), trigger=trigger)
+    ref = simulator.run_series(prob, evolve, scan=True, **kw)
+    sh = simulator.run_series_sharded(prob, evolve, **kw)
+    assert ref.lb_fired.sum() > 0         # the policy does act
+    _assert_parity(ref, sh, SERIES_FIELDS)
+
+
+def test_series_sharded_threads_per_node_parity():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    kw = dict(steps=10, lb_every=3, strategy="diff-comm",
+              strategy_kwargs=dict(k=2), threads_per_node=2)
+    ref = simulator.run_series(prob, evolve, scan=True, **kw)
+    sh = simulator.run_series_sharded(prob, evolve, **kw)
+    np.testing.assert_array_equal(ref.thread_max_avg, sh.thread_max_avg)
+
+
+def test_series_sharded_runner_cache_keyed_on_node_count():
+    # regression: the runner cache must not hand a trace compiled for a
+    # different P to an otherwise-identical call (same evolve identity,
+    # same array shapes, same steps/strategy) — the node count is baked
+    # into the compiled shard_map body, unlike the single-device runner
+    # whose jit retraces on the problem's static num_nodes field
+    from repro.sim import stencil
+
+    def evolve(p, t):
+        ramp = jnp.arange(1.0, p.loads.shape[0] + 1.0, dtype=jnp.float32)
+        return dataclasses.replace(
+            p, loads=(1.5 + jnp.cos(0.3 * t)) * ramp)
+
+    evolve.jittable = True
+    kw = dict(steps=8, lb_every=3, strategy="diff-comm",
+              strategy_kwargs=dict(k=2))
+    for nodes in (4, 8):               # same (N, E) shapes, different P
+        prob = stencil.stencil_2d(8, 8, nodes)
+        ref = simulator.run_series(prob, evolve, scan=True, **kw)
+        sh = simulator.run_series_sharded(prob, evolve, num_shards=1,
+                                          **kw)
+        _assert_parity(ref, sh, SERIES_FIELDS)
+
+
+def test_series_sharded_validates_inputs():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    kw = dict(steps=4, lb_every=2)
+    with pytest.raises(ValueError, match="not jittable"):
+        simulator.run_series_sharded(prob, evolve, strategy="greedy", **kw)
+    with pytest.raises(ValueError, match="scan-safe"):
+        simulator.run_series_sharded(prob, lambda p, t: p, **kw)
+    with pytest.raises(ValueError, match="cannot honor"):
+        simulator.run_series_sharded(
+            prob, evolve, strategy="diff-comm",
+            strategy_kwargs=dict(step_fn=None), **kw)
+    with pytest.raises(ValueError, match="not both"):
+        from jax.sharding import Mesh
+        simulator.run_series_sharded(
+            prob, evolve, mesh=Mesh(np.asarray(jax.devices()[:1]),
+                                    ("lb",)),
+            num_shards=1, **kw)
+
+
+# ---------------------------------------------------------- PIC replay --
+
+
+def _pic_cfg(**kw):
+    base = dict(L=100, n_particles=2000, steps=20, k=1, rho=0.9, cx=10,
+                cy=10, num_pes=4, mapping="striped", lb_every=5,
+                strategy="diff-comm", strategy_kwargs=dict(k=2), seed=0)
+    base.update(kw)
+    return driver.PICConfig(**base)
+
+
+def test_pic_sharded_matches_scanned():
+    ref = driver.run(_pic_cfg(scan=True))
+    sh = driver.run(_pic_cfg(sharded_replay=True))
+    assert sh.scanned and sh.migrated_bytes.sum() > 0
+    _assert_parity(ref, sh, PIC_FIELDS)
+
+
+def test_pic_sharded_adaptive_trigger_parity():
+    ref = driver.run(_pic_cfg(scan=True, trigger="threshold"))
+    sh = driver.run(_pic_cfg(sharded_replay=True, trigger="threshold"))
+    assert ref.lb_steps.sum() > 0
+    _assert_parity(ref, sh, PIC_FIELDS)
+
+
+def test_pic_sharded_conservation_under_repeated_migrations():
+    # lb_every=2 → many executed in-scan exchanges; the slab prefixes
+    # must remain a permutation of the particle population throughout,
+    # and per-particle trajectories must be untouched by the exchanges
+    cfg = _pic_cfg(sharded_replay=True, lb_every=2, steps=16)
+    r = driver.run(cfg)
+    assert (r.lb_steps > 0).sum() >= 5
+    assert r.migrated_bytes.sum() > 0
+    assert r.final_x.shape == (cfg.n_particles,)
+    assert np.isfinite(r.final_x).all() and np.isfinite(r.final_y).all()
+    never = driver.run(_pic_cfg(strategy="none", steps=16))
+    np.testing.assert_array_equal(r.final_x, never.final_x)
+    np.testing.assert_array_equal(r.final_y, never.final_y)
+
+
+def test_pic_sharded_capacity_overflow_raises():
+    with pytest.raises(ValueError, match="replay_capacity"):
+        driver.run(_pic_cfg(sharded_replay=True,
+                            replay_capacity=100))
+    # a sufficient explicit budget is honored
+    r = driver.run(_pic_cfg(sharded_replay=True, replay_capacity=2000))
+    ref = driver.run(_pic_cfg(scan=True))
+    np.testing.assert_array_equal(r.final_x, ref.final_x)
+
+
+def test_pic_sharded_rejects_scan_false_and_host_strategies():
+    with pytest.raises(ValueError, match="scan"):
+        driver.run(_pic_cfg(sharded_replay=True, scan=False))
+    with pytest.raises(ValueError, match="not jittable"):
+        driver.run(_pic_cfg(sharded_replay=True, strategy="greedy"))
+
+
+# ----------------------------------------- capacity-planned sharded apply --
+
+
+def test_migrate_sharded_plans_capacity_from_the_plan():
+    D = len(jax.devices())
+    P, n = 4 * D, 32 * D
+    rng = np.random.default_rng(3)
+    on = rng.integers(0, P, n).astype(np.int32)
+    x = rng.normal(size=n).astype(np.float32)
+    ids = np.arange(n, dtype=np.int32)
+    planned = rt_migrate.planned_capacity(on, num_nodes=P, num_shards=D)
+    counts = np.bincount(on, minlength=P).reshape(D, P // D).sum(1)
+    assert planned == counts.max()
+    owner_out, (xo, ido), got_counts = rt_migrate.migrate_sharded(
+        on, (x, ids), num_nodes=P)          # capacity planned, not passed
+    assert xo.shape[0] == D * planned
+    (ref_x, ref_ids), _ = rt_migrate.migrate(on, on, (x, ids), num_nodes=P)
+    got_counts = np.asarray(got_counts)
+    got = np.concatenate(
+        [np.asarray(ido)[d * planned:d * planned + got_counts[d]]
+         for d in range(D)])
+    np.testing.assert_array_equal(got, np.asarray(ref_ids))
+
+
+# ------------------------------------------------ measured predictive gate --
+
+
+def _decide_series(trig, ml_fn, observe_moved=None, steps=24, avg=10.0,
+                   total=80.0):
+    """Fire pattern; optionally feed ``observe_moved`` after each step."""
+    def step(s, t):
+        do, s = trig.decide(s, t, jnp.float32(ml_fn(t)), jnp.float32(avg),
+                            jnp.float32(total))
+        if observe_moved is not None:
+            s = trig.observe(s, jnp.float32(observe_moved), do)
+        return s, do
+    _, dos = jax.lax.scan(step, trig.init_state(), jnp.arange(steps))
+    return np.asarray(dos)
+
+
+def test_predictive_cold_start_uses_estimate():
+    # without any observed exchange, the measured gate is the legacy
+    # estimate gate — identical firing pattern
+    model = rt_cost.RuntimeCostModel(t_byte=0.5, lb_overhead=1.0)
+    measured = rt.PredictiveTrigger(cost=model)
+    legacy = rt.PredictiveTrigger(cost=model, measured_gate=False)
+    rising = lambda t: 10.0 + 2.0 * t            # noqa: E731
+    np.testing.assert_array_equal(_decide_series(measured, rising),
+                                  _decide_series(legacy, rising))
+
+
+def test_predictive_measured_gate_amortizes_observed_volume():
+    rising = lambda t: 10.0 + 2.0 * t            # noqa: E731
+    model = rt_cost.RuntimeCostModel(t_byte=0.5, lb_overhead=1.0)
+    # estimate gate: 0.15 * 80 * 0.5 + 1 = 7.0.  A measured *cheap*
+    # exchange (gate 1.0) fires at least as often; a measured expensive
+    # one (gate > any projected loss) silences the trigger after its
+    # first cold-start firing.
+    trig = rt.PredictiveTrigger(cost=model)
+    base = _decide_series(trig, rising).sum()
+    cheap = _decide_series(trig, rising, observe_moved=0.0).sum()
+    dear = _decide_series(trig, rising, observe_moved=1e9).sum()
+    assert cheap >= base > 0
+    assert dear == 1                 # cold-start fire, then priced out
+    # estimate-only trigger ignores the observations entirely
+    legacy = rt.PredictiveTrigger(cost=model, measured_gate=False)
+    assert _decide_series(legacy, rising, observe_moved=1e9).sum() == \
+        _decide_series(legacy, rising).sum()
+
+
+def test_observe_records_only_fired_steps():
+    trig = rt.PredictiveTrigger()
+    s = trig.init_state()
+    assert float(s.last_moved) < 0
+    s = trig.observe(s, 5.0, jnp.asarray(False))
+    assert float(s.last_moved) < 0               # not fired: no sample
+    s = trig.observe(s, 5.0, jnp.asarray(True))
+    assert float(s.last_moved) == 5.0
+    s = trig.observe(s, 7.0, jnp.asarray(False))
+    assert float(s.last_moved) == 5.0            # kept until next fire
+    # simple triggers ignore the feedback
+    for simple in (rt.EveryTrigger(5), rt.ThresholdTrigger()):
+        st = simple.init_state()
+        assert simple.observe(st, 9.0, jnp.asarray(True)) is st
+
+
+def test_run_series_observe_plumbing_host_scan_parity():
+    # a predictive policy whose gate flips from fire-often (estimate) to
+    # fire-rarely (measured, expensive) only if the replay layers
+    # actually feed the executed volume back — parity across paths
+    # proves all three plumb it identically
+    model = rt_cost.RuntimeCostModel(t_load=1.0, t_byte=50.0,
+                                     bytes_per_load=1.0,
+                                     moved_frac_est=0.001)
+    trig = rt.PredictiveTrigger(cost=model)
+    prob, evolve = scenarios.get("adversarial-hotspot").instantiate(
+        grid=8, num_nodes=4)
+    kw = dict(steps=20, lb_every=5, strategy="diff-comm",
+              strategy_kwargs=dict(k=2), trigger=trig)
+    host = simulator.run_series(prob, evolve, scan=False, **kw)
+    scan = simulator.run_series(prob, evolve, scan=True, **kw)
+    np.testing.assert_array_equal(host.lb_fired, scan.lb_fired)
+    # the measured gate did bite: with the cheap estimate it would fire
+    # on (nearly) every eligible step; the observed volume prices most
+    # of them out
+    legacy = simulator.run_series(
+        prob, evolve, scan=True, **{**kw, "trigger": dataclasses.replace(
+            trig, measured_gate=False)})
+    assert scan.lb_fired.sum() < legacy.lb_fired.sum()
+
+
+# ------------------------------------------- subprocess: 8-device mesh --
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+
+from repro.pic import driver
+from repro.sim import scenarios, simulator
+
+assert len(jax.devices()) == 8, jax.devices()
+
+SERIES_FIELDS = ("max_avg", "ext_int", "migrations", "lb_fired",
+                 "max_load", "migrated_load", "final_assignment")
+PIC_FIELDS = ("max_avg", "ext_bytes", "int_bytes", "migrations",
+              "migrated_bytes", "lb_steps", "final_x", "final_y")
+
+# -- 1. series replay: 8-way sharded plan loop, fixed + adaptive -------
+for name, trig in (("stencil-wave", None), ("bimodal-churn", "threshold"),
+                   ("adversarial-hotspot", "predictive")):
+    prob, evolve = scenarios.get(name).instantiate(grid=8, num_nodes=8)
+    kw = dict(steps=18, lb_every=4, strategy="diff-comm",
+              strategy_kwargs=dict(k=3), trigger=trig)
+    ref = simulator.run_series(prob, evolve, scan=True, **kw)
+    sh = simulator.run_series_sharded(prob, evolve, **kw)
+    for f in SERIES_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(sh, f)),
+            err_msg=f"{name}/{f}")
+    print(name, "series 8-way parity OK (fires:", int(ref.lb_fired.sum()),
+          ")")
+
+# -- 2. PIC replay: particle slabs 8-way, in-scan ring exchange --------
+base = dict(L=100, n_particles=2000, steps=18, k=1, rho=0.9, cx=10,
+            cy=10, num_pes=8, mapping="striped", lb_every=4,
+            strategy="diff-comm", strategy_kwargs=dict(k=3), seed=0)
+for trig in (None, "threshold"):
+    ref = driver.run(driver.PICConfig(scan=True, trigger=trig, **base))
+    sh = driver.run(driver.PICConfig(sharded_replay=True, trigger=trig,
+                                     **base))
+    assert ref.migrated_bytes.sum() > 0
+    for f in PIC_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(sh, f)),
+            err_msg=f"pic/{trig}/{f}")
+    print("pic 8-way parity OK, trigger =", trig,
+          "(exchanged bytes:", int(ref.migrated_bytes.sum()), ")")
+
+# -- 3. runtime capacity overflow: never drop payload silently ---------
+try:
+    driver.run(driver.PICConfig(sharded_replay=True,
+                                replay_capacity=2000 // 8, **base))
+    raise SystemExit("undersized replay_capacity must raise")
+except ValueError as e:
+    assert "replay_capacity" in str(e), e
+print("runtime capacity overflow raises OK")
+
+# -- 4. conservation under repeated 8-way exchanges --------------------
+r = driver.run(driver.PICConfig(sharded_replay=True,
+                                **{**base, "lb_every": 2}))
+never = driver.run(driver.PICConfig(strategy="none",
+                                    **{k: v for k, v in base.items()
+                                       if k not in ("strategy",
+                                                    "strategy_kwargs")}))
+assert (r.lb_steps > 0).sum() >= 5
+np.testing.assert_array_equal(r.final_x, never.final_x)
+np.testing.assert_array_equal(r.final_y, never.final_y)
+print("repeated-exchange conservation OK")
+print("ALL OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_replay_on_8_virtual_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "ALL OK" in out.stdout
