@@ -5,16 +5,44 @@ Interpret-mode Pallas is Python-slow, so wall time is measured on the jnp
 oracle (numerically identical); the Pallas path is validated for
 correctness in tests/test_kernels.py and characterized here structurally:
 bytes touched per sweep, VMEM working set per block, arithmetic intensity.
+
+The **migrate** section times the manifest build+apply pipeline both ways
+— stable-argsort vs the sort-free counting scatter — at replay scale
+(n ∈ {2^16, 2^20}, the PIC loops' P = 8, median-of-3) and gates on the
+sort-free path being no slower at n = 2^20 (the PR's reason to exist).
+
+Results are written twice: ``artifacts/bench/kernel_bench.json`` (legacy
+location) and the stable-schema ``BENCH_kernels.json`` at the repo root
+(schema ``kernel-bench/v1``; keys are append-only; committed +
+CI-uploaded so the kernel perf trajectory is attributable).
+
+  PYTHONPATH=src:. python benchmarks/kernel_bench.py
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import save_result, table, timeit
+from benchmarks.common import save_result, table, timeit, timeit_median
 from repro.core.virtual_lb import reference_sweep, reverse_slots
+from repro.kernels.migrate import ops as migrate_ops
+from repro.runtime import migrate as rt_migrate
+
+SCHEMA = "kernel-bench/v1"
+REPEATS = 3
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_kernels.json")
+
+#: replay-loop shape: the PIC drivers and the sharded replay runtime all
+#: exchange over P = 8 nodes; 3 payload arrays stand in for the
+#: (position, velocity, id) slabs every consumer relocates together
+MIGRATE_P = 8
+MIGRATE_PAYLOADS = 3
 
 
 def diffusion_numbers(P: int, K: int, block_p: int = 512):
@@ -28,9 +56,9 @@ def diffusion_numbers(P: int, K: int, block_p: int = 512):
                 vmem_block=vmem)
 
 
-def run():
+def _bench_diffusion(out):
     rows = []
-    out = {}
+    out["diffusion"] = {}
     for P, K in [(4096, 4), (65536, 8), (1_048_576, 8)]:
         rng = np.random.default_rng(0)
         cols = [(np.arange(P) + h) % P for h in range(1, K // 2 + 1)]
@@ -49,12 +77,89 @@ def run():
         rows.append([f"P={P:>8} K={K}", f"{sec*1e3:.2f}ms",
                      f"{n['bytes']/2**20:.1f}", f"{n['intensity']:.2f}",
                      f"{n['vmem_block']/2**10:.0f}KiB", f"{tpu_est_us:.0f}us"])
-        out[f"P{P}_K{K}"] = dict(cpu_oracle_s=sec, **n,
-                                 tpu_hbm_bound_us=tpu_est_us)
+        out["diffusion"][f"P{P}_K{K}"] = dict(cpu_oracle_s=sec, **n,
+                                              tpu_hbm_bound_us=tpu_est_us)
     print("diffusion sweep (the balancer's hot loop at simulator scale)")
     print(table(["config", "cpu oracle", "MiB/sweep", "flop/byte",
                  "VMEM/blk", "TPU est"], rows))
-    save_result("kernel_bench", out)
+
+
+def _migrate_fns(n, P, k):
+    """Jitted sort vs scatter manifest build+apply closures + inputs."""
+    rng = np.random.default_rng(n)
+    oo = jnp.asarray(rng.integers(0, P, n), jnp.int32)
+    on = jnp.asarray(rng.integers(0, P, n), jnp.int32)
+    arrs = tuple(jnp.asarray(rng.random(n), jnp.float32) for _ in range(k))
+
+    def make(method):
+        @jax.jit
+        def fn(oo, on, arrs):
+            outs, man = rt_migrate.build_and_apply(
+                oo, on, arrs, num_nodes=P, method=method)
+            return outs, man.moved_count
+        return fn
+
+    return make("sort"), make("scatter"), (oo, on, arrs)
+
+
+def _bench_migrate(out):
+    rows = []
+    out["migrate"] = dict(P=MIGRATE_P, payload_arrays=MIGRATE_PAYLOADS,
+                          impl=migrate_ops.scatter_impl(1 << 20, MIGRATE_P))
+    for n in (1 << 16, 1 << 20):
+        f_sort, f_scatter, args = _migrate_fns(n, MIGRATE_P,
+                                               MIGRATE_PAYLOADS)
+        want, _ = f_sort(*args)
+        got, _ = f_scatter(*args)
+        for a, b in zip(want, got):      # layout contract before timing
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        def run(fn, args=args):
+            outs, moved = fn(*args)
+            jax.block_until_ready(outs)
+
+        run(f_sort), run(f_scatter)                   # compile
+        _, sort_s = timeit_median(run, f_sort, repeat=REPEATS)
+        _, scat_s = timeit_median(run, f_scatter, repeat=REPEATS)
+        speedup = sort_s / scat_s
+        out["migrate"][f"n{n}"] = dict(
+            sort_s=sort_s, scatter_s=scat_s, speedup=speedup)
+        rows.append([f"n=2^{n.bit_length() - 1}", f"{sort_s*1e3:.1f}ms",
+                     f"{scat_s*1e3:.1f}ms", f"{speedup:.2f}x"])
+    print(f"\nmigrate manifest build+apply (P={MIGRATE_P}, "
+          f"{MIGRATE_PAYLOADS} payload arrays, median of {REPEATS})")
+    print(table(["size", "argsort", "counting scatter", "speedup"], rows))
+
+
+def write_bench_json(out) -> str:
+    """Stable-schema perf-trajectory artifact at the repo root."""
+    payload = dict(
+        schema=SCHEMA,
+        generated_by="benchmarks/kernel_bench.py",
+        repeats=REPEATS,
+        backend=jax.default_backend(),
+        **out,
+    )
+    path = os.path.abspath(BENCH_PATH)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def run():
+    out = {}
+    _bench_diffusion(out)
+    _bench_migrate(out)
+
+    path = save_result("kernel_bench", out)
+    bench_path = write_bench_json(out)
+    print(f"\nsaved {path}\nsaved {bench_path}")
+    big = out["migrate"][f"n{1 << 20}"]
+    assert big["speedup"] >= 1.0, \
+        "sort-free manifest build+apply must be no slower than the " \
+        f"argsort path at n=2^20: {big['scatter_s']:.3f}s vs " \
+        f"{big['sort_s']:.3f}s"
     return out
 
 

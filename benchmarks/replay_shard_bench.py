@@ -16,8 +16,10 @@ counts/loads and final assignments (PIC: final particle order too).
 
 Results are written twice: ``artifacts/bench/replay_shard_bench.json``
 (legacy location) and the stable-schema ``BENCH_replay.json`` at the
-repo root (schema ``replay-bench/v1``; keys are append-only; committed +
-CI-uploaded so the perf trajectory has sharded-replay data).
+repo root (schema ``replay-bench/v2``; keys are append-only — v2 adds
+the ``manifest_method`` the PIC exchange resolved to (sort vs sort-free
+counting scatter), keeping the perf trajectory attributable across
+manifest-kernel changes; committed + CI-uploaded).
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src:. python benchmarks/replay_shard_bench.py
@@ -30,7 +32,7 @@ from __future__ import annotations
 import json
 import os
 
-SCHEMA = "replay-bench/v1"
+SCHEMA = "replay-bench/v2"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_replay.json")
@@ -116,12 +118,17 @@ def _bench_pic(out, *, steps=60, lb_every=10):
     D = int(np.prod(mesh.devices.shape))
     sharded, sharded_wall = timeit_median(
         lambda: driver.run(sharded_cfg), repeat=REPEATS)
+    from repro.runtime import migrate as rt_migrate
+
     par = _parity(single, sharded, PIC_FIELDS)
     conserved = bool(sharded.final_x.shape[0] == base["n_particles"]
                      and np.isfinite(sharded.final_x).all())
     out["pic"] = dict(
         n_particles=base["n_particles"],
         num_pes=base["num_pes"],
+        # v2: which manifest build the executed exchange resolved to
+        manifest_method=rt_migrate.resolve_method(
+            "auto", n=base["n_particles"], num_nodes=base["num_pes"]),
         num_shards=D,
         rebalances=float(single.lb_steps.sum()),
         migrated_bytes=float(single.migrated_bytes.sum()),

@@ -16,8 +16,10 @@ acceptance gates (deterministic modeled time, not wall noise):
 Replay wall time is reported as the median of 3 warm repeats.  Results
 are written twice: ``artifacts/bench/runtime_bench.json`` (legacy
 location) and the stable-schema ``BENCH_runtime.json`` at the repo root
-(schema ``runtime-bench/v1``; keys are append-only; committed + CI-
-uploaded so the perf trajectory has trigger-policy data).
+(schema ``runtime-bench/v2``; keys are append-only — v2 adds the
+``manifest_method`` the PIC exchange resolved to (sort vs sort-free
+counting scatter), so the perf trajectory stays attributable across
+manifest-kernel changes; committed + CI-uploaded).
 
   PYTHONPATH=src:. python benchmarks/runtime_bench.py
 """
@@ -31,10 +33,11 @@ import numpy as np
 from benchmarks.common import save_result, table, timeit_median
 from repro.pic import driver
 from repro.runtime import cost as rt_cost
+from repro.runtime import migrate as rt_migrate
 from repro.runtime import triggers as rt_triggers
 from repro.sim import scenarios, simulator
 
-SCHEMA = "runtime-bench/v1"
+SCHEMA = "runtime-bench/v2"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_runtime.json")
@@ -104,7 +107,9 @@ def _bench_pic(out, *, steps=60, lb_every=10):
         cost=rt_cost.RuntimeCostModel.from_pic(
             driver.CostModel(), strategy=base["strategy"],
             num_pes=base["num_pes"], bytes_per_particle=48.0))
-    out["pic"] = {}
+    # v2: record which manifest build the executed exchange resolved to
+    out["pic"] = dict(manifest_method=rt_migrate.resolve_method(
+        "auto", n=base["n_particles"], num_nodes=base["num_pes"]))
     rows = []
     for policy in (None, "threshold", pic_predictive):
         cfg = driver.PICConfig(scan=True, trigger=policy, **base)

@@ -28,8 +28,9 @@ Two entries:
     on the local slab (partial counts completed with exact integer
     ``psum``), and every fired rebalance executes
     ``runtime.migrate.ring_exchange`` — the ``ppermute`` ring
-    all-to-all — to re-bucket the slabs into PE-owned slot regions
-    *inside the scan*.
+    all-to-all, whose per-shard placement is the shared sort-free
+    counting-scatter op (``kernels.migrate.bucket_ranks``) — to
+    re-bucket the slabs into PE-owned slot regions *inside the scan*.
 
 Parity contract (the reason this file exists as a *replay* subsystem and
 not just a loop around the standalone pieces): both entries are

@@ -3,6 +3,7 @@
   diffusion/  — virtual-LB diffusion sweep (paper §III.B inner loop)
   pic_push/   — PIC PRK particle push (paper §VI hot loop)
   histogram/  — per-chare load measurement (segment histogram)
+  migrate/    — sort-free counting-scatter manifest build (§II exchange)
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with backend dispatch) and ref.py (pure-jnp oracle); tests sweep

@@ -1,0 +1,12 @@
+"""Fused sort-free counting-scatter kernel (migration manifest build).
+
+histogram → exclusive-scan offsets → stable counting scatter, bit-for-bit
+the stable-argsort bucketed layout without a sort.  See ops.py for the
+dispatch rules and ref.py / kernel.py for the two implementations.
+"""
+from repro.kernels.migrate.ops import (  # noqa: F401
+    bucket_ranks,
+    preferred_method,
+    scatter_dest,
+    scatter_impl,
+)

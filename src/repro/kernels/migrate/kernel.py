@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: fused sort-free counting scatter (migration layout).
+
+One ``pallas_call`` fuses the whole manifest-build pipeline — histogram →
+exclusive-scan offsets → stable counting scatter — over a grid of
+``(2, n_blocks)``:
+
+  * **phase 0** streams the item blocks once, binning each block's owner
+    ids with the histogram kernel's MXU one-hot trick (a ``(1, bn) ×
+    (bn, C)`` matmul) into a VMEM-resident (C,) accumulator that persists
+    across the sequential grid.
+  * at the **phase boundary** (phase 1, block 0) the accumulated totals
+    are exclusive-scanned into slot offsets with a strict-lower-triangular
+    (C, C) matvec — again MXU work, no serial loop — and the accumulator
+    resets to re-count as the running per-owner base.
+  * **phase 1** streams the blocks a second time and emits each item's
+    destination ``offsets[owner] + rank-within-owner``; the within-block
+    rank is a strict-lower-triangular ``(bn, bn) × (bn, C)`` matmul over
+    the one-hot matrix, so ties keep previous-position order and the
+    result is bit-for-bit the stable-argsort bucketed layout.
+
+Scatter-add serializes on TPU, which is exactly why this kernel exists:
+it computes *destinations* with matmuls and leaves the actual data
+movement to a single XLA scatter/gather outside (see ops.py).  All counts
+and slots ride the MXU as f32 with HIGHEST precision — exact for
+integers below 2^24, enforced by the wrapper.
+
+Invalid ids (negative or ≥ C — padding) match no one-hot column and get
+the out-of-range sentinel ``n`` as destination (dropped downstream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+def _scatter_kernel(ids_ref, dest_ref, counts_ref, acc_ref, offs_ref, *,
+                    C: int, n_total: int):
+    ph = pl.program_id(0)              # 0 = count, 1 = scatter
+    ids = ids_ref[...]                 # (bn,) i32; invalid = padding
+    bn = ids.shape[0]
+    colsC = jax.lax.broadcasted_iota(jnp.int32, (bn, C), 1)
+    onehot = (ids[:, None] == colsC).astype(jnp.float32)        # (bn, C)
+    blk_counts = jnp.dot(jnp.ones((1, bn), jnp.float32), onehot,
+                         preferred_element_type=jnp.float32,
+                         precision=_HI)[0]                      # (C,) f32
+
+    @pl.when(jnp.logical_and(ph == 0, pl.program_id(1) == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ph == 0)
+    def _count():
+        acc_ref[...] += blk_counts.astype(jnp.int32)
+        # defined placeholder; phase 1 revisits this block and its write
+        # is the one flushed last
+        dest_ref[...] = jnp.full((bn,), n_total, jnp.int32)
+
+    @pl.when(jnp.logical_and(ph == 1, pl.program_id(1) == 0))
+    def _exclusive_scan():
+        # offsets = strict-lower-tri (C, C) matvec over the totals
+        ri = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+        ci = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+        tri = (ci < ri).astype(jnp.float32)
+        tot = acc_ref[...].astype(jnp.float32)
+        offs = jnp.dot(tri, tot[:, None], preferred_element_type=jnp.float32,
+                       precision=_HI)[:, 0]
+        offs_ref[...] = offs.astype(jnp.int32)
+        acc_ref[...] = jnp.zeros_like(acc_ref)   # re-count as running base
+
+    @pl.when(ph == 1)
+    def _scatter():
+        # strict-lower-tri (bn, bn) × (bn, C): exclusive within-block
+        # prefix of the one-hot matrix → stable rank
+        ri = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+        ci = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
+        tril = (ci < ri).astype(jnp.float32)
+        prefix = jnp.dot(tril, onehot, preferred_element_type=jnp.float32,
+                         precision=_HI)                          # (bn, C)
+        base = (offs_ref[...] + acc_ref[...]).astype(jnp.float32)  # (C,)
+        rank = (prefix * onehot).sum(1)
+        item_base = (onehot * base[None, :]).sum(1)
+        valid = onehot.sum(1) > 0.0
+        dest_ref[...] = jnp.where(
+            valid, item_base + rank, float(n_total)).astype(jnp.int32)
+        acc_ref[...] += blk_counts.astype(jnp.int32)
+
+    # final grid step leaves acc == totals again; constant index map keeps
+    # this block VMEM-resident, last write wins
+    counts_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("C", "block_n", "interpret"))
+def scatter_dest_pallas(
+    ids: jax.Array,           # (n,) i32 owner ids in [0, C); others = padding
+    *,
+    C: int,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Fused sort-free ``(dest, counts)`` — see module docstring.
+
+    ``dest`` is (n,) i32 bucketed destinations (sentinel ``n`` for
+    padding ids), ``counts`` the (C,) per-owner totals.  Requires
+    ``n < 2^24`` (f32-exact slot arithmetic on the MXU); ops.py enforces
+    this and falls back to the reference otherwise.
+    """
+    n = ids.shape[0]
+    if n >= 1 << 24:
+        raise ValueError(f"n={n} exceeds the kernel's f32-exact bound 2^24")
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((C,), jnp.int32))
+    Np = -(-n // block_n) * block_n
+    ids_p = jnp.pad(ids.astype(jnp.int32), (0, Np - n), constant_values=-1)
+    dest_p, counts = pl.pallas_call(
+        functools.partial(_scatter_kernel, C=C, n_total=n),
+        grid=(2, Np // block_n),
+        in_specs=[pl.BlockSpec((block_n,), lambda p, b: (b,))],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda p, b: (b,)),
+            pl.BlockSpec((C,), lambda p, b: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((C,), jnp.int32),   # running per-owner counts
+            pltpu.VMEM((C,), jnp.int32),   # exclusive-scan slot offsets
+        ],
+        interpret=interpret,
+    )(ids_p)
+    return dest_p[:n], counts

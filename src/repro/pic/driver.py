@@ -287,10 +287,9 @@ def _chunk_runner(
             owner_new = jnp.take(new_assignment, new_chare)
 
             def do_move(args):
-                man = rt_migrate.build_manifest(owner_old, owner_new,
-                                                num_pes)
-                return rt_migrate.apply_manifest(man, *args), \
-                    man.moved_count
+                outs, man = rt_migrate.build_and_apply(
+                    owner_old, owner_new, args, num_nodes=num_pes)
+                return outs, man.moved_count
 
             (xn, yn, vxn, vyn, q, new_chare, perm), moved_n = jax.lax.cond(
                 do, do_move, lambda args: (args, jnp.int32(0)),
@@ -493,18 +492,20 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
 
             # execute the plan: bucket particles into PE-owned slot
             # regions; migrated bytes measured from the exchange
+            # shared manifest path (runtime.migrate) — the identical
+            # permutation code the scanned driver runs, so host and
+            # scanned replay share one parity surface
             owner_old = assignment[chare_id]
             owner_new = new_assignment[chare_id].astype(np.int32)
-            order = np.argsort(owner_new, kind="stable")
-            moved_n = int((owner_old != owner_new).sum())
+            (x, y, vx, vy, q, ch_j, pm_j), man = rt_migrate.migrate(
+                owner_old, owner_new,
+                (x, y, vx, vy, q, jnp.asarray(chare_id, jnp.int32),
+                 jnp.asarray(perm, jnp.int32)),
+                num_nodes=cfg.num_pes)
+            moved_n = int(man.moved_count)
             mig_bytes[t] = float(moved_n * cfg.bytes_per_particle)
-            x = jnp.asarray(np.asarray(x)[order])
-            y = jnp.asarray(np.asarray(y)[order])
-            vx = jnp.asarray(np.asarray(vx)[order])
-            vy = jnp.asarray(np.asarray(vy)[order])
-            q = jnp.asarray(np.asarray(q)[order])
-            chare_id = chare_id[order]
-            perm = perm[order]
+            chare_id = np.asarray(ch_j)
+            perm = np.asarray(pm_j)
             assignment = new_assignment.astype(np.int32)
         if lb_on and not isinstance(trig, rt_triggers.EveryTrigger):
             # measured predictive gate: same f32 particle count the

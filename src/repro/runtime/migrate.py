@@ -11,10 +11,24 @@ end-to-end cost).  Two execution paths:
     items occupy one contiguous slot region (stable order: by new owner,
     ties by previous position).  Pure and shape-stable, so it runs under
     ``jit`` / ``lax.scan`` / ``lax.cond`` — the scanned PIC driver
-    executes it inside the replay scan.  :func:`migrate` is the eager
-    entry with the payload buffers donated to the executable on
-    accelerators (double-buffered exchange: XLA may write the relocated
-    arrays over the originals).
+    executes it inside the replay scan.  :func:`build_and_apply` fuses
+    build + apply in one traced expression (the scanned hot path);
+    :func:`migrate` is the eager entry with the payload buffers donated
+    to the executable on accelerators (double-buffered exchange: XLA may
+    write the relocated arrays over the originals).
+
+**The ``method`` knob** (:func:`build_manifest`, :func:`build_and_apply`,
+:func:`migrate`): ``"sort"`` builds the permutation with the historical
+stable ``argsort``; ``"scatter"`` builds it sort-free via the fused
+counting-scatter kernel package (``kernels.migrate``: histogram →
+exclusive-scan offsets → stable within-owner rank, O(n·P) MXU-friendly
+work instead of the O(n log n) sort network); ``"auto"`` (default) picks
+per backend and node count (:func:`kernels.migrate.preferred_method` —
+scatter everywhere on TPU, scatter up to the measured C ≈ 64 crossover
+on CPU).  **Bit-for-bit layout contract**: every method produces the
+identical ``Manifest`` — ``order`` *is* ``argsort(owner_new,
+stable=True)`` whichever way it was computed — so replay trajectories,
+parity suites and the sharded exchange are method-independent.
   * **mesh-sharded** — :func:`migrate_sharded`: a ``ppermute`` ring
     all-to-all under ``shard_map`` on a 1-D device mesh.  Each shard
     owns a contiguous node range; the local payload block rotates D-1
@@ -39,6 +53,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P_
 
 from repro.distributed import compat  # noqa: F401  (installs jax.shard_map)
+from repro.kernels import migrate as mig_ops
 
 AXIS = "mig"
 
@@ -47,15 +62,19 @@ class Manifest(NamedTuple):
     """Executable exchange plan for one old→new ownership pair.
 
     ``order`` is the bucketed gather permutation (stable sort by new
-    owner); ``offsets[p]:offsets[p+1]`` is node ``p``'s slot region in
-    the relocated layout; ``send_counts[s, d]`` counts items moving from
-    node ``s`` to node ``d`` — the off-diagonal is the executed exchange,
-    the diagonal stays put."""
+    owner — identical whichever build method produced it); ``dest`` is
+    its inverse (``dest[i]`` = item ``i``'s slot), populated only by the
+    sort-free scatter build where it falls out for free; ``offsets[p]:
+    offsets[p+1]`` is node ``p``'s slot region in the relocated layout;
+    ``send_counts[s, d]`` counts items moving from node ``s`` to node
+    ``d`` — the off-diagonal is the executed exchange, the diagonal
+    stays put."""
 
     order: jax.Array        # (n,) i32 gather permutation
     offsets: jax.Array      # (P+1,) i32 slot-region boundaries
     send_counts: jax.Array  # (P, P) i32 per-node send/recv matrix
     moved: jax.Array        # (n,) bool — item changed owner
+    dest: Optional[jax.Array] = None  # (n,) i32 scatter permutation
 
     @property
     def moved_count(self) -> jax.Array:
@@ -68,30 +87,80 @@ class Manifest(NamedTuple):
         return self.moved_count.astype(jnp.float32) * bytes_per_item
 
 
-def build_manifest(owner_old, owner_new, num_nodes: int) -> Manifest:
+def resolve_method(method: str, *, n: int, num_nodes: int) -> str:
+    """Resolve the ``method`` knob to ``"sort"`` or ``"scatter"``.
+
+    ``"auto"`` consults :func:`kernels.migrate.preferred_method` (backend
+    + node-count crossover); explicit values pass through.  Shapes are
+    static under tracing, so resolution happens at trace time."""
+    if method == "auto":
+        return mig_ops.preferred_method(int(n), int(num_nodes))
+    if method not in ("sort", "scatter"):
+        raise ValueError(f"unknown manifest method {method!r}")
+    return method
+
+
+def build_manifest(owner_old, owner_new, num_nodes: int,
+                   method: str = "auto") -> Manifest:
     """Traceable manifest for relocating items between node slot regions.
 
     ``owner_old``/``owner_new`` are (n,) i32 per-item node ids (for PIC:
-    ``assignment[chare_id]`` before/after the plan)."""
+    ``assignment[chare_id]`` before/after the plan).  ``method`` selects
+    how the bucketed permutation is built — ``"sort"`` (stable argsort),
+    ``"scatter"`` (sort-free counting scatter, ``kernels.migrate``) or
+    ``"auto"`` (:func:`resolve_method`).  The resulting ``Manifest`` is
+    bit-for-bit identical either way; the scatter build additionally
+    populates ``dest`` (the inverse permutation it derives the layout
+    from)."""
     owner_old = jnp.asarray(owner_old, jnp.int32)
     owner_new = jnp.asarray(owner_new, jnp.int32)
-    order = jnp.argsort(owner_new, stable=True).astype(jnp.int32)
     ones = jnp.ones(owner_new.shape, jnp.int32)
-    counts = jax.ops.segment_sum(ones, owner_new, num_segments=num_nodes)
-    offsets = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    n = int(owner_new.shape[0])
+    if resolve_method(method, n=n, num_nodes=num_nodes) == "scatter":
+        dest, counts, offsets = mig_ops.scatter_dest(owner_new, C=num_nodes)
+        # one O(n) scatter materializes the gather permutation (dest is a
+        # permutation here: every owner id is valid)
+        order = (jnp.zeros((n,), jnp.int32)
+                 .at[dest].set(jnp.arange(n, dtype=jnp.int32),
+                               unique_indices=True, mode="drop"))
+    else:
+        dest = None
+        order = jnp.argsort(owner_new, stable=True).astype(jnp.int32)
+        counts = jax.ops.segment_sum(ones, owner_new,
+                                     num_segments=num_nodes)
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(counts).astype(jnp.int32)])
     pair = owner_old * num_nodes + owner_new
     send = jax.ops.segment_sum(
         ones, pair, num_segments=num_nodes * num_nodes
     ).reshape(num_nodes, num_nodes)
     return Manifest(order=order, offsets=offsets, send_counts=send,
-                    moved=owner_old != owner_new)
+                    moved=owner_old != owner_new, dest=dest)
 
 
 def apply_manifest(manifest: Manifest, *arrays) -> Tuple[jax.Array, ...]:
     """Gather every payload array into the manifest's bucketed layout."""
     return tuple(jnp.take(jnp.asarray(a), manifest.order, axis=0)
                  for a in arrays)
+
+
+def build_and_apply(owner_old, owner_new, arrays: Sequence, *,
+                    num_nodes: int, method: str = "auto"):
+    """Fused build + apply: ``(relocated_arrays, manifest)`` in one trace.
+
+    The scanned replay loops call this inside their step ``jit`` so the
+    whole pipeline — counts, offsets, destinations, permutation, payload
+    gathers — compiles into a single XLA program with no executable
+    boundary between the manifest build and the payload movement.  On
+    the scatter path the permutation is materialized exactly once (one
+    i32 scatter) and every payload array then moves by gather: per-array
+    destination scatters were measured slower than scatter-once + gather
+    on CPU XLA (scatters cost ~25× a gather there) and scatters
+    serialize on TPU, so the gather form wins for any payload count.
+    Layout is bit-for-bit the ``method="sort"`` result."""
+    man = build_manifest(owner_old, owner_new, num_nodes, method=method)
+    return apply_manifest(man, *arrays), man
 
 
 def inverse_permutation(order) -> jax.Array:
@@ -102,24 +171,26 @@ def inverse_permutation(order) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=32)
-def _migrate_exec(num_nodes: int, donate: bool):
+def _migrate_exec(num_nodes: int, donate: bool, method: str):
     def fn(owner_old, owner_new, arrays):
-        m = build_manifest(owner_old, owner_new, num_nodes)
-        return apply_manifest(m, *arrays), m
+        return build_and_apply(owner_old, owner_new, arrays,
+                               num_nodes=num_nodes, method=method)
 
     return jax.jit(fn, donate_argnums=(2,) if donate else ())
 
 
 def migrate(owner_old, owner_new, arrays: Sequence, *, num_nodes: int,
-            donate: Optional[bool] = None):
+            donate: Optional[bool] = None, method: str = "auto"):
     """Eager single-device migration: ``(relocated_arrays, manifest)``.
 
     ``donate=None`` donates the payload buffers wherever the backend
     supports donation (not CPU XLA) — the executed exchange then
-    double-buffers in place instead of allocating a second copy."""
+    double-buffers in place instead of allocating a second copy.
+    ``method`` is the manifest-build knob (see :func:`build_manifest`);
+    the relocated layout is identical for every setting."""
     if donate is None:
         donate = jax.default_backend() != "cpu"
-    return _migrate_exec(int(num_nodes), bool(donate))(
+    return _migrate_exec(int(num_nodes), bool(donate), str(method))(
         jnp.asarray(owner_old, jnp.int32),
         jnp.asarray(owner_new, jnp.int32), tuple(arrays))
 
@@ -135,9 +206,11 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
     rotates D-1 ``ppermute`` hops; at hop ``s`` shard ``me`` sees the
     block of shard ``(me+s) % D`` and scatters the items it owns into
     its (capacity,) output at exact global-bucket positions, computed
-    from the all-gathered (D, P) count matrix — so the concatenated
-    per-shard valid prefixes reproduce the single-device stable
-    bucketed order bit-for-bit.
+    from the all-gathered (D, P) count matrix plus the sort-free
+    within-bucket rank (``kernels.migrate.bucket_ranks`` — the same
+    counting-scatter primitive the single-device manifest build uses) —
+    so the concatenated per-shard valid prefixes reproduce the
+    single-device stable bucketed order bit-for-bit.
 
     ``count_loc`` (i32 scalar, optional) marks only the first
     ``count_loc`` slots of this shard's slab as live items; the rest are
@@ -172,7 +245,6 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
     outs = tuple(jnp.zeros((capacity,), a.dtype) for a in arr_loc)
     out_owner = jnp.zeros((capacity,), jnp.int32)
     buf = (owner_loc,) + tuple(arr_loc)
-    pe_ids = jnp.arange(num_nodes, dtype=jnp.int32)
     for s in range(D):
         src = (me + s) % D
         pe = buf[0]
@@ -181,10 +253,11 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
         # (source order == global index order: shards hold contiguous
         # global ranges), preserving the stable-sort tie order
         before = (counts * (jnp.arange(D)[:, None] < src)).sum(0)  # (P,)
-        onehot = (pe[:, None] == pe_ids[None, :]) & accept[:, None]
-        rank = (jnp.take_along_axis(
-            jnp.cumsum(onehot.astype(jnp.int32), axis=0),
-            jnp.clip(pe[:, None], 0, num_nodes - 1), axis=1)[:, 0] - 1)
+        # per-shard placement rides the shared sort-free counting-scatter
+        # op: stable within-bucket rank of the accepted items (rejected
+        # slots are masked to the padding sentinel → rank −1, unused)
+        rank, _ = mig_ops.bucket_ranks(
+            jnp.where(accept, pe, num_nodes), C=num_nodes)
         r = jnp.clip(pe - me * rpd, 0, rpd - 1)
         pos = jnp.where(
             accept,

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api, comm_graph, engine, hierarchical, metrics
+from repro.runtime import migrate as rt_migrate
 from repro.runtime import triggers as rt_triggers
 
 
@@ -425,7 +426,10 @@ def _batched_runner(evolves: tuple, lane_branch: tuple, steps: int,
         (b, tuple(l for l, lb in enumerate(lane_branch) if lb == b))
         for b in set(lane_branch))
     order = [l for _, lanes in groups for l in lanes]
-    inv_order = jnp.asarray(np.argsort(order), jnp.int32)
+    # device-resident O(B) inverse (shared with the migration manifests)
+    # instead of a host argsort
+    inv_order = rt_migrate.inverse_permutation(
+        np.asarray(order, np.int32))
     single = len(groups) == 1
 
     def evolve_all(ps, t):

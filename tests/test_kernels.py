@@ -281,3 +281,139 @@ def test_flash_attention_cache_sentinels():
     want = flash_attention_ref(q[:, :Sq], k[:, :Sq], v[:, :Sq], qpos,
                                kpos[:, :Sq])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+# ---------------------------------------------------- migrate (sort-free) --
+
+
+from repro.kernels.migrate import ops as migrate_ops
+from repro.kernels.migrate.kernel import scatter_dest_pallas
+from repro.kernels.migrate.ref import bucket_ranks_ref, scatter_dest_ref
+
+
+def _stable_dest(ids, C):
+    """Oracle: item → slot of the stable argsort bucketed layout."""
+    ids = np.asarray(ids)
+    n = ids.shape[0]
+    valid = (ids >= 0) & (ids < C)
+    order = np.argsort(np.where(valid, ids, C), kind="stable")
+    dest = np.full(n, n, np.int64)
+    for slot, i in enumerate(order[: valid.sum()]):
+        dest[i] = slot
+    return dest
+
+
+@pytest.mark.parametrize("n,C,block_n", [
+    (100, 8, 32), (257, 16, 64), (1024, 8, 256), (96, 1, 32),
+    (50, 3, 64), (512, 40, 128),
+])
+def test_migrate_scatter_kernel_matches_ref(n, C, block_n):
+    rng = np.random.default_rng(n * 31 + C)
+    ids = rng.integers(0, C, size=n).astype(np.int32)
+    ids[::13] = -1                       # padding slots
+    ids[::29] = C                        # out-of-range sentinel slots
+    dest_k, counts_k = scatter_dest_pallas(
+        jnp.asarray(ids), C=C, block_n=block_n, interpret=True)
+    dest_r, counts_r = scatter_dest_ref(jnp.asarray(ids), C=C)
+    np.testing.assert_array_equal(np.asarray(dest_k), np.asarray(dest_r))
+    np.testing.assert_array_equal(np.asarray(counts_k), np.asarray(counts_r))
+    np.testing.assert_array_equal(np.asarray(dest_r), _stable_dest(ids, C))
+
+
+@pytest.mark.parametrize("case", ["duplicate_heavy", "empty_node",
+                                  "single_node", "empty_input"])
+def test_migrate_scatter_edge_cases_both_paths(case):
+    n, C = {"duplicate_heavy": (300, 4), "empty_node": (128, 16),
+            "single_node": (64, 1), "empty_input": (0, 8)}[case]
+    rng = np.random.default_rng(7)
+    if case == "duplicate_heavy":
+        ids = np.repeat(rng.integers(0, C, 3), 100).astype(np.int32)
+    elif case == "empty_node":
+        ids = rng.choice([0, 3, 15], size=n).astype(np.int32)  # 13 empty
+    elif case == "single_node":
+        ids = np.zeros(n, np.int32)
+    else:
+        ids = np.zeros(0, np.int32)
+    want = _stable_dest(ids, C)
+    for use_kernel in (False, True):
+        dest, counts, offsets = migrate_ops.scatter_dest(
+            jnp.asarray(ids), C=C, use_kernel=use_kernel)
+        np.testing.assert_array_equal(np.asarray(dest), want)
+        np.testing.assert_array_equal(
+            np.asarray(counts), np.bincount(ids, minlength=C))
+        assert offsets.shape == (C + 1,) and int(offsets[-1]) == n
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 600), C=st.integers(1, 48), seed=st.integers(0, 99))
+def test_property_migrate_scatter_equals_stable_argsort(n, C, seed):
+    """Sort-free permutation == jnp.argsort(owner, stable=True), both
+    implementations, random owner vectors (duplicates guaranteed for
+    n > C)."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, C, size=n).astype(np.int32)
+    want_order = np.asarray(jnp.argsort(jnp.asarray(ids), stable=True))
+    for use_kernel in (False, True):
+        dest, _, _ = migrate_ops.scatter_dest(
+            jnp.asarray(ids), C=C, use_kernel=use_kernel)
+        order = np.empty(n, np.int64)
+        order[np.asarray(dest)] = np.arange(n)
+        np.testing.assert_array_equal(order, want_order)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(1, 400), C=st.integers(2, 32), seed=st.integers(0, 50))
+def test_property_migrate_bucket_ranks(n, C, seed):
+    """rank[i] counts earlier same-owner items; padding ranks are -1; both
+    dispatch paths agree bit-for-bit."""
+    rng = np.random.default_rng(seed + 1000)
+    ids = rng.integers(-1, C, size=n).astype(np.int32)
+    want = np.full(n, -1, np.int64)
+    seen = {}
+    for i, v in enumerate(ids):
+        if 0 <= v < C:
+            want[i] = seen.get(v, 0)
+            seen[v] = want[i] + 1
+    for use_kernel in (False, True):
+        rank, counts = migrate_ops.bucket_ranks(
+            jnp.asarray(ids), C=C, use_kernel=use_kernel)
+        np.testing.assert_array_equal(np.asarray(rank), want)
+        np.testing.assert_array_equal(
+            np.asarray(counts), np.bincount(ids[ids >= 0], minlength=C))
+
+
+def test_migrate_blocked_ref_matches_single_block():
+    """The blocked lax.scan reference is exact int arithmetic: forcing
+    many small blocks reproduces the one-shot result bit-for-bit."""
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.integers(0, 6, size=1000), jnp.int32)
+    r1, c1 = bucket_ranks_ref(ids, C=6)
+    import repro.kernels.migrate.ref as mref
+    orig = mref.BLOCK_ELEMS
+    try:
+        mref.BLOCK_ELEMS = 6 * 64      # force ~16 blocks
+        bucket_ranks_ref.clear_cache()
+        r2, c2 = bucket_ranks_ref(ids, C=6)
+    finally:
+        mref.BLOCK_ELEMS = orig
+        bucket_ranks_ref.clear_cache()
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_migrate_impl_selection_rule():
+    """Non-TPU backends take the compiled reference; the kernel needs a
+    block size within the VMEM budget and the f32-exact n bound; the
+    sort-vs-scatter crossover tracks the bucket count on CPU."""
+    from repro.kernels import on_tpu
+
+    assert migrate_ops.kernel_block_n(8) is not None
+    assert migrate_ops.kernel_block_n(100_000) is None
+    if on_tpu():
+        assert migrate_ops.scatter_impl(1 << 20, 8) == "kernel"
+        assert migrate_ops.preferred_method(1 << 20, 1024) == "scatter"
+    else:
+        assert migrate_ops.scatter_impl(1 << 20, 8) == "reference"
+        assert migrate_ops.preferred_method(1 << 20, 8) == "scatter"
+        assert migrate_ops.preferred_method(
+            1 << 20, migrate_ops.SORT_CROSSOVER_C + 1) == "sort"

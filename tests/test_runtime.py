@@ -289,6 +289,113 @@ def test_inverse_permutation_roundtrip():
     np.testing.assert_array_equal(order[inv], np.arange(100))
 
 
+def test_build_manifest_methods_bit_for_bit():
+    """The sort and sort-free scatter builds (and whatever auto picks)
+    produce the identical Manifest — the documented layout contract."""
+    oo, on, _, _ = _random_exchange(n=321, seed=11)
+    sort_m = rt_migrate.build_manifest(oo, on, 8, method="sort")
+    scat_m = rt_migrate.build_manifest(oo, on, 8, method="scatter")
+    auto_m = rt_migrate.build_manifest(oo, on, 8, method="auto")
+    for got in (scat_m, auto_m):
+        np.testing.assert_array_equal(np.asarray(got.order),
+                                      np.asarray(sort_m.order))
+        np.testing.assert_array_equal(np.asarray(got.offsets),
+                                      np.asarray(sort_m.offsets))
+        np.testing.assert_array_equal(np.asarray(got.send_counts),
+                                      np.asarray(sort_m.send_counts))
+        np.testing.assert_array_equal(np.asarray(got.moved),
+                                      np.asarray(sort_m.moved))
+    # the scatter build also exposes the inverse permutation for free
+    assert sort_m.dest is None
+    np.testing.assert_array_equal(
+        np.asarray(scat_m.dest),
+        np.asarray(rt_migrate.inverse_permutation(sort_m.order)))
+    with pytest.raises(ValueError, match="unknown manifest method"):
+        rt_migrate.build_manifest(oo, on, 8, method="bogus")
+
+
+def test_build_and_apply_matches_two_step():
+    oo, on, x, ids = _random_exchange(n=200, seed=5)
+    man2 = rt_migrate.build_manifest(oo, on, 8, method="sort")
+    want = rt_migrate.apply_manifest(man2, x, ids)
+    for method in ("sort", "scatter", "auto"):
+        (xr, idr), man = rt_migrate.build_and_apply(
+            oo, on, (x, ids), num_nodes=8, method=method)
+        np.testing.assert_array_equal(np.asarray(xr), np.asarray(want[0]))
+        np.testing.assert_array_equal(np.asarray(idr), np.asarray(want[1]))
+        np.testing.assert_array_equal(np.asarray(man.order),
+                                      np.asarray(man2.order))
+
+
+def test_repeated_migration_conserves_through_fused_apply():
+    """Chained fused exchanges: payload multiset is preserved exactly at
+    every round and the composition tracks a host-side oracle."""
+    rng = np.random.default_rng(42)
+    n, P = 180, 6
+    owner = rng.integers(0, P, n).astype(np.int32)
+    x0 = rng.normal(size=n).astype(np.float32)
+    x = x0.copy()
+    ids = np.arange(n, dtype=np.int32)
+    oracle = ids.copy()
+    for _round in range(5):
+        owner_new = rng.integers(0, P, n).astype(np.int32)
+        (x, ids, owner), man = rt_migrate.build_and_apply(
+            owner, owner_new, (x, ids, owner_new), num_nodes=P,
+            method="scatter")
+        x, ids, owner = (np.asarray(a) for a in (x, ids, owner))
+        oracle = oracle[np.argsort(owner_new, kind="stable")]
+        np.testing.assert_array_equal(ids, oracle)
+        np.testing.assert_array_equal(np.sort(ids), np.arange(n))
+        # relocated payload still rides with its original item
+        np.testing.assert_array_equal(x, x0[ids])
+        off = np.asarray(man.offsets)
+        assert off[-1] == n and (np.diff(off) >= 0).all()
+
+
+def test_sharded_scatter_parity_with_masked_slabs():
+    """ring_exchange's per-shard placement (now the shared sort-free
+    counting-scatter op) with live-prefix masking reproduces the
+    single-device manifest layout bit-for-bit on the default mesh — the
+    multidevice CI job re-runs this at D=8."""
+    from jax.sharding import Mesh, PartitionSpec as P_
+
+    D = len(jax.devices())
+    P = 4 * D
+    cap = 32
+    rng = np.random.default_rng(13)
+    counts = rng.integers(1, cap + 1, D).astype(np.int32)
+    owner = np.full((D, cap), P, np.int32)     # stale padding owners
+    x = np.zeros((D, cap), np.float32)
+    for d in range(D):
+        owner[d, :counts[d]] = rng.integers(0, P, counts[d])
+        x[d, :counts[d]] = rng.normal(size=counts[d])
+    live_owner = np.concatenate([owner[d, :counts[d]] for d in range(D)])
+    live_x = np.concatenate([x[d, :counts[d]] for d in range(D)])
+
+    mesh = Mesh(np.asarray(jax.devices()), ("mg",))
+
+    def body(cnt_loc, owner_loc, x_loc):
+        oo, outs, cnt = rt_migrate.ring_exchange(
+            owner_loc, (x_loc,), num_nodes=P, D=D, capacity=cap,
+            axis="mg", count_loc=cnt_loc[0])
+        return oo, outs[0], cnt[None]
+
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=(P_("mg"),) * 3,
+        out_specs=(P_("mg"),) * 3, check_vma=False)
+    oo, xo, co = fn(counts, owner.reshape(-1), x.reshape(-1))
+    co = np.asarray(co)
+    oo, xo = np.asarray(oo), np.asarray(xo)
+    got_owner = np.concatenate(
+        [oo[d * cap:d * cap + co[d]] for d in range(D)])
+    got_x = np.concatenate([xo[d * cap:d * cap + co[d]] for d in range(D)])
+    (ref_x,), man = rt_migrate.migrate(
+        live_owner, live_owner, (live_x,), num_nodes=P)
+    np.testing.assert_array_equal(got_owner,
+                                  live_owner[np.asarray(man.order)])
+    np.testing.assert_array_equal(got_x, np.asarray(ref_x))
+
+
 def test_migrate_sharded_matches_single_device_on_default_mesh():
     # any device count: D=1 degenerates to the plain bucketed gather; the
     # 8-way case is exercised in-process by the multidevice CI job and
