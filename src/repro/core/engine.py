@@ -131,6 +131,35 @@ class LBEngine:
         Pure function of the problem arrays; every intermediate keeps the
         static (P, K) / (C,) padding, so the same trace serves every step
         of a scanned replay."""
+        return self._plan_stages(problem, None)
+
+    def plan_health_fn(
+        self, problem: comm_graph.LBProblem, alive, speed=None
+    ) -> Tuple[jax.Array, PlanStats]:
+        """Health-masked :meth:`plan_fn` for a degraded mesh.
+
+        ``alive`` is a (P,) bool node mask, ``speed`` an optional (P,)
+        f32 per-node speed in (0, 1].  Dead nodes' objects are first
+        re-homed onto their strongest alive communication partner
+        (``runtime.resilience.rehome_dead``), slowed nodes' loads are
+        scaled by the reciprocal speed, and the stage-1 preference
+        rows/columns of dead nodes are zeroed — so the same three
+        stages re-diffuse the displaced load over the surviving mesh
+        and never target a dead node.  ``alive=None`` is exactly
+        :meth:`plan_fn`.  Traceable like :meth:`plan_fn`; the resilient
+        replay loops call it inside their scans."""
+        if alive is None:
+            return self._plan_stages(problem, None)
+        from repro.runtime import resilience  # local: runtime imports core
+
+        problem = resilience.degrade_problem(problem, alive, speed)
+        return self._plan_stages(problem, jnp.asarray(alive, bool))
+
+    def _plan_stages(
+        self, problem: comm_graph.LBProblem, alive
+    ) -> Tuple[jax.Array, PlanStats]:
+        """Shared three-stage body; ``alive=None`` keeps the exact
+        unmasked trace (the ``if`` is static, nothing is added)."""
         # -- stage 1: neighbor selection --------------------------------
         if self.variant == "comm":
             node_comm = comm_graph.node_comm_matrix(problem)
@@ -142,6 +171,10 @@ class LBEngine:
                 problem.coords, problem.assignment, problem.num_nodes
             )
             pref = ns.coordinate_preference(cent)
+        if alive is not None:
+            # zeroed rows/columns drop dead nodes from the candidate set
+            # (select_neighbors candidates are ``preference > 0``)
+            pref = jnp.where(alive[:, None] & alive[None, :], pref, 0.0)
         nres = ns.select_neighbors(pref, k=self.k, max_rounds=self.max_rounds)
 
         # -- stage 2: virtual load balancing ----------------------------

@@ -376,7 +376,8 @@ class ShardedLBEngine:
     # ---------------------------------------------------- sharded apply --
 
     def apply(self, owner_new, arrays, *, num_nodes: int,
-              capacity: Optional[int] = None):
+              capacity: Optional[int] = None,
+              on_overflow: str = "strict"):
         """Execute a plan across this engine's mesh: relocate per-item
         payload between the shard-owned slot regions.
 
@@ -389,12 +390,17 @@ class ShardedLBEngine:
         single-device bucketed layout bit-for-bit.  ``capacity`` is the
         static per-shard slot budget; the ``None`` default sizes it
         from the plan's own max per-shard inflow
-        (``runtime.migrate.planned_capacity``)."""
+        (``runtime.migrate.planned_capacity``).  ``on_overflow`` picks
+        the degradation mode for an undersized budget: ``"strict"``
+        raises the structured ``CapacityOverflowError``; ``"spill"``
+        clamps per-shard inflow, keeps overflow items on their source
+        shard and additionally returns the deferred count (see
+        ``runtime.migrate.migrate_sharded``)."""
         from repro.runtime import migrate as rt_migrate
 
         return rt_migrate.migrate_sharded(
             owner_new, arrays, num_nodes=num_nodes, mesh=self.mesh,
-            capacity=capacity)
+            capacity=capacity, on_overflow=on_overflow)
 
     # -------------------------------------------------------- host path --
 

@@ -87,6 +87,7 @@ from repro.core import neighbor_selection as ns
 from repro.core import object_selection as osel
 from repro.core import virtual_lb as vlb
 from repro.runtime import migrate as rt_migrate
+from repro.runtime import resilience as rt_resilience
 from repro.runtime import triggers as rt_triggers
 
 #: one mesh axis shared by planning halo rings and the payload exchange —
@@ -117,6 +118,67 @@ def _engine_params(strat: core_engine.Strategy,
     return {k: (bool(v) if k == "single_hop" else
                 float(v) if k == "tol" else int(v))
             for k, v in out.items()}
+
+
+def _resolve_resilience(faults, guard, D: int, strategy: str, trig):
+    """Normalize the resilience knobs of a replay entry.
+
+    Empty schedules vanish (``faults=None`` downstream selects the exact
+    pre-resilience trace — the bit-parity contract's static elision) and
+    ``guard`` defaults to on exactly when a schedule is active.  An
+    active schedule needs a live LB strategy (a dead shard's objects can
+    only be evacuated by a fired plan) and may only reference shards
+    that exist on the mesh."""
+    if faults is not None:
+        if not isinstance(faults, rt_resilience.FaultSchedule):
+            raise TypeError(
+                "faults must be a runtime.resilience.FaultSchedule")
+        if faults.empty:
+            faults = None
+    guard = (faults is not None) if guard is None else bool(guard)
+    if faults is not None:
+        if strategy == "none" or trig.never:
+            raise ValueError(
+                "fault injection needs an active LB strategy/trigger — "
+                "with planning disabled a dead shard's objects can never "
+                "be evacuated")
+        if faults.max_shard() >= D:
+            raise ValueError(
+                f"fault schedule references shard {faults.max_shard()} "
+                f"but the mesh has only {D} shards")
+    return faults, guard
+
+
+def _series_setup(initial, evolve, strategy: str,
+                  strategy_kwargs: Optional[Dict], trigger, lb_every: int,
+                  mesh: Optional[Mesh], num_shards: Optional[int],
+                  faults, guard):
+    """Shared validation/configuration of the series replay entries."""
+    strategy_kwargs = strategy_kwargs or {}
+    strat = core_engine.get_strategy(strategy)
+    if not strat.jittable:
+        raise ValueError(
+            f"strategy {strategy!r} is not jittable; the sharded replay "
+            "needs a traceable plan_fn (diff-* / none)")
+    if strategy != "none" and strat.variant is None:
+        raise ValueError(
+            f"strategy {strategy!r} has no diffusion variant; the "
+            "sharded replay can only distribute diff-* strategies")
+    if not getattr(evolve, "jittable", False):
+        raise ValueError(
+            "the sharded replay needs a scan-safe evolve (scenarios from "
+            "sim/scenarios.py are)")
+    trig = rt_triggers.resolve_for_strategy(trigger, lb_every=lb_every,
+                                            strategy=strategy)
+    P = initial.num_nodes
+    mesh = _resolve_mesh(mesh, num_shards, (P,))
+    D = int(np.prod(mesh.devices.shape))
+    faults, guard = _resolve_resilience(faults, guard, D, strategy, trig)
+    eng = None
+    if strategy != "none":
+        eng = dict(_engine_params(strat, strategy_kwargs),
+                   variant=strat.variant)
+    return strategy_kwargs, trig, P, mesh, faults, guard, eng
 
 
 def _resolve_mesh(mesh: Optional[Mesh], num_shards: Optional[int],
@@ -159,7 +221,7 @@ def _resolve_mesh(mesh: Optional[Mesh], num_shards: Optional[int],
 def _plan_step_sharded(problem: comm_graph.LBProblem, *, variant: str,
                        k: int, tol: float, max_iters: int, max_rounds: int,
                        single_hop: bool, sweep_chunk: int, P: int, D: int,
-                       axis: str):
+                       axis: str, alive=None, speed=None):
     """One three-stage plan inside the replay's ``shard_map`` body.
 
     The mesh twin of ``LBEngine.plan_fn`` under the replay's parity
@@ -174,7 +236,18 @@ def _plan_step_sharded(problem: comm_graph.LBProblem, *, variant: str,
     to ``LBEngine.plan_fn`` (unlike the planner-only
     ``ShardedLBEngine``, whose ``psum`` completion is documented as a
     few-ulp contract).  Traceable; called under ``lax.cond`` inside the
-    replay scan."""
+    replay scan.
+
+    ``alive`` / ``speed`` are the optional (P,) node health mask and
+    speed vector of the resilient replay paths (the mesh twin of
+    ``LBEngine.plan_health_fn``): dead nodes' objects are re-homed onto
+    alive communication partners before planning, slowed nodes' loads
+    are scaled by the reciprocal speed, and the stage-1 preference
+    rows/columns of dead nodes are zeroed so no flow or object ever
+    targets them.  ``alive=None`` (the default) adds nothing to the
+    trace."""
+    if alive is not None:
+        problem = rt_resilience.degrade_problem(problem, alive, speed)
     # -- stage 1: preference assembly + handshake (replicated) ----------
     if variant == "comm":
         node_comm = comm_graph.node_comm_matrix(problem)
@@ -182,6 +255,8 @@ def _plan_step_sharded(problem: comm_graph.LBProblem, *, variant: str,
     else:
         cent = osel.centroids(problem.coords, problem.assignment, P)
         pref = ns.coordinate_preference(cent)
+    if alive is not None:
+        pref = rt_resilience.mask_preference(pref, alive)
     nres = ns.select_neighbors(pref, k=k, max_rounds=max_rounds)
     rev = vlb.reverse_slots(nres.nbr_idx, nres.nbr_mask)
 
@@ -265,41 +340,87 @@ def _cached(cache: Dict, key: tuple, build):
     return fn
 
 
-def _series_runner(mesh: Mesh, evolve, steps: int, strategy: str,
-                   eng_params: Optional[Dict], trig,
-                   threads_per_node: Optional[int], P: int,
-                   has_coords: bool):
-    """Compile-once ``shard_map`` wrapping the whole series replay."""
+def _make_series_step(mesh: Mesh, evolve, strategy: str,
+                      eng_params: Optional[Dict], trig,
+                      threads_per_node: Optional[int], P: int,
+                      faults, guard: bool):
+    """Shared per-step body of the series replay scans.
+
+    Returns ``(step, track)`` where ``track`` says whether the step
+    emits the extra ``plan_rejected`` output.  With ``faults is None``
+    and ``guard`` off the emitted trace is **exactly** the
+    pre-resilience step (every ``if`` below is static), preserving the
+    bit-for-bit parity contract; the resilient variant adds
+    health-masked trigger stats/planning, forced fires on health
+    transitions or stranded objects, and the ``validate_plan`` rollback
+    guardrail."""
     from repro.sim import simulator as sim   # local: sim imports us lazily
 
     D = int(np.prod(mesh.devices.shape))
     ax = mesh.axis_names[0]
     do_lb_at_all = strategy != "none" and not trig.never
-    plan = (functools.partial(_plan_step_sharded, P=P, D=D, axis=ax,
-                              variant=eng_params.pop("variant"),
-                              **eng_params)
-            if do_lb_at_all else None)
+    resilient = faults is not None
+    track = resilient or bool(guard)
+    plan = None
+    if do_lb_at_all:
+        eng_params = dict(eng_params)
+        plan = functools.partial(_plan_step_sharded, P=P, D=D, axis=ax,
+                                 variant=eng_params.pop("variant"),
+                                 **eng_params)
 
     def step(carry, t):
         problem, tstate = carry
         problem = evolve(problem, t)
         prev = problem.assignment
+        rejected = jnp.float32(0.0)
         if do_lb_at_all:
-            mx, av, tot = rt_triggers.load_stats(
-                problem.loads, problem.assignment, problem.num_nodes)
+            if resilient:
+                alive_n, speed_n = faults.node_health(t, P, D)
+                mx, av, tot = rt_triggers.load_stats_masked(
+                    problem.loads, problem.assignment, P, alive_n,
+                    speed_n)
+            else:
+                alive_n = speed_n = None
+                mx, av, tot = rt_triggers.load_stats(
+                    problem.loads, problem.assignment, problem.num_nodes)
             do, tstate = trig.decide(tstate, t, mx, av, tot)
-            new_assignment, _stats = jax.lax.cond(
-                do,
-                plan,
-                lambda p: (p.assignment.astype(jnp.int32),
-                           core_engine.zero_stats()),
-                problem,
-            )
+            if resilient:
+                # a health transition or an object stranded on a dead
+                # node must fire a rebalance regardless of the policy
+                stranded = (~jnp.take(
+                    alive_n, jnp.clip(prev, 0, P - 1))).any()
+                do = do | faults.changed_at(t, D) | stranded
+                planned, _stats = jax.lax.cond(
+                    do,
+                    lambda op: plan(op[0], alive=op[1], speed=op[2]),
+                    lambda op: (op[0].assignment.astype(jnp.int32),
+                                core_engine.zero_stats()),
+                    (problem, alive_n, speed_n),
+                )
+            else:
+                planned, _stats = jax.lax.cond(
+                    do,
+                    plan,
+                    lambda p: (p.assignment.astype(jnp.int32),
+                               core_engine.zero_stats()),
+                    problem,
+                )
+            if track:
+                # guardrail: adopt only validated plans; otherwise keep
+                # the last-good assignment (prev is valid by induction)
+                ok = rt_resilience.validate_plan(
+                    planned, problem.loads, num_nodes=P, alive=alive_n)
+                adopt = do & ok
+                rejected = (do & ~ok).astype(jnp.float32)
+                new_assignment = jnp.where(adopt, planned, prev)
+            else:
+                adopt = do
+                new_assignment = planned
             delta = new_assignment != prev
             moved = jnp.where(
-                do, jnp.mean(delta.astype(jnp.float32)), 0.0)
+                adopt, jnp.mean(delta.astype(jnp.float32)), 0.0)
             migrated_load = jnp.where(
-                do,
+                adopt,
                 jnp.where(delta,
                           jnp.asarray(problem.loads, jnp.float32),
                           0.0).sum(),
@@ -317,8 +438,24 @@ def _series_runner(mesh: Mesh, evolve, steps: int, strategy: str,
                                       problem.num_nodes, threads_per_node)
         else:
             tma = jnp.float32(0.0)
-        return (problem, tstate), (m.max_avg_load, m.ext_int_comm, moved,
-                                   tma, fired, m.max_load, migrated_load)
+        ys = (m.max_avg_load, m.ext_int_comm, moved, tma, fired,
+              m.max_load, migrated_load)
+        if track:
+            ys = ys + (rejected,)
+        return (problem, tstate), ys
+
+    return step, track
+
+
+def _series_runner(mesh: Mesh, evolve, steps: int, strategy: str,
+                   eng_params: Optional[Dict], trig,
+                   threads_per_node: Optional[int], P: int,
+                   has_coords: bool, faults=None, guard: bool = False):
+    """Compile-once ``shard_map`` wrapping the whole series replay."""
+    step, track = _make_series_step(mesh, evolve, strategy, eng_params,
+                                    trig, threads_per_node, P, faults,
+                                    guard)
+    nys = 8 if track else 7
 
     def body(loads, assignment, e_src, e_dst, e_bytes, coords):
         problem = comm_graph.LBProblem(
@@ -335,7 +472,53 @@ def _series_runner(mesh: Mesh, evolve, steps: int, strategy: str,
     fn = jax.shard_map(
         body, mesh=mesh,
         in_specs=(P_(),) * 6,
-        out_specs=(P_(),) * 8,
+        out_specs=(P_(),) * (1 + nys),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+def _series_chunk_runner(mesh: Mesh, evolve, chunk: int, strategy: str,
+                         eng_params: Optional[Dict], trig,
+                         threads_per_node: Optional[int], P: int,
+                         has_coords: bool, faults=None,
+                         guard: bool = False):
+    """Chunked series runner: scan ``chunk`` steps from an explicit carry.
+
+    The checkpoint/restart entry (``runtime.resilience.
+    run_series_checkpointed``) drives the replay through this runner —
+    same per-step program as :func:`_series_runner` (the step closure is
+    shared), but the scan carry (problem arrays + trigger-state leaves)
+    crosses the call boundary so the supervisor can snapshot and restore
+    it.  Scanning ``t0 + arange(chunk)`` instead of ``arange(steps)``
+    changes nothing numerically — chunked trajectories are bit-for-bit
+    the one-shot scan."""
+    step, track = _make_series_step(mesh, evolve, strategy, eng_params,
+                                    trig, threads_per_node, P, faults,
+                                    guard)
+    nys = 8 if track else 7
+
+    def body(loads, assignment, e_src, e_dst, e_bytes, coords, t0,
+             last_lb, armed, history, hist_len, last_moved):
+        problem = comm_graph.LBProblem(
+            loads=loads, assignment=assignment, edges_src=e_src,
+            edges_dst=e_dst, edges_bytes=e_bytes, num_nodes=P,
+            coords=coords if has_coords else None)
+        tstate = rt_triggers.TriggerState(last_lb, armed, history,
+                                          hist_len, last_moved)
+        (pfin, ts), ys = jax.lax.scan(
+            step, (problem, tstate),
+            jnp.asarray(t0, jnp.int32) + jnp.arange(chunk))
+        carry_out = (pfin.loads, pfin.assignment.astype(jnp.int32),
+                     pfin.edges_src, pfin.edges_dst, pfin.edges_bytes,
+                     pfin.coords if has_coords else coords,
+                     ts.last_lb, ts.armed, ts.history, ts.hist_len,
+                     ts.last_moved)
+        return carry_out + ys
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P_(),) * 12,
+        out_specs=(P_(),) * (11 + nys),
         check_vma=False)
     return jax.jit(fn)
 
@@ -352,6 +535,8 @@ def run_series_sharded(
     mesh: Optional[Mesh] = None,
     num_shards: Optional[int] = None,
     threads_per_node: Optional[int] = None,
+    faults=None,
+    guard: Optional[bool] = None,
 ):
     """Mesh-sharded ``run_series``: the whole replay in one ``shard_map``.
 
@@ -375,42 +560,35 @@ def run_series_sharded(
     1 device degenerates to the single-device graph).  ``trigger``
     resolves exactly as in ``run_series`` (strategy-registered policy,
     then the fixed ``lb_every`` cadence).
+
+    Resilience (``runtime.resilience``): ``faults`` takes a
+    ``FaultSchedule`` whose die/slow/recover events are honored inside
+    the scan — trigger stats and planning see the health mask, health
+    transitions force a rebalance, and a dead shard's objects are
+    re-homed onto alive communication partners.  ``guard`` (default: on
+    whenever ``faults`` is set) runs every fired plan through
+    ``validate_plan`` and rolls back to the last-good assignment on
+    rejection; either flag adds the per-step ``plan_rejected`` series to
+    the result.  An empty/None schedule with ``guard`` unset adds
+    *nothing* to the trace — the bit-for-bit parity contract above is
+    untouched.
     """
     from repro.sim import simulator as sim   # local: sim imports us lazily
 
-    strategy_kwargs = strategy_kwargs or {}
-    strat = core_engine.get_strategy(strategy)
-    if not strat.jittable:
-        raise ValueError(
-            f"strategy {strategy!r} is not jittable; the sharded replay "
-            "needs a traceable plan_fn (diff-* / none)")
-    if strategy != "none" and strat.variant is None:
-        raise ValueError(
-            f"strategy {strategy!r} has no diffusion variant; the "
-            "sharded replay can only distribute diff-* strategies")
-    if not getattr(evolve, "jittable", False):
-        raise ValueError(
-            "the sharded replay needs a scan-safe evolve (scenarios from "
-            "sim/scenarios.py are)")
-    trig = rt_triggers.resolve_for_strategy(trigger, lb_every=lb_every,
-                                            strategy=strategy)
-    P = initial.num_nodes
-    mesh = _resolve_mesh(mesh, num_shards, (P,))
-    eng = None
-    if strategy != "none":
-        eng = dict(_engine_params(strat, strategy_kwargs),
-                   variant=strat.variant)
+    strategy_kwargs, trig, P, mesh, faults, guard, eng = _series_setup(
+        initial, evolve, strategy, strategy_kwargs, trigger, lb_every,
+        mesh, num_shards, faults, guard)
 
     key = (_mesh_key(mesh), evolve, int(steps), int(lb_every), strategy,
            tuple(sorted(strategy_kwargs.items())), trig,
            None if threads_per_node is None else int(threads_per_node),
-           initial.coords is not None, P)
+           initial.coords is not None, P, faults, guard)
     runner = _cached(
         _SERIES_CACHE, key,
         lambda: _series_runner(mesh, evolve, int(steps), strategy,
                                None if eng is None else dict(eng), trig,
                                threads_per_node, P,
-                               initial.coords is not None))
+                               initial.coords is not None, faults, guard))
 
     prob = sim._canonical(initial)
     coords = (prob.coords if prob.coords is not None
@@ -419,7 +597,13 @@ def run_series_sharded(
     out = runner(prob.loads, prob.assignment, prob.edges_src,
                  prob.edges_dst, prob.edges_bytes, coords)
     final_assignment, ys = out[0], out[1:]
-    ma, ei, mig, tma, fired, mxl, migl = jax.device_get(ys)
+    track = (faults is not None) or guard
+    ys = jax.device_get(ys)
+    if track:
+        ma, ei, mig, tma, fired, mxl, migl, rej = ys
+    else:
+        ma, ei, mig, tma, fired, mxl, migl = ys
+        rej = None
     final_assignment = np.asarray(jax.device_get(final_assignment),
                                   np.int32)
     wall = time.perf_counter() - t_start
@@ -431,7 +615,139 @@ def run_series_sharded(
         lb_fired=np.asarray(fired, np.float64),
         max_load=np.asarray(mxl, np.float64),
         migrated_load=np.asarray(migl, np.float64),
-        final_assignment=final_assignment)
+        final_assignment=final_assignment,
+        plan_rejected=(None if rej is None
+                       else np.asarray(rej, np.float64)))
+
+
+class _PreparedSeries:
+    """Chunk-driving handle over the sharded series replay.
+
+    Built by :func:`prepare_series` and consumed by
+    ``runtime.resilience.run_series_checkpointed``: the supervisor owns
+    the scan carry between chunks (so it can snapshot/restore it) and
+    calls :meth:`run_chunk` per chunk; :meth:`package` turns the final
+    carry + concatenated per-step outputs into the same ``SeriesResult``
+    ``run_series_sharded`` returns.  The per-step program is shared with
+    the one-shot runner, so chunked trajectories are bit-for-bit the
+    uninterrupted scan."""
+
+    def __init__(self, *, mesh, evolve, lb_every, strategy,
+                 strategy_kwargs, trig, threads_per_node, P, has_coords,
+                 faults, guard, prob, coords):
+        self.mesh = mesh
+        self.evolve = evolve
+        self.lb_every = int(lb_every)
+        self.strategy = strategy
+        self.strategy_kwargs = dict(strategy_kwargs)
+        self.trig = trig
+        self.threads_per_node = threads_per_node
+        self.P = int(P)
+        self.has_coords = bool(has_coords)
+        self.faults = faults
+        self.guard = bool(guard)
+        self.track = (faults is not None) or bool(guard)
+        self._prob = prob
+        self._coords = coords
+        strat = core_engine.get_strategy(strategy)
+        self._eng = (dict(_engine_params(strat, self.strategy_kwargs),
+                          variant=strat.variant)
+                     if strategy != "none" else None)
+
+    def initial_carry(self):
+        """The scan carry at t=0: 6 problem arrays + 5 trigger leaves."""
+        p = self._prob
+        return (p.loads, p.assignment, p.edges_src, p.edges_dst,
+                p.edges_bytes, self._coords) + tuple(self.trig.init_state())
+
+    def _runner(self, chunk: int):
+        key = ("chunk", _mesh_key(self.mesh), self.evolve, int(chunk),
+               self.lb_every, self.strategy,
+               tuple(sorted(self.strategy_kwargs.items())), self.trig,
+               None if self.threads_per_node is None
+               else int(self.threads_per_node),
+               self.has_coords, self.P, self.faults, self.guard)
+        return _cached(
+            _SERIES_CACHE, key,
+            lambda: _series_chunk_runner(
+                self.mesh, self.evolve, int(chunk), self.strategy,
+                None if self._eng is None else dict(self._eng), self.trig,
+                self.threads_per_node, self.P, self.has_coords,
+                self.faults, self.guard))
+
+    def run_chunk(self, carry, t_start: int, chunk: int):
+        """Advance ``chunk`` steps from ``carry``; returns
+        ``(new_carry, per_step_outputs)``.  ``carry`` may be host
+        snapshots (restored) or live device arrays."""
+        carry = tuple(jnp.asarray(a) for a in carry)
+        out = self._runner(int(chunk))(
+            *carry[:6], jnp.asarray(int(t_start), jnp.int32), *carry[6:])
+        return out[:11], out[11:]
+
+    def package(self, carry, ys, *, wall_seconds: float):
+        """Final carry + concatenated chunk outputs → ``SeriesResult``."""
+        from repro.sim import simulator as sim
+
+        if self.track:
+            ma, ei, mig, tma, fired, mxl, migl, rej = ys
+        else:
+            ma, ei, mig, tma, fired, mxl, migl = ys
+            rej = None
+        final_assignment = np.asarray(jax.device_get(carry[1]), np.int32)
+        return sim.SeriesResult(
+            np.asarray(ma, np.float64), np.asarray(ei, np.float64),
+            np.asarray(mig, np.float64), wall_seconds, scanned=True,
+            wall_seconds=wall_seconds,
+            thread_max_avg=(np.asarray(tma, np.float64)
+                            if self.threads_per_node else None),
+            lb_fired=np.asarray(fired, np.float64),
+            max_load=np.asarray(mxl, np.float64),
+            migrated_load=np.asarray(migl, np.float64),
+            final_assignment=final_assignment,
+            plan_rejected=(None if rej is None
+                           else np.asarray(rej, np.float64)))
+
+
+def prepare_series(
+    initial: comm_graph.LBProblem,
+    evolve,
+    *,
+    steps: int,
+    lb_every: int,
+    strategy: str = "diff-comm",
+    strategy_kwargs: Optional[Dict] = None,
+    trigger=None,
+    mesh: Optional[Mesh] = None,
+    num_shards: Optional[int] = None,
+    threads_per_node: Optional[int] = None,
+    faults=None,
+    guard: Optional[bool] = None,
+) -> _PreparedSeries:
+    """Validate + stage a series replay for external chunk driving.
+
+    Same arguments and validation as :func:`run_series_sharded` (the
+    ``steps`` total is accepted for symmetry; the chunk driver decides
+    the actual schedule), but instead of running the scan it returns a
+    :class:`_PreparedSeries` whose ``initial_carry`` / ``run_chunk`` /
+    ``package`` methods let a supervisor — in practice
+    ``runtime.resilience.run_series_checkpointed`` — own the carry
+    between chunks for checkpoint/restart."""
+    from repro.sim import simulator as sim   # local: sim imports us lazily
+
+    if int(steps) < 1:
+        raise ValueError("steps must be >= 1")
+    strategy_kwargs, trig, P, mesh, faults, guard, _eng = _series_setup(
+        initial, evolve, strategy, strategy_kwargs, trigger, lb_every,
+        mesh, num_shards, faults, guard)
+    prob = sim._canonical(initial)
+    coords = (prob.coords if prob.coords is not None
+              else jnp.zeros((prob.num_objects, 1), jnp.float32))
+    return _PreparedSeries(
+        mesh=mesh, evolve=evolve, lb_every=lb_every, strategy=strategy,
+        strategy_kwargs=strategy_kwargs, trig=trig,
+        threads_per_node=threads_per_node, P=P,
+        has_coords=initial.coords is not None, faults=faults, guard=guard,
+        prob=prob, coords=coords)
 
 
 # -------------------------------------------------------- PIC replay ----
@@ -441,7 +757,8 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
                 k: int, vy0: float, lb_every: int, strategy: str,
                 kw_items: tuple, bpp: float, use_kernel: Optional[bool],
                 steps: int, capacity: int,
-                threads_per_node: Optional[int], trig):
+                threads_per_node: Optional[int], trig,
+                faults=None, on_overflow: str = "strict"):
     """Compile-once ``shard_map`` wrapping the whole PIC replay.
 
     Per-shard carry: the (capacity,) particle payload slabs (x, y, vx,
@@ -453,6 +770,18 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
     ``num_pes`` divides the mesh, else replicated — the chare problem is
     O(C) tiny either way), and executes a fired plan as the masked
     ``ring_exchange`` re-bucketing the slabs into PE-owned slot regions.
+
+    Resilience: an active ``faults`` schedule masks trigger stats and
+    planning with the node health at ``t``, forces a fire on every
+    health transition or stranded chare, and gates plan adoption through
+    ``validate_plan`` (strict mode additionally rejects plans whose
+    per-shard inflow would overflow the static slabs — payload is never
+    dropped).  ``on_overflow="spill"`` swaps the exchange for the
+    admission-clamped spill ring: overflow particles stay on their
+    source shard (their desired owner is preserved, so the next fired
+    rebalance retries them) and the per-step ``deferred`` count is
+    emitted.  ``faults=None`` + strict mode is the exact pre-resilience
+    trace.
     """
     from repro.kernels.histogram.ops import histogram
     from repro.kernels.pic_push.ops import pic_push
@@ -466,6 +795,9 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
     grid_q = jnp.asarray(alternating_grid(L))
     lb_on = strategy != "none" and not trig.never
     strat = core_engine.get_strategy(strategy) if lb_on else None
+    resilient = faults is not None
+    spill = on_overflow == "spill"
+    track = resilient or spill
     # the chare-level plan: sharded over the PE rows when the mesh
     # divides them (plan → manifest → apply on ONE mesh), else the
     # replicated single-device graph — bit-for-bit either way
@@ -474,6 +806,12 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
         eng = _engine_params(strat, dict(kw_items))
         plan = functools.partial(_plan_step_sharded, P=num_pes, D=D,
                                  axis=ax, variant=strat.variant, **eng)
+    elif lb_on and resilient:
+        # replicated health-masked planning: the engine method is the
+        # single-device twin of the masked sharded plan
+        plan = core_engine.get_engine(
+            variant=strat.variant,
+            **_engine_params(strat, dict(kw_items))).plan_health_fn
     elif lb_on:
         plan = strat.bind(**dict(kw_items))
     else:
@@ -505,11 +843,25 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
                                        num_segments=num_pes)
         pe_max = pe_loads.max()
         ma = pe_max / (pe_loads.mean() + 1e-30)
+        rejected = jnp.float32(0.0)
+        deferred_n = jnp.int32(0)
 
         if lb_on:
-            mx, av, tot = rt_triggers.load_stats(loads, assignment,
-                                                 num_pes)
+            if resilient:
+                alive_n, speed_n = faults.node_health(t, num_pes, D)
+                mx, av, tot = rt_triggers.load_stats_masked(
+                    loads, assignment, num_pes, alive_n, speed_n)
+            else:
+                alive_n = speed_n = None
+                mx, av, tot = rt_triggers.load_stats(loads, assignment,
+                                                     num_pes)
             do, tstate = trig.decide(tstate, t, mx, av, tot)
+            if resilient:
+                # evacuate dead PEs now: fire on every health transition
+                # and while any chare is still owned by a dead PE
+                stranded = (~jnp.take(
+                    alive_n, jnp.clip(assignment, 0, num_pes - 1))).any()
+                do = do | faults.changed_at(t, D) | stranded
 
             def do_plan(args):
                 loads_, assignment_ = args
@@ -517,15 +869,38 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
                     loads_, assignment_, L=L, cx=cx, cy=cy,
                     num_pes=num_pes, k=k, vy0=vy0, lb_period=lb_every,
                     bytes_per_particle=bpp)
-                a2, _stats = plan(problem)
+                if resilient:
+                    a2, _stats = plan(problem, alive=alive_n,
+                                      speed=speed_n)
+                else:
+                    a2, _stats = plan(problem)
                 return a2
 
-            new_assignment = jax.lax.cond(
+            planned = jax.lax.cond(
                 do, do_plan, lambda a: a[1].astype(jnp.int32),
                 (loads, assignment))
+            if resilient:
+                # guardrail: only adopt validated plans — owners alive
+                # and in range and, in strict mode, per-shard inflow
+                # within the static slab budget (a plan that does not
+                # fit would drop payload; spill clamps instead)
+                ok = rt_resilience.validate_plan(
+                    planned, loads, num_nodes=num_pes, alive=alive_n)
+                if not spill:
+                    pe_new = jax.ops.segment_sum(
+                        loads, jnp.clip(planned, 0, num_pes - 1),
+                        num_segments=num_pes)
+                    per_shard = pe_new.reshape(D, num_pes // D).sum(1)
+                    ok = ok & (per_shard <= capacity).all()
+                adopt = do & ok
+                rejected = (do & ~ok).astype(jnp.float32)
+                new_assignment = jnp.where(adopt, planned, assignment)
+            else:
+                adopt = do
+                new_assignment = planned
             delta = new_assignment != assignment
             migf = jnp.where(
-                do, jnp.mean(delta.astype(jnp.float32)), 0.0)
+                adopt, jnp.mean(delta.astype(jnp.float32)), 0.0)
 
             # execute the plan inside the scan: the masked ppermute ring
             # all-to-all re-buckets the live slab prefixes into PE-owned
@@ -534,20 +909,38 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
             owner_old = jnp.take(assignment, new_chare)
             owner_new = jnp.take(new_assignment, new_chare)
 
-            def do_move(args):
-                _owner, outs, count_me = rt_migrate.ring_exchange(
-                    owner_new, args, num_nodes=num_pes, D=D,
-                    capacity=capacity, axis=ax, count_loc=count)
-                moved_ct = jax.lax.psum(
-                    ((owner_old != owner_new) & live)
-                    .astype(jnp.int32).sum(), ax)
-                return outs, count_me, moved_ct
+            if spill:
+                def do_move(args):
+                    _owner, outs, count_me, dfr = rt_migrate.ring_exchange(
+                        owner_new, args, num_nodes=num_pes, D=D,
+                        capacity=capacity, axis=ax, count_loc=count,
+                        mode="spill")
+                    want = jax.lax.psum(
+                        ((owner_old != owner_new) & live)
+                        .astype(jnp.int32).sum(), ax)
+                    return outs, count_me, want - dfr, dfr
 
-            (xn, yn, vxn, vyn, q, new_chare, perm), count, moved_n = \
-                jax.lax.cond(
-                    do, do_move,
-                    lambda args: (args, count, jnp.int32(0)),
-                    (xn, yn, vxn, vyn, q, new_chare, perm))
+                (xn, yn, vxn, vyn, q, new_chare, perm), count, moved_n, \
+                    deferred_n = jax.lax.cond(
+                        adopt, do_move,
+                        lambda args: (args, count, jnp.int32(0),
+                                      jnp.int32(0)),
+                        (xn, yn, vxn, vyn, q, new_chare, perm))
+            else:
+                def do_move(args):
+                    _owner, outs, count_me = rt_migrate.ring_exchange(
+                        owner_new, args, num_nodes=num_pes, D=D,
+                        capacity=capacity, axis=ax, count_loc=count)
+                    moved_ct = jax.lax.psum(
+                        ((owner_old != owner_new) & live)
+                        .astype(jnp.int32).sum(), ax)
+                    return outs, count_me, moved_ct
+
+                (xn, yn, vxn, vyn, q, new_chare, perm), count, moved_n = \
+                    jax.lax.cond(
+                        adopt, do_move,
+                        lambda args: (args, count, jnp.int32(0)),
+                        (xn, yn, vxn, vyn, q, new_chare, perm))
             tstate = trig.observe(tstate, moved_n.astype(jnp.float32), do)
             migb = moved_n.astype(jnp.float32) * bpp
             fired = do.astype(jnp.float32)
@@ -570,6 +963,8 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
 
         ys = (ma, pe_max, ext, intra, migf, migb, tma, fired,
               count[None])
+        if track:
+            ys = ys + (rejected, deferred_n.astype(jnp.float32))
         return (xn, yn, vxn, vyn, q, new_chare, assignment, perm,
                 count, tstate), ys
 
@@ -585,6 +980,7 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
         in_specs=(P_(ax),) * 8 + (P_(),),
         out_specs=((P_(),) * 8               # per-step replicated metrics
                    + (P_(None, ax),)         # per-step per-shard counts
+                   + ((P_(),) * 2 if track else ())  # rejected, deferred
                    + (P_(ax),) * 4),         # final slabs + counts
         check_vma=False)
     return jax.jit(fn)
@@ -615,7 +1011,15 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
     particle-id order).  See the module docstring for the capacity rule;
     a ``replay_capacity`` below the largest per-shard bucket total
     raises ``ValueError`` after the run (payload is never dropped
-    silently)."""
+    silently).
+
+    ``PICConfig.faults`` injects a ``runtime.resilience.FaultSchedule``
+    into the scan (health-masked trigger/planning, forced evacuation
+    fires, guarded plan adoption) and ``PICConfig.on_overflow="spill"``
+    swaps the exchange for the admission-clamped spill ring (overflow
+    particles stay on their source shard and drain on later fires);
+    either adds the ``plan_rejected`` / ``deferred`` per-step series to
+    the result.  Defaults leave the trace bit-for-bit unchanged."""
     from repro.kernels.histogram.ops import histogram
     from repro.pic import chares as ch
     from repro.pic import driver as pic_driver
@@ -639,6 +1043,9 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
             f"even split of {n} particles over {D} shards "
             f"({n // D} per shard); raise replay_capacity "
             f"(n_particles={n} is always safe)")
+    on_overflow = getattr(cfg, "on_overflow", "strict")
+    if on_overflow not in ("strict", "spill"):
+        raise ValueError(f"unknown on_overflow mode {on_overflow!r}")
 
     p = initialize(cfg.mode, cfg.L, n, k=cfg.k, vy0=cfg.vy0,
                    rho=cfg.rho, seed=cfg.seed)
@@ -651,6 +1058,9 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
     kw_items = tuple(sorted((cfg.strategy_kwargs or {}).items()))
     trig = pic_driver._resolve_trigger(cfg)
     lb_on = cfg.strategy != "none" and not trig.never
+    faults, _ = _resolve_resilience(getattr(cfg, "faults", None), None, D,
+                                    cfg.strategy, trig)
+    track = (faults is not None) or on_overflow == "spill"
 
     # LB planning cost for the CostModel — measured once on the initial
     # snapshot, exactly as the single-device scanned path charges it
@@ -672,12 +1082,13 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
         (_mesh_key(mesh), cfg.L, cfg.cx, cfg.cy, cfg.num_pes, cfg.k,
          cfg.vy0, cfg.lb_every, cfg.strategy, kw_items,
          cfg.bytes_per_particle, cfg.use_kernel, cfg.steps, capacity,
-         cfg.threads_per_node, trig),
+         cfg.threads_per_node, trig, faults, on_overflow),
         lambda: _pic_runner(mesh, cfg.L, cfg.cx, cfg.cy, cfg.num_pes,
                             cfg.k, cfg.vy0, cfg.lb_every, cfg.strategy,
                             kw_items, cfg.bytes_per_particle,
                             cfg.use_kernel, cfg.steps, capacity,
-                            cfg.threads_per_node, trig))
+                            cfg.threads_per_node, trig, faults,
+                            on_overflow))
 
     slabs = _pad_slabs(
         (p.x, p.y, p.vx, p.vy, p.q, chare_id,
@@ -689,15 +1100,24 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
     out = jax.device_get(out)
     wall = time.perf_counter() - t_start
 
-    (ma, pe_max, ext_b, int_b, mig, mig_bytes, tma, fired, counts_ts,
-     x_out, y_out, perm_out, counts) = out
+    if track:
+        (ma, pe_max, ext_b, int_b, mig, mig_bytes, tma, fired, counts_ts,
+         rej, deferred, x_out, y_out, perm_out, counts) = out
+    else:
+        (ma, pe_max, ext_b, int_b, mig, mig_bytes, tma, fired, counts_ts,
+         x_out, y_out, perm_out, counts) = out
+        rej = deferred = None
     counts_ts = np.asarray(counts_ts)              # (T, D) needed slots
-    if (counts_ts > capacity).any():
+    # spill mode clamps inflow inside the exchange (counts <= capacity
+    # by construction, overflow surfaces as the deferred series); strict
+    # mode keeps the fail-loud contract
+    if on_overflow != "spill" and (counts_ts > capacity).any():
         raise ValueError(
             f"replay_capacity={capacity} overflowed (largest shard "
             f"needed {int(counts_ts.max())} slots at some step); the "
             "exchange would have dropped payload — raise replay_capacity "
-            f"(n_particles={n} is always safe)")
+            f"(n_particles={n} is always safe) or use "
+            "on_overflow='spill'")
 
     ma, pe_max, ext_b, int_b, mig, mig_bytes, tma, fired = (
         np.asarray(a, np.float64)
@@ -729,4 +1149,8 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
         float(lb_est * lb_steps.sum()), step_s, fx, fy,
         scanned=True, wall_seconds=wall,
         thread_max_avg=(tma if cfg.threads_per_node else None),
-        lb_steps=fired)
+        lb_steps=fired,
+        plan_rejected=(None if rej is None
+                       else np.asarray(rej, np.float64)),
+        deferred=(None if deferred is None
+                  else np.asarray(deferred, np.float64)))

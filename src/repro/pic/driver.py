@@ -102,6 +102,17 @@ class PICConfig:
     sharded_replay: bool = False
     replay_shards: Optional[int] = None
     replay_capacity: Optional[int] = None
+    # resilience (sharded replay only; runtime/resilience.py): `faults`
+    # injects a FaultSchedule of die/slow/recover shard events honored
+    # inside the scan — health-masked trigger stats and planning, forced
+    # evacuation fires, validate_plan-guarded adoption.  `on_overflow`
+    # picks the exchange's degradation mode when a fired plan exceeds
+    # replay_capacity: "strict" fails loud (the ValueError above),
+    # "spill" clamps per-shard inflow, keeps overflow particles on their
+    # source shard and retries them at the next fire (PICResult.deferred
+    # records the backlog).  Defaults add nothing to the trace.
+    faults: Optional[object] = None
+    on_overflow: str = "strict"
     bytes_per_particle: float = 48.0
     seed: int = 0
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
@@ -152,6 +163,11 @@ class PICResult:
     thread_max_avg: Optional[np.ndarray] = None
     # (T,) 1.0 where the trigger fired and a rebalance was executed
     lb_steps: Optional[np.ndarray] = None
+    # resilient sharded replay only (else None): (T,) 0/1 fired plans
+    # rejected by the validate_plan guardrail, and (T,) particles the
+    # spill exchange deferred on their source shard at each step
+    plan_rejected: Optional[np.ndarray] = None
+    deferred: Optional[np.ndarray] = None
 
     def summary(self) -> Dict[str, float]:
         # mean ext/int ratio over steps with internal traffic; all-external
@@ -205,6 +221,15 @@ def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
         from repro.distributed import replay_shard
 
         return replay_shard.run_pic_sharded(cfg, cost)
+    if cfg.faults is not None and not getattr(cfg.faults, "empty", False):
+        raise ValueError(
+            "fault injection (PICConfig.faults) is a sharded-replay "
+            "feature; set sharded_replay=True")
+    if cfg.on_overflow != "strict":
+        raise ValueError(
+            "on_overflow='spill' degrades the sharded replay exchange; "
+            "set sharded_replay=True (the single-device paths have no "
+            "capacity to overflow)")
     use_scan = cfg.scan
     if use_scan and not core_engine.get_strategy(cfg.strategy).jittable:
         raise ValueError(

@@ -58,6 +58,34 @@ from repro.kernels import migrate as mig_ops
 AXIS = "mig"
 
 
+class CapacityOverflowError(ValueError):
+    """A migration would exceed a per-shard/per-node slot budget.
+
+    Raised by the **eager** entries only (:func:`migrate_sharded` in its
+    default ``on_overflow="strict"`` mode, and :func:`migrate` when a
+    ``capacity`` bound is passed) — inside a compiled scan a Python
+    exception is meaningless, which is exactly why the in-scan exchange
+    offers the ``spill`` mode instead (overflow items stay on their
+    source shard and retry at the next fired rebalance).
+
+    Structured fields: ``capacity`` (the budget), ``counts`` (per-unit
+    inflow item counts), ``offending`` (unit ids over budget), ``unit``
+    (``"shard"`` or ``"node"``)."""
+
+    def __init__(self, *, capacity: int, counts, unit: str = "shard"):
+        self.capacity = int(capacity)
+        self.counts = [int(c) for c in np.asarray(counts).ravel()]
+        self.unit = str(unit)
+        self.offending = [i for i, c in enumerate(self.counts)
+                          if c > self.capacity]
+        super().__init__(
+            f"per-{self.unit} capacity={self.capacity} overflowed: inflow "
+            f"counts per {self.unit} {self.counts} exceed the budget at "
+            f"{self.unit} ids {self.offending}; the exchange would have "
+            "dropped payload — raise capacity (n is always safe) or use "
+            "on_overflow='spill'")
+
+
 class Manifest(NamedTuple):
     """Executable exchange plan for one old→new ownership pair.
 
@@ -180,26 +208,125 @@ def _migrate_exec(num_nodes: int, donate: bool, method: str):
 
 
 def migrate(owner_old, owner_new, arrays: Sequence, *, num_nodes: int,
-            donate: Optional[bool] = None, method: str = "auto"):
+            donate: Optional[bool] = None, method: str = "auto",
+            capacity: Optional[int] = None):
     """Eager single-device migration: ``(relocated_arrays, manifest)``.
 
     ``donate=None`` donates the payload buffers wherever the backend
     supports donation (not CPU XLA) — the executed exchange then
     double-buffers in place instead of allocating a second copy.
     ``method`` is the manifest-build knob (see :func:`build_manifest`);
-    the relocated layout is identical for every setting."""
+    the relocated layout is identical for every setting.  ``capacity``,
+    if given, bounds the per-**node** slot count of the relocated
+    layout; exceeding it raises :class:`CapacityOverflowError` with the
+    per-node inflow counts and offending node ids (the eager path stays
+    strict — spill semantics belong to the in-scan exchanges)."""
     if donate is None:
         donate = jax.default_backend() != "cpu"
-    return _migrate_exec(int(num_nodes), bool(donate), str(method))(
+    out, man = _migrate_exec(int(num_nodes), bool(donate), str(method))(
         jnp.asarray(owner_old, jnp.int32),
         jnp.asarray(owner_new, jnp.int32), tuple(arrays))
+    if capacity is not None:
+        counts = np.diff(np.asarray(man.offsets))
+        if (counts > int(capacity)).any():
+            raise CapacityOverflowError(capacity=capacity, counts=counts,
+                                        unit="node")
+    return out, man
+
+
+# ------------------------------------------------- spill (degradation) --
+
+
+def spill_admissions(flow, occupancy, capacity) -> jax.Array:
+    """Feasible admitted-flow matrix under a per-group slot budget.
+
+    ``flow`` is the (G, G) i32 *wanted* move-count matrix between groups
+    (nodes or shards; the diagonal — items staying put — is ignored),
+    ``occupancy`` the (G,) current item count per group, ``capacity``
+    the static slot budget every group must respect after the exchange.
+    Returns ``A`` (G, G) with ``0 <= A <= off-diag(flow)`` such that
+    every post-exchange count ``occupancy - A.sum(1) + A.sum(0)`` is
+    ``<= capacity``, shrinking as little flow as possible per round and
+    deferring from the **highest source index first** (a fixed
+    deterministic rule, so replay trajectories are reproducible).
+
+    A fixed point exists whenever ``occupancy <= capacity`` (``A = 0``
+    is then feasible); each ``lax.while_loop`` round strictly reduces
+    the admitted total, so termination is guaranteed.  Groups that are
+    over budget *before* any exchange (only possible with a
+    caller-violated precondition) exit with ``A = 0`` rather than loop
+    forever.  Traceable and scan-safe — this is the solver behind both
+    the per-node :func:`spill_owner` and the per-shard spill mode of
+    :func:`ring_exchange`."""
+    flow = jnp.asarray(flow, jnp.int32)
+    G = flow.shape[0]
+    occupancy = jnp.asarray(occupancy, jnp.int32)
+    capacity = jnp.asarray(capacity, jnp.int32)
+    eye = jnp.eye(G, dtype=bool)
+    F = jnp.where(eye, 0, flow)
+
+    def post(A):
+        return occupancy - A.sum(axis=1) + A.sum(axis=0)
+
+    def cond(A):
+        return (post(A) > capacity).any() & (A.sum() > 0)
+
+    def body(A):
+        over = jnp.maximum(post(A) - capacity, 0)            # (G,)
+        # per column: how much flow arrives from rows *below* each source
+        # — cutting top-down means cut[s] covers whatever the rows after
+        # it cannot absorb
+        below = (jnp.cumsum(A[::-1], axis=0)[::-1] - A)      # (G, G)
+        cut = jnp.clip(over[None, :] - below, 0, A)
+        return A - cut
+
+    return jax.lax.while_loop(cond, body, F)
+
+
+def spill_owner(owner_old, owner_new, *, num_nodes: int, capacity):
+    """Clamp a plan's per-node inflow to ``capacity`` by deferring moves.
+
+    The single-device counterpart of :func:`ring_exchange`'s spill mode:
+    items whose admission would push the destination node over the slot
+    budget keep their **old** owner (they stay physically where they
+    are) and simply retry at the next fired rebalance, when the next
+    plan recomputes ``owner_new`` from the live assignment.  Within each
+    (src, dst) flow the *first* items in slab order are admitted —
+    deterministic, so replay trajectories are reproducible.
+
+    Returns ``(owner_eff, deferred)``: the effective (n,) owner vector
+    to hand to :func:`build_and_apply` / :func:`migrate`, and the (n,)
+    bool mask of deferred items (``deferred.sum()`` is the per-step
+    ``deferred_count``).  Requires every *current* per-node count to be
+    ``<= capacity`` (always true when the previous exchange respected
+    the same budget); payload is never dropped either way."""
+    P = int(num_nodes)
+    oo = jnp.asarray(owner_old, jnp.int32)
+    on = jnp.asarray(owner_new, jnp.int32)
+    move = on != oo
+    ones = jnp.ones(oo.shape, jnp.int32)
+    pair = oo * P + on
+    F = jax.ops.segment_sum(
+        jnp.where(move, 1, 0).astype(jnp.int32), pair,
+        num_segments=P * P).reshape(P, P)
+    occ = jax.ops.segment_sum(ones, oo, num_segments=P)
+    A = spill_admissions(F, occ, capacity)
+    # stable within-flow rank: admitted = first A[src, dst] movers of
+    # each flow, in slab order (the same counting-scatter primitive the
+    # manifest build uses; non-movers rank against the padding sentinel)
+    rank, _ = mig_ops.bucket_ranks(jnp.where(move, pair, P * P), C=P * P)
+    quota = jnp.take(A.reshape(-1), jnp.clip(pair, 0, P * P - 1))
+    admitted = move & (rank < quota)
+    deferred = move & ~admitted
+    return jnp.where(deferred, oo, on), deferred
 
 
 # ----------------------------------------------------- sharded exchange --
 
 
 def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
-                  capacity: int, axis: str, count_loc=None):
+                  capacity: int, axis: str, count_loc=None,
+                  mode: str = "strict"):
     """Per-shard ring all-to-all core (runs under ``shard_map``).
 
     Shard ``d`` owns nodes ``[d*rpd, (d+1)*rpd)``.  The local block
@@ -221,9 +348,26 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
     slabs through ``lax.scan`` and re-bucket them at every fired
     rebalance without a host trip.
 
-    Returns ``(out_owner, outs, count_me)``: the (capacity,) relocated
-    owner/payload slabs (valid prefix ``count_me``) for this shard.
+    ``mode`` selects the overflow semantics.  ``"strict"`` (default)
+    assumes the plan fits the slot budget — the caller is responsible
+    for checking the returned counts (the layout contract above holds).
+    ``"spill"`` is the graceful-degradation exchange: per-shard inflow
+    is clamped to ``capacity`` by the :func:`spill_admissions` fixed
+    point, overflow items **stay on their source shard** (their desired
+    owner id is preserved in the owner slab so the next fired rebalance
+    retries them), and the extra return value ``deferred`` (replicated
+    i32 scalar) counts them.  Spill keeps every item exactly once —
+    payload is never dropped — but gives up the bit-for-bit bucketed
+    *layout* contract: kept items compact to the slab prefix in slab
+    order, admitted inflow appends in (source shard, within-flow rank)
+    order.
+
+    Returns ``(out_owner, outs, count_me)`` — the (capacity,) relocated
+    owner/payload slabs (valid prefix ``count_me``) for this shard —
+    plus ``deferred`` in spill mode.
     """
+    if mode not in ("strict", "spill"):
+        raise ValueError(f"unknown ring_exchange mode {mode!r}")
     rpd = num_nodes // D
     me = jax.lax.axis_index(axis)
     slots = jnp.arange(owner_loc.shape[0], dtype=jnp.int32)
@@ -236,6 +380,10 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
         jnp.ones(owner_loc.shape, jnp.int32), owner_loc,
         num_segments=num_nodes)
     counts = jax.lax.all_gather(cnt_loc, axis)          # (D, P)
+    if mode == "spill":
+        return _ring_exchange_spill(
+            owner_loc, arr_loc, live=live, counts=counts,
+            num_nodes=num_nodes, D=D, capacity=capacity, axis=axis, me=me)
     bucket = counts.sum(axis=0)                         # (P,) global sizes
     my_sizes = jax.lax.dynamic_slice(bucket, (me * rpd,), (rpd,))
     my_base = jnp.concatenate(
@@ -275,6 +423,58 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
     return out_owner, outs, count_me
 
 
+def _ring_exchange_spill(owner_loc, arr_loc, *, live, counts,
+                         num_nodes: int, D: int, capacity: int, axis: str,
+                         me):
+    """Spill-mode ring body (see :func:`ring_exchange` ``mode="spill"``).
+
+    Admission is decided **on the source shard** from the replicated
+    (D, D) shard-flow matrix, travels with the payload around the ring,
+    and the destination scatters admitted items at
+    ``kept_prefix + cumulative-admitted-before-source + within-flow
+    rank`` — every position is < capacity by the admission fixed
+    point's feasibility, so no ``mode="drop"`` scatter ever fires on a
+    live item."""
+    rpd = num_nodes // D
+    # (D, D) wanted shard-level flow (diagonal = stays, solver ignores it)
+    flow = counts.reshape(D, D, rpd).sum(-1)
+    occ = counts.sum(axis=1)                             # (D,) live counts
+    A = spill_admissions(flow, occ, capacity)            # (D, D) admitted
+    dshard = jnp.minimum(owner_loc // rpd, D)            # padding → D
+    fid = jnp.where(live & (dshard != me), dshard, D)
+    # stable within-flow rank among this shard's movers to each dest
+    rank, _ = mig_ops.bucket_ranks(fid, C=D)
+    quota = jnp.take(A[me], jnp.clip(dshard, 0, D - 1))
+    admitted = (fid < D) & (rank < quota)
+    keep = live & ~admitted
+    kept_me = keep.sum().astype(jnp.int32)
+    # kept items (stays + deferred movers, desired owner id preserved)
+    # compact to the slab prefix in slab order
+    kpos = jnp.where(keep,
+                     jnp.cumsum(keep.astype(jnp.int32)) - 1, capacity)
+    out_owner = jnp.zeros((capacity,), jnp.int32).at[kpos].set(
+        owner_loc, mode="drop")
+    outs = tuple(jnp.zeros((capacity,), a.dtype).at[kpos].set(a,
+                                                              mode="drop")
+                 for a in arr_loc)
+    buf = (owner_loc, admitted.astype(jnp.int32), rank) + tuple(arr_loc)
+    shift = [(d, (d - 1) % D) for d in range(D)]
+    for s in range(1, D):
+        buf = tuple(jax.lax.ppermute(b, axis, shift) for b in buf)
+        src = (me + s) % D
+        pe_b, adm_b, rank_b = buf[0], buf[1], buf[2]
+        accept = (adm_b == 1) & (jnp.minimum(pe_b // rpd, D) == me)
+        base = kept_me + (A[:, me] * (jnp.arange(D) < src)).sum()
+        pos = jnp.where(accept, base + rank_b, capacity)
+        out_owner = out_owner.at[pos].set(pe_b, mode="drop")
+        outs = tuple(o.at[pos].set(v, mode="drop")
+                     for o, v in zip(outs, buf[3:]))
+    count_me = (kept_me + A[:, me].sum()).astype(jnp.int32)
+    eye = jnp.eye(D, dtype=bool)
+    deferred = (jnp.where(eye, 0, flow).sum() - A.sum()).astype(jnp.int32)
+    return out_owner, outs, count_me, deferred
+
+
 def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
                   capacity: int, axis: str):
     """``shard_map`` adapter over :func:`ring_exchange` (whole slab live)."""
@@ -282,6 +482,15 @@ def _sharded_body(owner_loc, *arr_loc, num_nodes: int, D: int,
         owner_loc, tuple(arr_loc), num_nodes=num_nodes, D=D,
         capacity=capacity, axis=axis)
     return (out_owner,) + outs + (count_me[None],)
+
+
+def _sharded_body_spill(owner_loc, *arr_loc, num_nodes: int, D: int,
+                        capacity: int, axis: str):
+    """Spill-mode ``shard_map`` adapter (whole slab live)."""
+    out_owner, outs, count_me, deferred = ring_exchange(
+        owner_loc, tuple(arr_loc), num_nodes=num_nodes, D=D,
+        capacity=capacity, axis=axis, mode="spill")
+    return (out_owner,) + outs + (count_me[None], deferred[None])
 
 
 def planned_capacity(owner_new, *, num_nodes: int, num_shards: int) -> int:
@@ -303,7 +512,8 @@ def planned_capacity(owner_new, *, num_nodes: int, num_shards: int) -> int:
 
 def migrate_sharded(owner_new, arrays: Sequence, *, num_nodes: int,
                     mesh: Optional[Mesh] = None,
-                    capacity: Optional[int] = None):
+                    capacity: Optional[int] = None,
+                    on_overflow: str = "strict"):
     """Ring all-to-all payload exchange across a 1-D device mesh.
 
     ``owner_new`` / ``arrays`` are the *global* (n,) buffers, row-sharded
@@ -313,14 +523,28 @@ def migrate_sharded(owner_new, arrays: Sequence, *, num_nodes: int,
     plan itself — :func:`planned_capacity`, the max per-shard inflow —
     so callers no longer have to pass the worst-case ``n``.  An explicit
     ``capacity`` overrides the planned bound (e.g. to keep one compiled
-    executable across calls); a value below the largest per-shard item
-    count raises ``ValueError`` (payload is never lost silently).
+    executable across calls).
+
+    ``on_overflow`` picks the degradation semantics when the plan wants
+    more items on a shard than ``capacity`` allows.  ``"strict"`` (the
+    default, and the eager contract) raises
+    :class:`CapacityOverflowError` with the per-shard inflow counts and
+    offending shard ids — payload is never lost silently.  ``"spill"``
+    executes the admissible part of the exchange instead: inflow is
+    clamped to ``capacity``, overflow items stay on their source shard
+    (keeping their desired owner id, so a later call retries them), and
+    a fourth return value ``deferred`` (int) counts them.  Spill gives
+    up the bit-for-bit layout contract below (see
+    :func:`ring_exchange`).
 
     Returns ``(owner_out, arrays_out, counts)`` where the outputs are
     (D*capacity,) padded global buffers (shard ``d``'s valid prefix is
-    ``[d*capacity, d*capacity + counts[d])``) and ``counts`` is (D,).
-    Concatenating the valid prefixes equals the single-device
+    ``[d*capacity, d*capacity + counts[d])``) and ``counts`` is (D,) —
+    plus ``deferred`` when ``on_overflow="spill"``.  In strict mode,
+    concatenating the valid prefixes equals the single-device
     ``apply_manifest`` layout bit-for-bit."""
+    if on_overflow not in ("strict", "spill"):
+        raise ValueError(f"unknown on_overflow mode {on_overflow!r}")
     if mesh is None:
         mesh = Mesh(np.asarray(jax.devices()), (AXIS,))
     if len(mesh.axis_names) != 1:
@@ -333,23 +557,34 @@ def migrate_sharded(owner_new, arrays: Sequence, *, num_nodes: int,
         raise ValueError(
             f"n={n} and num_nodes={num_nodes} must divide the {D}-device "
             "mesh")
+    spill = on_overflow == "spill"
     if capacity is None:
         capacity = planned_capacity(owner_new, num_nodes=num_nodes,
                                     num_shards=D)
+        if spill:
+            # the planned bound always fits; a spill caller wants a
+            # *tighter* budget, but never below the current occupancy
+            # (the admission fixed point needs occupancy <= capacity)
+            capacity = max(capacity, n // D)
+    if spill and int(capacity) < n // D:
+        raise ValueError(
+            f"spill capacity={int(capacity)} is below the per-shard "
+            f"occupancy {n // D}; the current slabs must already fit")
     body = functools.partial(
-        _sharded_body, num_nodes=int(num_nodes), D=D,
-        capacity=int(capacity), axis=ax)
+        _sharded_body_spill if spill else _sharded_body,
+        num_nodes=int(num_nodes), D=D, capacity=int(capacity), axis=ax)
     arrays = tuple(jnp.asarray(a) for a in arrays)
     fn = jax.shard_map(
         body, mesh=mesh,
         in_specs=(P_(ax),) * (1 + len(arrays)),
-        out_specs=(P_(ax),) * (2 + len(arrays)),
+        out_specs=(P_(ax),) * ((3 if spill else 2) + len(arrays)),
         check_vma=False)
     out = fn(owner_new, *arrays)
+    if spill:
+        deferred = int(np.asarray(out[-1])[0])
+        return out[0], out[1:-2], out[-2], deferred
     counts = np.asarray(out[-1])
     if (counts > capacity).any():
-        raise ValueError(
-            f"per-shard capacity={capacity} overflowed (largest shard "
-            f"holds {int(counts.max())} items); the scatter would have "
-            "dropped payload — raise capacity (n is always safe)")
+        raise CapacityOverflowError(capacity=capacity, counts=counts,
+                                    unit="shard")
     return out[0], out[1:-1], out[-1]

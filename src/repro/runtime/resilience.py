@@ -1,0 +1,361 @@
+"""Resilience layer for the sharded replay runtime.
+
+The replay loops (``distributed/replay_shard.py``) keep a persistently
+communicating application balanced *while it runs*; this module makes
+that claim survive an imperfect world.  Four pieces, all deterministic
+and scan-safe (pure functions of the step index — nothing new rides in
+the ``lax.scan`` carry):
+
+* **Fault injection** — :class:`FaultSchedule`: a static list of
+  ``(step, shard, kind)`` events (``die`` / ``slow`` / ``recover``)
+  whose :meth:`~FaultSchedule.shard_health` projection is traceable in
+  ``t``, so the same schedule replays bit-identically inside a scan, a
+  chunked scan, or after a checkpoint restore.
+* **Health-masked planning** — :func:`rehome_dead` moves a dead shard's
+  objects onto the healthy node with the strongest communication
+  affinity (falling back to the least-loaded alive node), and
+  :func:`mask_preference` zeroes the stage-1 preference rows/columns of
+  dead nodes, so the existing three-stage diffusion planner re-diffuses
+  the displaced load over the surviving mesh with conservation intact.
+  The motivation follows Boulmier et al. (anticipate the disruption,
+  don't crash on it) and Demirel & Sbalzarini (diffusion remains
+  correct under hard per-node constraints) — see PAPERS.md.
+* **Plan guardrails** — :func:`validate_plan` checks a candidate
+  assignment on-device (owners in range and alive, finite loads,
+  optional per-node slot bound); the replay loops ``lax.cond`` the
+  adoption on the verdict and roll back to the last-good assignment,
+  surfacing a per-step ``plan_rejected`` flag.
+* **Checkpointed replay** — :func:`run_series_checkpointed` drives the
+  sharded sim replay in ``checkpoint_every``-step chunks under
+  ``train.fault_tolerance.run_resilient``, snapshotting the scan carry
+  at every chunk boundary and resuming bit-exact after an injected
+  supervisor failure (chunking a scan changes nothing numerically —
+  the per-step program is identical).
+
+Graceful **capacity degradation** (the spill exchange) lives with the
+exchange itself — ``runtime.migrate.spill_admissions`` /
+``spill_owner`` / ``ring_exchange(mode="spill")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_graph
+
+_KINDS = ("die", "slow", "recover")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Deterministic shard-fault script for the replay runtime.
+
+    ``events`` is a tuple of ``(step, shard, kind)`` with ``kind`` one
+    of ``"die"`` (the shard's nodes stop hosting objects), ``"slow"``
+    (the shard keeps running at ``slow_factor`` of full speed — its
+    effective load is scaled by ``1/slow_factor`` in trigger stats and
+    planning), or ``"recover"`` (full health restored).  An event takes
+    effect *at* its step and persists until overridden by a later event
+    for the same shard.  The schedule is hashable (it keys compiled
+    runner caches) and its health projection is a pure traceable
+    function of the step index — scan-safe by construction, nothing is
+    carried.
+
+    An empty schedule is inert: the replay entries normalize it to
+    ``None`` and take the exact pre-resilience code path, keeping every
+    trajectory bit-for-bit unchanged.
+    """
+
+    events: Tuple[Tuple[int, int, str], ...] = ()
+    slow_factor: float = 0.5
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(
+            (int(s), int(d), str(k)) for s, d, k in self.events))
+        seen = set()
+        for step, shard, kind in self.events:
+            if kind not in _KINDS:
+                raise ValueError(
+                    f"unknown fault kind {kind!r} (one of {_KINDS})")
+            if step < 0 or shard < 0:
+                raise ValueError(
+                    f"fault event ({step}, {shard}, {kind!r}) must have "
+                    "non-negative step and shard")
+            if (step, shard) in seen:
+                raise ValueError(
+                    f"duplicate fault event for shard {shard} at step "
+                    f"{step} — one event per (step, shard)")
+            seen.add((step, shard))
+        if not (0.0 < float(self.slow_factor) <= 1.0):
+            raise ValueError("slow_factor must be in (0, 1]")
+
+    @property
+    def empty(self) -> bool:
+        return not self.events
+
+    def max_shard(self) -> int:
+        """Largest shard id referenced (−1 for an empty schedule)."""
+        return max((d for _, d, _ in self.events), default=-1)
+
+    def _tables(self):
+        steps = np.asarray([e[0] for e in self.events], np.int32)
+        shards = np.asarray([e[1] for e in self.events], np.int32)
+        codes = np.asarray([_KINDS.index(e[2]) for e in self.events],
+                           np.int32)
+        return steps, shards, codes
+
+    def shard_health(self, t, D: int):
+        """``(alive, speed)`` per shard at step ``t`` (traceable).
+
+        ``alive`` is (D,) bool, ``speed`` (D,) f32 in (0, 1].  A shard
+        is dead iff its most recent ``die`` is more recent than its most
+        recent ``recover``; it is slowed iff its most recent ``slow``
+        postdates both.  Negative ``t`` reads as "before any event" —
+        everything healthy."""
+        if self.empty:
+            return (jnp.ones((D,), bool), jnp.ones((D,), jnp.float32))
+        steps, shards, codes = self._tables()
+        steps = jnp.asarray(steps)
+        shards = jnp.asarray(shards)
+        codes = jnp.asarray(codes)
+        t = jnp.asarray(t, jnp.int32)
+        active = steps <= t
+
+        def last(kind):
+            stamped = jnp.where(active & (codes == kind), steps, -1)
+            seg = jax.ops.segment_max(stamped, shards, num_segments=D)
+            return jnp.maximum(seg, -1)   # shards with no events
+
+        die, slow, rec = last(0), last(1), last(2)
+        alive = die <= rec
+        slowed = (slow > rec) & (slow > die)
+        speed = jnp.where(alive & slowed,
+                          jnp.float32(self.slow_factor), jnp.float32(1.0))
+        return alive, speed
+
+    def node_health(self, t, num_nodes: int, D: int):
+        """Shard health broadcast to the planner's node granularity.
+
+        Shard ``d`` owns the contiguous node rows
+        ``[d*rpd, (d+1)*rpd)`` (the replay layers' ownership map), so
+        node health is ``repeat(shard_health, num_nodes // D)``."""
+        alive, speed = self.shard_health(t, D)
+        rpd = num_nodes // D
+        return jnp.repeat(alive, rpd), jnp.repeat(speed, rpd)
+
+    def changed_at(self, t, D: int):
+        """Traceable bool: did any shard's health change at step ``t``?
+
+        The replay loops OR this into the trigger decision so a
+        rebalance fires on every health transition (a dying shard must
+        be evacuated *now*, not at the next cadence tick)."""
+        if self.empty:
+            return jnp.asarray(False)
+        a0, s0 = self.shard_health(jnp.asarray(t, jnp.int32) - 1, D)
+        a1, s1 = self.shard_health(t, D)
+        return ((a0 != a1) | (s0 != s1)).any()
+
+
+# ------------------------------------------------ health-masked planning --
+
+
+def mask_preference(preference, alive):
+    """Zero stage-1 preference rows/columns of dead nodes.
+
+    ``select_neighbors`` treats ``preference > 0`` as the candidate
+    edge set, so a zeroed row/column removes a dead node from every
+    neighborhood: no flow is computed toward it, no object targets it.
+    With an all-alive mask this is a value-preserving identity."""
+    alive = jnp.asarray(alive, bool)
+    return jnp.where(alive[:, None] & alive[None, :], preference, 0.0)
+
+
+def rehome_dead(problem: comm_graph.LBProblem, alive) -> jax.Array:
+    """Re-home objects owned by dead nodes onto healthy ones.
+
+    Each displaced object moves to the **alive node it communicates
+    with most** (its per-node byte total under the current assignment —
+    the same comm-graph machinery stage 1 uses), falling back to the
+    least-loaded alive node when it has no alive communication partner.
+    Deterministic (argmax/argmin tie-break to the lowest node id) and
+    conservation-preserving: every object keeps exactly one owner.  The
+    result seeds the masked three-stage plan, which then diffuses the
+    displaced load properly over the surviving mesh.
+
+    If *no* node is alive the assignment is returned with dead owners
+    intact — :func:`validate_plan` then rejects the plan and the replay
+    loop keeps the last-good assignment (a fully dead mesh has no
+    correct answer)."""
+    P = problem.num_nodes
+    a = jnp.asarray(problem.assignment, jnp.int32)
+    alive = jnp.asarray(alive, bool)
+    dead_obj = ~jnp.take(alive, jnp.clip(a, 0, P - 1))
+    valid = problem.edges_src >= 0
+    src = jnp.where(valid, problem.edges_src, 0)
+    dst = jnp.where(valid, problem.edges_dst, 0)
+    w = jnp.where(valid, problem.edges_bytes, 0.0).astype(jnp.float32)
+    N = int(a.shape[0])
+    # (N, P) per-object bytes toward each node under the current owners
+    owners_dst = jnp.take(a, dst)
+    owners_src = jnp.take(a, src)
+    byts = (jax.ops.segment_sum(w, src * P + owners_dst,
+                                num_segments=N * P)
+            + jax.ops.segment_sum(w, dst * P + owners_src,
+                                  num_segments=N * P)).reshape(N, P)
+    score = jnp.where(alive[None, :], byts, jnp.float32(-1.0))
+    best = jnp.argmax(score, axis=1).astype(jnp.int32)
+    has_comm = jnp.max(score, axis=1) > 0.0
+    nl = comm_graph.node_loads(problem)
+    fallback = jnp.argmin(jnp.where(alive, nl, jnp.inf)).astype(jnp.int32)
+    any_alive = alive.any()
+    target = jnp.where(has_comm, best, fallback)
+    return jnp.where(dead_obj & any_alive, target, a)
+
+
+def degrade_problem(problem: comm_graph.LBProblem, alive,
+                    speed=None) -> comm_graph.LBProblem:
+    """Project a problem onto a degraded mesh before planning.
+
+    Re-homes dead nodes' objects (:func:`rehome_dead`) and, when
+    ``speed`` is given, scales each object's load by the reciprocal
+    speed of its (post-rehome) owner — a slowed shard looks
+    proportionally heavier to the diffusion sweep, so load drains off
+    it.  The scaling is a planning-side approximation only; metrics
+    and trigger accounting keep the true loads."""
+    a = rehome_dead(problem, alive)
+    problem = problem.with_assignment(a)
+    if speed is not None:
+        w = (jnp.float32(1.0)
+             / jnp.maximum(jnp.asarray(speed, jnp.float32), 1e-6))
+        loads = problem.loads * jnp.take(w, a)
+        problem = dataclasses.replace(problem, loads=loads)
+    return problem
+
+
+# -------------------------------------------------------- plan guardrails --
+
+
+def validate_plan(assignment, loads, *, num_nodes: int, alive=None,
+                  node_capacity=None) -> jax.Array:
+    """On-device plan guardrail: bool scalar, traceable and scan-safe.
+
+    Accepts iff (a) every object has exactly one owner — structural,
+    ``assignment`` is a dense (N,) vector — with the owner id in
+    ``[0, num_nodes)``; (b) every load is finite; (c) every owner is
+    alive, when an ``alive`` mask is given; (d) no node receives more
+    than ``node_capacity`` objects, when a bound is given.  The replay
+    loops ``lax.cond`` plan adoption on this verdict and roll back to
+    the last-good assignment otherwise (surfaced per step as
+    ``plan_rejected``), so one bad plan degrades a step instead of
+    corrupting the whole trajectory."""
+    a = jnp.asarray(assignment, jnp.int32)
+    if a.ndim != 1:
+        raise ValueError("assignment must be a dense (N,) owner vector")
+    loads = jnp.asarray(loads)
+    in_range = ((a >= 0) & (a < num_nodes)).all()
+    ok = in_range & jnp.isfinite(loads).all()
+    safe = jnp.clip(a, 0, num_nodes - 1)
+    if alive is not None:
+        ok = ok & jnp.take(jnp.asarray(alive, bool), safe).all()
+    if node_capacity is not None:
+        counts = jax.ops.segment_sum(
+            jnp.ones(a.shape, jnp.int32), safe, num_segments=num_nodes)
+        ok = ok & (counts <= jnp.asarray(node_capacity, jnp.int32)).all()
+    return ok
+
+
+def finite_or(value, fallback):
+    """``value`` where finite, ``fallback`` elsewhere (shared guard)."""
+    value = jnp.asarray(value)
+    return jnp.where(jnp.isfinite(value), value, fallback)
+
+
+# --------------------------------------------- checkpointed sharded replay --
+
+
+def run_series_checkpointed(initial, evolve, *, steps: int,
+                            checkpoint_every: int,
+                            lb_every: int = 10,
+                            strategy: str = "diff-comm",
+                            strategy_kwargs: Optional[dict] = None,
+                            trigger=None, mesh=None,
+                            num_shards: Optional[int] = None,
+                            threads_per_node: Optional[int] = None,
+                            faults: Optional[FaultSchedule] = None,
+                            guard: Optional[bool] = None,
+                            fail_at=(), max_restarts: int = 8):
+    """Checkpoint/restart-supervised sharded replay (bit-exact).
+
+    Runs the same per-step program as
+    ``distributed.replay_shard.run_series_sharded`` but in
+    ``checkpoint_every``-step chunks: the scan carry (problem arrays +
+    trigger state) is snapshotted to host memory at every chunk
+    boundary, and the chunk loop is driven by
+    ``train.fault_tolerance.run_resilient`` — the supervisor that
+    restores the last snapshot and replays the interrupted chunk on a
+    ``WorkerFailure``.  Chunking a ``lax.scan`` does not change its
+    per-step numerics, so the result is **bit-for-bit** the uninterrupted
+    ``run_series_sharded`` trajectory, with or without injected
+    failures.
+
+    ``fail_at`` is the test hook: an iterable of chunk indices at which
+    one ``WorkerFailure`` is raised (once each) before the chunk runs.
+    ``faults`` / ``guard`` compose — the supervisor restarts the
+    *driver*, the fault schedule degrades the *mesh*; the two failure
+    domains are independent.  Shorter ``checkpoint_every`` bounds the
+    replayed work after a crash but pays more host synchronizations —
+    the cadence trade-off documented in the README.
+
+    Returns the same ``SeriesResult`` as ``run_series_sharded`` (wall
+    fields reflect the chunked execution)."""
+    import time
+
+    from repro.distributed import replay_shard as rs
+    from repro.train import fault_tolerance as ft
+
+    if checkpoint_every < 1:
+        raise ValueError("checkpoint_every must be >= 1")
+    t0 = time.perf_counter()
+    chunks = [min(checkpoint_every, steps - s)
+              for s in range(0, steps, checkpoint_every)]
+    prepared = rs.prepare_series(
+        initial, evolve, steps=steps, lb_every=lb_every, strategy=strategy,
+        strategy_kwargs=strategy_kwargs, trigger=trigger, mesh=mesh,
+        num_shards=num_shards, threads_per_node=threads_per_node,
+        faults=faults, guard=guard)
+    carry = prepared.initial_carry()
+    snapshots: Dict[int, tuple] = {0: jax.device_get(carry)}
+    ys_chunks: Dict[int, tuple] = {}
+    pending = set(int(c) for c in fail_at)
+    state = {"carry": carry}
+
+    def step_fn(ci):
+        if ci in pending:
+            pending.discard(ci)
+            raise ft.WorkerFailure(f"injected failure before chunk {ci}")
+        t_start = sum(chunks[:ci])
+        new_carry, ys = prepared.run_chunk(state["carry"], t_start,
+                                           chunks[ci])
+        state["carry"] = new_carry
+        ys_chunks[ci] = jax.device_get(ys)
+
+    def save_fn(ci):
+        snapshots[ci] = jax.device_get(state["carry"])
+
+    def restore_fn():
+        ci = max(snapshots)
+        state["carry"] = tuple(jnp.asarray(a) for a in snapshots[ci])
+        return ci
+
+    ft.run_resilient(step_fn, start_step=0, num_steps=len(chunks),
+                     save_every=1, save_fn=save_fn,
+                     restore_fn=restore_fn, max_restarts=max_restarts)
+    ys = tuple(np.concatenate([ys_chunks[ci][j]
+                               for ci in range(len(chunks))])
+               for j in range(len(ys_chunks[0])))
+    return prepared.package(state["carry"], ys,
+                            wall_seconds=time.perf_counter() - t0)

@@ -94,6 +94,33 @@ def load_stats(loads, assignment, num_nodes: int):
 load_stats_jit = jax.jit(load_stats, static_argnums=(2,))
 
 
+def load_stats_masked(loads, assignment, num_nodes: int, alive, speed=None):
+    """Health-masked trigger statistics for a degraded mesh.
+
+    The resilient replay paths (``runtime/resilience.py``) feed the
+    trigger *effective* load stats: per-node loads scaled by the
+    reciprocal node ``speed`` (a slowed shard's work takes
+    proportionally longer, so it reads as heavier), the max taken over
+    **alive** nodes only, and the average over the alive count — a dead
+    node must neither dilute the average nor dominate the max while its
+    objects await re-homing.  ``total`` stays the true (unscaled) load
+    sum, which the predictive trigger prices migrations against.  With
+    an all-alive, full-speed mask this still differs from
+    :func:`load_stats` only in the avg divisor's provenance (traced vs
+    static — same value), so the resilient paths use it
+    unconditionally."""
+    nl = jax.ops.segment_sum(
+        jnp.asarray(loads, jnp.float32),
+        jnp.asarray(assignment, jnp.int32),
+        num_segments=num_nodes)
+    alive = jnp.asarray(alive, bool)
+    eff = nl if speed is None else nl / jnp.maximum(
+        jnp.asarray(speed, jnp.float32), 1e-6)
+    eff = jnp.where(alive, eff, 0.0)
+    cnt = jnp.maximum(alive.astype(jnp.float32).sum(), 1.0)
+    return eff.max(), eff.sum() / cnt, nl.sum()
+
+
 @dataclasses.dataclass(frozen=True)
 class EveryTrigger:
     """Fixed-period trigger — the legacy ``lb_every`` behavior.

@@ -36,6 +36,23 @@ from repro.sim import stencil
 EvolveFn = Callable[[comm_graph.LBProblem, object], comm_graph.LBProblem]
 
 
+def finite_loads(loads, floor: float = 1e-3) -> jnp.ndarray:
+    """Shared finite-guard for evolved load vectors.
+
+    Every registered evolve routes its loads through this: non-finite
+    entries (a NaN/Inf from a degenerate parameterization would
+    otherwise poison trigger statistics, diffusion sweeps and the
+    resilience guardrails downstream) are replaced by ``floor`` and
+    finite entries are clamped to at least ``floor``.  For the finite
+    loads every registered scenario actually produces (all >= ``floor``)
+    this is a bitwise identity, so adding the guard changed no replay
+    trajectory."""
+    loads = jnp.asarray(loads, jnp.float32)
+    return jnp.where(jnp.isfinite(loads),
+                     jnp.maximum(loads, jnp.float32(floor)),
+                     jnp.float32(floor))
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """A named workload: ``factory(**kw) -> (problem, evolve)``."""
@@ -156,7 +173,7 @@ def _stencil_wave(*, grid: int = 32, num_nodes: int = 16,
         cy = grid / 2.0 + grid / 3.0 * jnp.sin(angle)
         d2 = (coords[:, 0] - cx) ** 2 + (coords[:, 1] - cy) ** 2
         loads = base * (1.0 + amp * jnp.exp(-d2 / sigma2))
-        return dataclasses.replace(p, loads=loads.astype(jnp.float32))
+        return dataclasses.replace(p, loads=finite_loads(loads))
 
     return problem, evolve
 
@@ -198,7 +215,7 @@ def _pic_geometric(*, L: int = 1000, cx: int = 12, cy: int = 12,
             loads, L=L, cx=cx, cy=cy, k=k, vy0=vy0, lb_period=lb_period,
             bytes_per_particle=bytes_per_particle)
         return dataclasses.replace(
-            p, loads=jnp.maximum(loads, 1e-3), edges_bytes=eb)
+            p, loads=finite_loads(loads), edges_bytes=eb)
 
     problem = chares.build_problem(
         np.asarray(loads_at(0)), np.asarray(assignment), L=L, cx=cx, cy=cy,
@@ -241,7 +258,7 @@ def _adversarial_hotspot(*, grid: int = 32, num_nodes: int = 16,
         c = sites[idx]
         d2 = ((coords - c[None, :]) ** 2).sum(axis=1)
         loads = 1.0 + amp * jnp.exp(-d2 / sigma2)
-        return dataclasses.replace(p, loads=loads.astype(jnp.float32))
+        return dataclasses.replace(p, loads=finite_loads(loads))
 
     return problem, evolve
 
@@ -277,7 +294,7 @@ def _bimodal_churn(*, grid: int = 32, num_nodes: int = 16,
         rank = jnp.mod(perm + phase * stride, N)
         heavy = rank < heavy_count
         loads = jnp.where(heavy, heavy_load, 1.0)
-        return dataclasses.replace(p, loads=loads.astype(jnp.float32))
+        return dataclasses.replace(p, loads=finite_loads(loads))
 
     return problem, evolve
 

@@ -114,6 +114,10 @@ class SeriesResult:
     # (N,) final object→node assignment after the last step (None on the
     # batched path) — the sharded-replay parity contract asserts it
     final_assignment: Optional[np.ndarray] = None
+    # (T,) 0/1 — fired plans the validate_plan guardrail rejected (and
+    # rolled back); only recorded by the resilient sharded replay paths
+    # (``faults`` / ``guard``), None everywhere else
+    plan_rejected: Optional[np.ndarray] = None
 
 
 def run_series(

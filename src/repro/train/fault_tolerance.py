@@ -29,8 +29,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import api as core_api
 from repro.core import comm_graph
+from repro.core import engine as core_engine
 from repro.train import checkpoint as ckpt
 
 
@@ -151,8 +151,11 @@ class StragglerBalancer:
             num_nodes=self.num_hosts,
             coords=np.arange(n, dtype=np.float32)[:, None],
         )
-        plan = core_api.diffusion_lb(
-            prob, k=min(2, self.num_hosts - 1), variant="comm")
+        # route through the Strategy registry → jitted LBEngine.plan_fn:
+        # straggler mitigation and the replay runtime share one compiled
+        # planner code path (and one engine cache entry per configuration)
+        plan = core_engine.get_strategy("diff-comm").run(
+            prob, k=min(2, self.num_hosts - 1))
         moved = int((plan.assignment != self._shard_host).sum())
         self._shard_host = plan.assignment.astype(np.int32)
         return dict(moved_shards=moved, **plan.info)

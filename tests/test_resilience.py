@@ -1,0 +1,609 @@
+"""Resilient sharded replay: faults, guardrails, spill, checkpointing.
+
+The load-bearing guarantees:
+
+  * an **empty / never-active ``FaultSchedule`` changes nothing** — the
+    replay entries normalize an empty schedule to the exact
+    pre-resilience code path, and a schedule whose first event lies
+    beyond the horizon exercises the full resilient trace with all-alive
+    masks yet stays bit-for-bit the plain trajectory;
+  * a **dead shard is evacuated with zero payload loss**: the sim replay
+    ends with no object owned by a dead node, and the PIC replay keeps
+    every particle exactly once (final positions equal the LB-free run —
+    the push physics never depended on the assignment);
+  * ``validate_plan`` **accepts every plan the engine produces** and
+    rejects structurally broken ones (out-of-range or dead owners,
+    non-finite loads, capacity violations) — property-tested through
+    the ``tests._hyp`` shim;
+  * the **spill exchange never drops payload**: admissions respect the
+    capacity fixed point, deferred items keep their desired owner and
+    drain on later fires;
+  * the **checkpointed driver is bit-exact** with the one-shot scan,
+    with and without injected supervisor failures, composed with fault
+    schedules or not.
+
+In-process tests degrade to a 1-device mesh; the subprocess test forces
+an 8-virtual-device mesh so the genuinely distributed failure modes
+(dead shard among live peers, sharded spill) are asserted in CI.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.core import comm_graph
+from repro.core import engine as core_engine
+from repro.pic import driver as pic_driver
+from repro.runtime import migrate as rt_migrate
+from repro.runtime import resilience as rz
+from repro.runtime import triggers as rt_triggers
+from repro.sim import scenarios, simulator
+
+
+# --------------------------------------------------------- FaultSchedule --
+
+
+def test_fault_schedule_validates_events():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        rz.FaultSchedule(events=((1, 0, "explode"),))
+    with pytest.raises(ValueError, match="non-negative"):
+        rz.FaultSchedule(events=((-1, 0, "die"),))
+    with pytest.raises(ValueError, match="duplicate"):
+        rz.FaultSchedule(events=((3, 1, "die"), (3, 1, "recover")))
+    with pytest.raises(ValueError, match="slow_factor"):
+        rz.FaultSchedule(events=((1, 0, "slow"),), slow_factor=0.0)
+    assert rz.FaultSchedule().empty
+    assert rz.FaultSchedule().max_shard() == -1
+    assert rz.FaultSchedule(events=((2, 3, "die"),)).max_shard() == 3
+
+
+def test_fault_schedule_health_projection():
+    fs = rz.FaultSchedule(
+        events=((5, 1, "die"), (9, 1, "recover"), (3, 0, "slow")),
+        slow_factor=0.25)
+    alive, speed = (np.asarray(v) for v in fs.shard_health(2, 2))
+    assert alive.tolist() == [True, True] and speed.tolist() == [1.0, 1.0]
+    alive, speed = (np.asarray(v) for v in fs.shard_health(6, 2))
+    assert alive.tolist() == [True, False]
+    assert speed.tolist() == [0.25, 1.0]
+    alive, speed = (np.asarray(v) for v in fs.shard_health(9, 2))
+    assert alive.tolist() == [True, True]      # recovered at its step
+    # transitions fire exactly at event steps
+    assert bool(fs.changed_at(5, 2)) and bool(fs.changed_at(3, 2))
+    assert bool(fs.changed_at(9, 2))
+    assert not bool(fs.changed_at(6, 2)) and not bool(fs.changed_at(0, 2))
+    # node-level broadcast follows the contiguous shard→node ownership
+    alive_n, speed_n = (np.asarray(v) for v in fs.node_health(6, 4, 2))
+    assert alive_n.tolist() == [True, True, False, False]
+    assert speed_n.tolist() == [0.25, 0.25, 1.0, 1.0]
+
+
+def test_fault_schedule_is_scan_safe_pure_function():
+    # same (t, D) → same health whether called eagerly or under jit
+    fs = rz.FaultSchedule(events=((4, 0, "die"), (7, 0, "recover")))
+    eager = [np.asarray(fs.shard_health(t, 2)[0]) for t in range(10)]
+    jitted = jax.jit(lambda t: fs.shard_health(t, 2)[0])
+    traced = [np.asarray(jitted(t)) for t in range(10)]
+    np.testing.assert_array_equal(np.stack(eager), np.stack(traced))
+
+
+# ------------------------------------------------- health-masked planning --
+
+
+def _tiny_problem(num_nodes=4):
+    return comm_graph.make_problem(
+        loads=np.array([1.0, 2.0, 3.0, 4.0], np.float32),
+        assignment=np.array([0, 1, 2, 3], np.int32),
+        edges=np.array([[0, 1], [2, 3]]),
+        edge_bytes=np.array([5.0, 1.0], np.float32),
+        num_nodes=num_nodes)
+
+
+def test_rehome_dead_prefers_comm_partner():
+    prob = _tiny_problem()
+    # node 1 dies; object 1 talks to object 0 (owner 0) → goes to node 0
+    out = np.asarray(rz.rehome_dead(prob, jnp.array([1, 0, 1, 1], bool)))
+    assert out.tolist() == [0, 0, 2, 3]
+
+
+def test_rehome_dead_falls_back_to_least_loaded():
+    loads = np.array([9.0, 1.0, 1.0, 1.0], np.float32)
+    prob = comm_graph.make_problem(
+        loads=loads, assignment=np.array([0, 0, 1, 2], np.int32),
+        edges=np.array([[0, 1]]), edge_bytes=np.array([1.0], np.float32),
+        num_nodes=4)
+    # node 2's object has no alive comm partner → least-loaded alive node
+    out = np.asarray(rz.rehome_dead(prob, jnp.array([1, 1, 0, 1], bool)))
+    assert out[3] == 3      # node loads: 10, 1, dead, 0 → node 3
+    assert out[:3].tolist() == [0, 0, 1]
+
+
+def test_rehome_dead_all_dead_is_noop():
+    prob = _tiny_problem()
+    out = np.asarray(rz.rehome_dead(prob, jnp.zeros(4, bool)))
+    assert out.tolist() == [0, 1, 2, 3]
+
+
+def test_mask_preference_identity_when_all_alive():
+    pref = jnp.arange(16.0).reshape(4, 4)
+    np.testing.assert_array_equal(
+        np.asarray(rz.mask_preference(pref, jnp.ones(4, bool))),
+        np.asarray(pref))
+    masked = np.asarray(rz.mask_preference(pref, jnp.array([1, 0, 1, 1],
+                                                           bool)))
+    assert (masked[1, :] == 0).all() and (masked[:, 1] == 0).all()
+
+
+def test_load_stats_masked_matches_unmasked_when_healthy():
+    loads = jnp.array([1.0, 2.0, 3.0, 4.0])
+    assignment = jnp.array([0, 1, 2, 3], jnp.int32)
+    mx, av, tot = rt_triggers.load_stats(loads, assignment, 4)
+    mxm, avm, totm = rt_triggers.load_stats_masked(
+        loads, assignment, 4, jnp.ones(4, bool))
+    assert float(mx) == float(mxm)
+    assert float(av) == pytest.approx(float(avm))
+    assert float(tot) == float(totm)
+
+
+def test_load_stats_masked_excludes_dead_and_scales_slow():
+    loads = jnp.array([1.0, 2.0, 3.0, 10.0])
+    assignment = jnp.array([0, 1, 2, 3], jnp.int32)
+    alive = jnp.array([1, 1, 1, 0], bool)
+    mx, av, tot = rt_triggers.load_stats_masked(loads, assignment, 4,
+                                                alive)
+    assert float(mx) == 3.0                      # dead node 3 excluded
+    assert float(av) == pytest.approx(6.0 / 3.0)  # averaged over alive
+    assert float(tot) == 16.0                    # true total kept
+    _, _, _ = rt_triggers.load_stats_masked(
+        loads, assignment, 4, jnp.ones(4, bool),
+        speed=jnp.array([1.0, 1.0, 1.0, 0.5]))
+    mx2, _, _ = rt_triggers.load_stats_masked(
+        loads, assignment, 4, jnp.ones(4, bool),
+        speed=jnp.array([1.0, 1.0, 1.0, 0.5]))
+    assert float(mx2) == 20.0                    # slow node looks heavier
+
+
+def test_engine_plan_health_fn_avoids_dead_nodes():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    prob = evolve(prob, 3)
+    eng = core_engine.get_engine(variant="comm", k=2)
+    alive = jnp.array([1, 0, 1, 1], bool)
+    a, _stats = eng.plan_health_fn(prob, alive)
+    a = np.asarray(a)
+    assert not np.isin(a, [1]).any()
+    assert bool(rz.validate_plan(a, prob.loads, num_nodes=4, alive=alive))
+    # alive=None is exactly plan_fn
+    a0, _ = eng.plan_health_fn(prob, None)
+    a1, _ = eng.plan_fn(prob)
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+
+
+# ----------------------------------------------------------- validate_plan --
+
+
+@settings(max_examples=25, deadline=None)
+@given(num_nodes=st.integers(min_value=1, max_value=12),
+       n=st.integers(min_value=1, max_value=64),
+       seed=st.integers(min_value=0, max_value=999))
+def test_validate_plan_accepts_valid_assignments(num_nodes, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, num_nodes, size=n).astype(np.int32)
+    loads = rng.uniform(0.1, 5.0, size=n).astype(np.float32)
+    assert bool(rz.validate_plan(a, loads, num_nodes=num_nodes))
+    assert bool(rz.validate_plan(a, loads, num_nodes=num_nodes,
+                                 alive=np.ones(num_nodes, bool),
+                                 node_capacity=n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(num_nodes=st.integers(min_value=2, max_value=12),
+       n=st.integers(min_value=2, max_value=64),
+       seed=st.integers(min_value=0, max_value=999),
+       mode=st.sampled_from(["range_low", "range_high", "dead", "nan",
+                             "capacity"]))
+def test_validate_plan_rejects_broken_assignments(num_nodes, n, seed,
+                                                  mode):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, num_nodes, size=n).astype(np.int32)
+    loads = rng.uniform(0.1, 5.0, size=n).astype(np.float32)
+    alive = None
+    cap = None
+    if mode == "range_low":
+        a[rng.integers(n)] = -1
+    elif mode == "range_high":
+        a[rng.integers(n)] = num_nodes
+    elif mode == "dead":
+        dead = int(rng.integers(num_nodes))
+        alive = np.ones(num_nodes, bool)
+        alive[dead] = False
+        a[rng.integers(n)] = dead
+    elif mode == "nan":
+        loads[rng.integers(n)] = np.nan
+    elif mode == "capacity":
+        a[:] = 0                      # all n objects on node 0
+        cap = n - 1
+    assert not bool(rz.validate_plan(a, loads, num_nodes=num_nodes,
+                                     alive=alive, node_capacity=cap))
+
+
+def test_validate_plan_rejects_non_vector_assignment_at_trace_time():
+    with pytest.raises(ValueError, match="dense"):
+        rz.validate_plan(jnp.zeros((2, 2), jnp.int32), jnp.ones(4),
+                         num_nodes=2)
+
+
+def test_finite_or_and_finite_loads():
+    v = jnp.array([1.0, np.nan, np.inf, -2.0])
+    out = np.asarray(rz.finite_or(v, 7.0))
+    assert out.tolist() == [1.0, 7.0, 7.0, -2.0]
+    guarded = np.asarray(scenarios.finite_loads(
+        jnp.array([2.0, np.nan, np.inf, 0.0])))
+    assert guarded[0] == 2.0 and guarded[1] == guarded[2] == 1e-3
+    assert guarded[3] == np.float32(1e-3)
+    # bitwise identity for finite in-range loads
+    clean = jnp.array([1.0, 5.5, 20.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(scenarios.finite_loads(clean)),
+                                  np.asarray(clean))
+
+
+# ------------------------------------------------------------------ spill --
+
+
+@settings(max_examples=25, deadline=None)
+@given(P=st.integers(min_value=2, max_value=6),
+       cap=st.integers(min_value=4, max_value=24),
+       seed=st.integers(min_value=0, max_value=999))
+def test_spill_admissions_fixed_point(P, cap, seed):
+    rng = np.random.default_rng(seed)
+    occ = rng.integers(0, cap + 1, size=P).astype(np.int32)
+    flow = np.zeros((P, P), np.int32)
+    for s in range(P):
+        out_total = int(rng.integers(0, occ[s] + 1))
+        dsts = rng.integers(0, P, size=out_total)
+        for d in dsts:
+            if d != s:
+                flow[s, d] += 1
+    A = np.asarray(rt_migrate.spill_admissions(flow, occ, cap))
+    F = flow * (1 - np.eye(P, dtype=np.int32))
+    assert (A >= 0).all() and (A <= F).all()        # admits subset of flow
+    post = occ - A.sum(1) + A.sum(0)
+    assert (post <= cap).all()                      # capacity respected
+    # feasible flows are admitted unchanged
+    if (occ - F.sum(1) + F.sum(0) <= cap).all():
+        np.testing.assert_array_equal(A, F)
+
+
+def test_spill_owner_conserves_and_drains():
+    # 6 of node0's 8 items want node1 (occupancy 8, capacity 8): only the
+    # 2 outgoing slots freed by node1's leavers are admissible
+    oo = jnp.asarray(np.array([0] * 8 + [1] * 8, np.int32))
+    want = np.array([1] * 6 + [0] * 2 + [0] * 2 + [1] * 6, np.int32)
+    eff, dfr = rt_migrate.spill_owner(oo, jnp.asarray(want), num_nodes=2,
+                                      capacity=8)
+    eff, dfr = np.asarray(eff), np.asarray(dfr)
+    counts = np.bincount(eff, minlength=2)
+    assert counts.sum() == 16                       # nothing dropped
+    assert (counts <= 8).all()
+    assert dfr.sum() == 4                           # 6 wanted, 2 slots
+    # deferred items keep their desired owner and drain at the next fire
+    # once capacity allows
+    eff2, dfr2 = rt_migrate.spill_owner(jnp.asarray(eff),
+                                        jnp.asarray(want), num_nodes=2,
+                                        capacity=12)
+    eff2, dfr2 = np.asarray(eff2), np.asarray(dfr2)
+    assert dfr2.sum() == 0
+    np.testing.assert_array_equal(eff2, want)
+
+
+def test_migrate_eager_capacity_error_is_structured():
+    oo = np.zeros(8, np.int32)
+    on = np.array([0, 0, 0, 1, 1, 1, 1, 1], np.int32)
+    arrays = [np.arange(8, dtype=np.float32)]
+    out, man = rt_migrate.migrate(oo, on, arrays, num_nodes=2, capacity=5)
+    assert np.diff(np.asarray(man.offsets)).tolist() == [3, 5]
+    with pytest.raises(rt_migrate.CapacityOverflowError,
+                       match="capacity") as ei:
+        rt_migrate.migrate(oo, on, arrays, num_nodes=2, capacity=4)
+    err = ei.value
+    assert err.capacity == 4 and err.unit == "node"
+    assert err.counts == [3, 5] and err.offending == [1]
+    assert "node ids [1]" in str(err)
+
+
+def test_migrate_sharded_spill_single_device():
+    # 1-device mesh: spill degenerates to per-node spill_owner semantics
+    on = np.array([1] * 7 + [0], np.int32)
+    arrays = [np.arange(8, dtype=np.float32)]
+    with pytest.raises(ValueError, match="occupancy"):
+        rt_migrate.migrate_sharded(on, arrays, num_nodes=2, capacity=4,
+                                   on_overflow="spill")
+    owner, outs, counts, deferred = rt_migrate.migrate_sharded(
+        on, arrays, num_nodes=2, capacity=8, on_overflow="spill")
+    assert deferred == 0                # one shard: everything stays local
+    assert int(np.asarray(counts).sum()) == 8
+
+
+def test_ring_exchange_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="on_overflow"):
+        rt_migrate.migrate_sharded(np.zeros(4, np.int32), [np.zeros(4)],
+                                   num_nodes=2, on_overflow="drop")
+
+
+# --------------------------------------------------- replay integration --
+
+
+def _series_kw(**over):
+    kw = dict(steps=16, lb_every=4, strategy="diff-comm",
+              strategy_kwargs=dict(k=2))
+    kw.update(over)
+    return kw
+
+
+SERIES_FIELDS = ("max_avg", "ext_int", "migrations", "lb_fired",
+                 "max_load", "migrated_load", "final_assignment")
+
+
+def _assert_series_equal(ref, got):
+    for f in SERIES_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
+            err_msg=f"resilient replay diverged on {f}")
+
+
+def test_empty_schedule_is_bit_identical():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    base = simulator.run_series_sharded(prob, evolve, **_series_kw())
+    empty = simulator.run_series_sharded(
+        prob, evolve, faults=rz.FaultSchedule(), **_series_kw())
+    _assert_series_equal(base, empty)
+    assert empty.plan_rejected is None  # normalized away entirely
+
+
+def test_never_active_schedule_keeps_parity():
+    # the resilient trace (masked stats, forced-fire logic, guardrail)
+    # with all-alive health must reproduce the plain path bit-for-bit
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    base = simulator.run_series_sharded(prob, evolve, **_series_kw())
+    never = rz.FaultSchedule(events=((10_000, 0, "die"),))
+    resil = simulator.run_series_sharded(prob, evolve, faults=never,
+                                         **_series_kw())
+    _assert_series_equal(base, resil)
+    assert resil.plan_rejected is not None
+    assert resil.plan_rejected.sum() == 0
+
+
+def test_guard_only_mode_records_and_keeps_parity():
+    prob, evolve = scenarios.get("bimodal-churn").instantiate(
+        grid=8, num_nodes=4)
+    base = simulator.run_series_sharded(prob, evolve, **_series_kw())
+    guarded = simulator.run_series_sharded(prob, evolve, guard=True,
+                                           **_series_kw())
+    _assert_series_equal(base, guarded)
+    assert guarded.plan_rejected.sum() == 0  # engine plans all validate
+
+
+def test_faults_validation_errors():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    fs = rz.FaultSchedule(events=((2, 99, "die"),))
+    with pytest.raises(ValueError, match="shard"):
+        simulator.run_series_sharded(prob, evolve, faults=fs,
+                                     **_series_kw())
+    with pytest.raises(ValueError, match="active LB"):
+        simulator.run_series_sharded(
+            prob, evolve, faults=rz.FaultSchedule(events=((2, 0, "die"),)),
+            **_series_kw(strategy="none", strategy_kwargs=None))
+    with pytest.raises(TypeError, match="FaultSchedule"):
+        simulator.run_series_sharded(prob, evolve, faults=object(),
+                                     **_series_kw())
+
+
+def test_pic_driver_rejects_resilience_without_sharded_replay():
+    cfg = pic_driver.PICConfig(
+        n_particles=512, steps=2, faults=rz.FaultSchedule(
+            events=((1, 0, "die"),)))
+    with pytest.raises(ValueError, match="sharded_replay"):
+        pic_driver.run(cfg)
+    cfg = pic_driver.PICConfig(n_particles=512, steps=2,
+                               on_overflow="spill")
+    with pytest.raises(ValueError, match="sharded_replay"):
+        pic_driver.run(cfg)
+
+
+# ------------------------------------------------- checkpointed replay --
+
+
+def test_checkpointed_is_bit_exact_without_failures():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    base = simulator.run_series_sharded(prob, evolve, **_series_kw())
+    ck = rz.run_series_checkpointed(prob, evolve, checkpoint_every=5,
+                                    **_series_kw())
+    _assert_series_equal(base, ck)
+
+
+def test_checkpointed_restarts_bit_exact():
+    prob, evolve = scenarios.get("bimodal-churn").instantiate(
+        grid=8, num_nodes=4)
+    base = simulator.run_series_sharded(prob, evolve, **_series_kw())
+    ck = rz.run_series_checkpointed(prob, evolve, checkpoint_every=3,
+                                    fail_at=(1, 3, 3), **_series_kw())
+    _assert_series_equal(base, ck)
+
+
+def test_checkpointed_composes_with_guard_and_faults():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    never = rz.FaultSchedule(events=((10_000, 0, "die"),))
+    one = simulator.run_series_sharded(prob, evolve, faults=never,
+                                       **_series_kw())
+    ck = rz.run_series_checkpointed(prob, evolve, checkpoint_every=4,
+                                    faults=never, fail_at=(2,),
+                                    **_series_kw())
+    _assert_series_equal(one, ck)
+    np.testing.assert_array_equal(one.plan_rejected, ck.plan_rejected)
+
+
+def test_checkpointed_validates_cadence():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        rz.run_series_checkpointed(prob, evolve, checkpoint_every=0,
+                                   **_series_kw())
+
+
+def test_checkpointed_exhausts_restarts():
+    from repro.train import fault_tolerance as ft
+
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    # three distinct injected failures against a budget of two restarts
+    with pytest.raises(ft.WorkerFailure):
+        rz.run_series_checkpointed(prob, evolve, checkpoint_every=4,
+                                   fail_at=(1, 2, 3), max_restarts=2,
+                                   **_series_kw())
+
+
+# ------------------------------------------- subprocess: 8-device mesh --
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax
+import numpy as np
+
+from repro.pic import driver
+from repro.runtime import resilience as rz
+from repro.sim import scenarios, simulator
+
+assert len(jax.devices()) == 8, jax.devices()
+
+SERIES_FIELDS = ("max_avg", "ext_int", "migrations", "lb_fired",
+                 "max_load", "migrated_load", "final_assignment")
+
+prob, evolve = scenarios.get("stencil-wave").instantiate(grid=8,
+                                                         num_nodes=16)
+kw = dict(steps=24, lb_every=4, strategy="diff-comm",
+          strategy_kwargs=dict(k=3))
+base = simulator.run_series_sharded(prob, evolve, **kw)
+
+# -- 1. never-active schedule: resilient trace, bit parity on 8 shards --
+never = rz.FaultSchedule(events=((10_000, 0, "die"),))
+resil = simulator.run_series_sharded(prob, evolve, faults=never, **kw)
+for f in SERIES_FIELDS:
+    np.testing.assert_array_equal(
+        np.asarray(getattr(base, f)), np.asarray(getattr(resil, f)),
+        err_msg=f"never-active/{f}")
+assert resil.plan_rejected.sum() == 0
+print("never-active 8-way parity OK")
+
+# -- 2. dead shard: evacuation completes, owners stay alive -------------
+fs = rz.FaultSchedule(events=((9, 2, "die"),))
+dead = simulator.run_series_sharded(prob, evolve, faults=fs, **kw)
+fa = dead.final_assignment
+assert fa.shape == base.final_assignment.shape          # every object owned
+dead_nodes = [4, 5]                                     # shard 2 of 8, rpd=2
+assert not np.isin(fa, dead_nodes).any(), fa
+assert np.isfinite(dead.max_avg).all()
+assert dead.lb_fired[9] == 1.0                          # forced evacuation
+print("dead-shard evacuation OK (fires:", int(dead.lb_fired.sum()), ")")
+
+# -- 3. rollback determinism: identical runs are bit-identical ----------
+dead2 = simulator.run_series_sharded(prob, evolve, faults=fs, **kw)
+for f in SERIES_FIELDS:
+    np.testing.assert_array_equal(
+        np.asarray(getattr(dead, f)), np.asarray(getattr(dead2, f)),
+        err_msg=f"determinism/{f}")
+np.testing.assert_array_equal(dead.plan_rejected, dead2.plan_rejected)
+print("fault-replay determinism OK")
+
+# -- 4. die + recover: shard rejoins and can host objects again ---------
+fs2 = rz.FaultSchedule(events=((6, 1, "die"), (14, 1, "recover")))
+rec = simulator.run_series_sharded(prob, evolve, faults=fs2, **kw)
+mid = None  # owners at the end must be allowed back on shard 1
+assert np.isfinite(rec.max_avg).all()
+print("die/recover completes OK")
+
+# -- 5. checkpointed + faults + supervisor restart, 8-way, bit-exact ----
+ck = rz.run_series_checkpointed(prob, evolve, checkpoint_every=7,
+                                faults=fs, fail_at=(1, 2), **kw)
+for f in SERIES_FIELDS:
+    np.testing.assert_array_equal(
+        np.asarray(getattr(dead, f)), np.asarray(getattr(ck, f)),
+        err_msg=f"checkpointed/{f}")
+print("checkpointed 8-way bit-exact OK")
+
+# -- 6. PIC: dead shard completes with zero particle loss ---------------
+pic = dict(L=100, n_particles=2000, steps=18, k=1, rho=0.9, cx=10, cy=10,
+           num_pes=8, mapping="striped", lb_every=4, strategy="diff-comm",
+           strategy_kwargs=dict(k=3), seed=0, sharded_replay=True)
+ref_none = driver.run(driver.PICConfig(
+    strategy="none",
+    **{k: v for k, v in pic.items()
+       if k not in ("strategy", "strategy_kwargs")}))
+pfs = rz.FaultSchedule(events=((8, 3, "die"),))
+pr = driver.run(driver.PICConfig(faults=pfs, **pic))
+# the push physics never depended on the assignment: positions restored
+# to particle-id order must match the LB-free run exactly → every
+# particle survived the evacuation exchanges
+np.testing.assert_array_equal(pr.final_x, ref_none.final_x)
+np.testing.assert_array_equal(pr.final_y, ref_none.final_y)
+assert pr.lb_steps[8] == 1.0
+print("PIC dead-shard zero-loss OK (rejected:",
+      int(pr.plan_rejected.sum()), ")")
+
+# -- 7. PIC spill: tight capacity defers, drains, loses nothing ---------
+cap = 2000 // 8 + 60
+sp = driver.run(driver.PICConfig(replay_capacity=cap, on_overflow="spill",
+                                 **{**pic, "lb_every": 2}))
+np.testing.assert_array_equal(sp.final_x, ref_none.final_x)
+np.testing.assert_array_equal(sp.final_y, ref_none.final_y)
+assert sp.deferred.max() > 0            # the clamp did bite
+assert sp.deferred[-1] == 0             # and the backlog drained
+print("PIC spill-then-drain OK (peak deferred:",
+      int(sp.deferred.max()), ")")
+
+# -- 8. sharded spill entry: admissible exchange, structured strict error
+from repro.runtime import migrate as rt_migrate
+n = 1600
+owner = np.zeros(n, np.int32)           # everything wants shard 0's node
+owner[: n // 2] = 8                     # half to shard 4 (rpd=2 → node 8)
+arrays = [np.arange(n, dtype=np.float32)]
+try:
+    rt_migrate.migrate_sharded(owner, arrays, num_nodes=16,
+                               capacity=n // 8)
+    raise SystemExit("strict overflow must raise")
+except rt_migrate.CapacityOverflowError as e:
+    assert e.unit == "shard" and 0 in e.offending and 4 in e.offending
+o2, outs, counts, deferred = rt_migrate.migrate_sharded(
+    owner, arrays, num_nodes=16, capacity=n // 8, on_overflow="spill")
+counts = np.asarray(counts)
+assert (counts <= n // 8).all()
+assert counts.sum() + 0 == n            # conservation across shards
+assert deferred > 0
+print("sharded spill + structured strict error OK (deferred:",
+      int(deferred), ")")
+print("ALL OK")
+"""
+
+
+@pytest.mark.slow
+def test_resilience_on_8_virtual_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "ALL OK" in out.stdout
