@@ -129,6 +129,69 @@ def object_node_bytes(
     return one_direction(src, dst) + one_direction(dst, src)
 
 
+def prefix_group_edges(group, loads, active=None, *,
+                       ring_eps: float = 1e-3):
+    """Device-side prefix-sharing comm edges for a session fleet.
+
+    ``group`` is (S,) i32 — per-object group ids in ``[0, S)``, with
+    ``-1`` marking ungrouped slots; ``active`` is an optional (S,) bool
+    live mask (``None`` treats every slot as live); ``loads`` is (S,)
+    f32 and must already carry the caller's load floor (the serving data
+    plane clamps to ``1e-3``), so edge weights and node loads are priced
+    from the **same** clamped values.
+
+    Returns ``(edges_src, edges_dst, edges_bytes)`` of fixed shape
+    ``(2*S,)``:
+
+      * **star edges** — each live grouped slot connects to its group
+        *leader* (the lowest live grouped slot index in the group,
+        elected by a ``segment_min`` over group ids), weighted
+        ``min(load_member, load_leader)`` — the shared-prefix reuse
+        volume.  This collapses the legacy O(n²) pairwise-clique host
+        loop to O(S) segment ops while preserving the invariant the
+        balancer needs: every group member shares an edge with its
+        group, so splitting a group always costs external bytes;
+      * **ring edges** — live slot ``i ↔`` next live-neighbor candidate
+        ``i+1 (mod S)`` at the tiny ``ring_eps`` weight (kept only when
+        both endpoints are live) — the shape-static connectivity floor
+        replacing the legacy "no edges ⇒ build a host ring" fallback, so
+        a fleet of singleton groups still presents a connected comm
+        graph to stage 1.
+
+    Unused slots use the standard ``(-1, -1, 0.0)`` edge padding every
+    consumer already masks on.  Pure jnp — safe under ``jit`` /
+    ``lax.scan``, so the serving replay rebuilds the graph every fired
+    step on device."""
+    group = jnp.asarray(group, jnp.int32)
+    loads = jnp.asarray(loads, jnp.float32)
+    S = group.shape[0]
+    idx = jnp.arange(S, dtype=jnp.int32)
+    live = (jnp.ones((S,), bool) if active is None
+            else jnp.asarray(active, bool))
+    grouped = live & (group >= 0)
+    # leader election: lowest live grouped slot index per group id
+    # (other slots segment to the out-of-range bucket S)
+    seg = jnp.where(grouped, group, S)
+    leader_of_group = jax.ops.segment_min(
+        jnp.where(grouped, idx, S), seg, num_segments=S + 1)[:S]
+    leader = jnp.where(grouped,
+                       leader_of_group[jnp.clip(group, 0, S - 1)], -1)
+    is_member = grouped & (leader != idx)          # leaders carry no self-edge
+    star_src = jnp.where(is_member, idx, -1)
+    star_dst = jnp.where(is_member, leader, -1)
+    star_w = jnp.where(
+        is_member,
+        jnp.minimum(loads, loads[jnp.clip(leader, 0, S - 1)]),
+        0.0)
+    ring_on = live & jnp.roll(live, -1)
+    ring_src = jnp.where(ring_on, idx, -1)
+    ring_dst = jnp.where(ring_on, (idx + 1) % S, -1)
+    ring_w = jnp.where(ring_on, jnp.float32(ring_eps), 0.0)
+    return (jnp.concatenate([star_src, ring_src]),
+            jnp.concatenate([star_dst, ring_dst]),
+            jnp.concatenate([star_w, ring_w]))
+
+
 def stack_problems(problems) -> LBProblem:
     """Stack B same-shaped problems into one batched ``LBProblem``.
 

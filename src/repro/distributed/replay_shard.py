@@ -215,6 +215,15 @@ def _resolve_mesh(mesh: Optional[Mesh], num_shards: Optional[int],
     return Mesh(np.asarray(devs[:D]), (AXIS,))
 
 
+def resolve_mesh(mesh: Optional[Mesh], num_shards: Optional[int],
+                 must_divide: Tuple[int, ...]) -> Mesh:
+    """Public :func:`_resolve_mesh`: the one place a 1-D ``"lb"`` replay
+    mesh is derived from a ``mesh``/``num_shards`` spec.  The serving
+    replay (``serve/replay.py``) shares it so its sharded KV exchanges
+    ride the same mesh-selection rules as the sim/PIC replays."""
+    return _resolve_mesh(mesh, num_shards, must_divide)
+
+
 # ------------------------------------------------- sharded planning step --
 
 

@@ -4,6 +4,12 @@
 ServeEngine on the reduced config, feeds it a batch of prompts through the
 diffusion scheduler (multi-replica placement simulated at host scale), and
 reports throughput + scheduling metrics.
+
+``--fleet-replay N`` skips the model entirely and drives ``N`` synthetic
+bursty multi-turn sessions through the scan-compiled serving replay
+(``serve/replay.py`` — trigger decision and executed KV-slab exchange
+inside one ``lax.scan``), reporting the balance/KV-traffic summary the
+serving benchmark gates on.
 """
 from __future__ import annotations
 
@@ -12,11 +18,23 @@ import time
 
 import numpy as np
 
-from repro.configs import get_arch
-from repro.models import transformer
-from repro.models.params import init_params
-from repro.serve.engine import Request, ServeConfig, ServeEngine
-from repro.serve.scheduler import DiffusionScheduler, Session
+
+def fleet_replay(args) -> None:
+    from repro.serve import replay as sr
+
+    w = sr.ServeWorkload(num_sessions=args.fleet_replay,
+                         num_replicas=args.replicas)
+    t0 = time.time()
+    r = sr.run_serve_replay(w, steps=args.ticks, lb_every=10,
+                            strategy=args.strategy)
+    dt = time.time() - t0
+    print(f"replayed {w.num_sessions} sessions x {args.ticks} ticks on "
+          f"{w.num_replicas} replicas in {dt:.2f}s "
+          f"({'scanned' if r.scanned else 'host'} path)")
+    print(f"  rebalances {int(r.lb_fired.sum())}, moved KV "
+          f"{r.total_moved_kv:.0f} bytes, p95 max/avg "
+          f"{np.percentile(r.max_avg, 95):.3f}, prefix-local "
+          f"{r.prefix_local.mean():.3f}")
 
 
 def main():
@@ -26,7 +44,22 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--fleet-replay", type=int, default=0,
+                    help="replay N synthetic sessions through "
+                         "serve.replay instead of serving a model")
+    ap.add_argument("--ticks", type=int, default=60)
+    ap.add_argument("--strategy", default="diff-comm+predictive")
     args = ap.parse_args()
+
+    if args.fleet_replay > 0:
+        fleet_replay(args)
+        return
+
+    from repro.configs import get_arch
+    from repro.models import transformer
+    from repro.models.params import init_params
+    from repro.serve.engine import Request, ServeConfig, ServeEngine
+    from repro.serve.scheduler import DiffusionScheduler, Session
 
     spec = get_arch(args.arch)
     cfg = spec.reduced
@@ -54,7 +87,8 @@ def main():
     print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s)")
     print(f"scheduler: max/avg load {info.get('max_avg_load', 1):.3f}, "
-          f"ext/int {info.get('ext_int_comm', 0):.3f}")
+          f"ext/int {info.get('ext_int_comm', 0):.3f}, moved KV "
+          f"{info.get('moved_kv_bytes', 0):.0f} bytes")
     for r in done[:4]:
         print(f"  req {r.uid}: {len(r.out)} tokens {r.out[:8]}...")
 

@@ -111,8 +111,21 @@ class Manifest(NamedTuple):
         return self.moved.sum().astype(jnp.int32)
 
     def moved_bytes(self, bytes_per_item) -> jax.Array:
-        """f32 scalar — executed exchange volume."""
+        """f32 scalar — executed exchange volume (uniform item size)."""
         return self.moved_count.astype(jnp.float32) * bytes_per_item
+
+    def moved_sum(self, weights, where=None) -> jax.Array:
+        """f32 scalar — executed exchange volume with **per-item** sizes.
+
+        ``weights`` is (n,) f32 — e.g. each session's resident KV-cache
+        bytes in the serving data plane, where items are far from
+        uniform; ``where`` optionally restricts the sum to a live-item
+        mask (free fleet slots move for free).  The uniform-size
+        :meth:`moved_bytes` is the special case ``weights = const``."""
+        w = jnp.where(self.moved, jnp.asarray(weights, jnp.float32), 0.0)
+        if where is not None:
+            w = jnp.where(jnp.asarray(where, bool), w, 0.0)
+        return w.sum()
 
 
 def resolve_method(method: str, *, n: int, num_nodes: int) -> str:

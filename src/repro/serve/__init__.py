@@ -1,2 +1,5 @@
-"""Serving layer: batched prefill/decode engine + diffusion request
-scheduler across replicas."""
+"""Serving layer: batched prefill/decode engine (serve/engine.py), the
+device-resident session scheduler with executed KV migration
+(serve/scheduler.py), and the scan-compiled continuous-batching replay
+(serve/replay.py).  Submodules are imported directly — the engine pulls
+the model stack, which the scheduler/replay paths do not need."""

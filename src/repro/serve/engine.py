@@ -103,7 +103,7 @@ class ServeEngine:
 
     def _admit(self) -> None:
         for s in range(self.scfg.num_slots):
-            if self.slot_req[s] is None and self.queue:
+            while self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
                 plen = int(len(req.prompt))
                 logits, self.cache = self._prefill_slot(
@@ -111,6 +111,13 @@ class ServeEngine:
                     jnp.asarray(req.prompt, jnp.int32), s, plen=plen)
                 tok = int(jnp.argmax(logits[0]))
                 req.out.append(tok)
+                # the prefill-produced first token can itself be terminal
+                # (EOS, or max_new_tokens == 1): finish at admission and
+                # keep the slot free for the next queued request instead
+                # of burning a decode tick on a completed request
+                if tok == req.eos_id or len(req.out) >= req.max_new_tokens:
+                    self.done.append(req)
+                    continue
                 self.slot_req[s] = req
                 self.slot_pos[s] = plen
                 self.slot_tok[s] = tok

@@ -1,0 +1,527 @@
+"""Scan-compiled continuous-batching serving replay with executed KV moves.
+
+``run_serve_replay`` drives a fleet of ``S`` persistent multi-turn
+sessions over ``R`` serving replicas for ``T`` engine ticks, with the
+whole loop — workload evolution → trigger decision → device plan →
+**executed** KV-slab exchange — compiled into one ``jax.lax.scan``.  It
+mirrors ``sim.simulator.run_series``' host/scan parity contract: the host
+path executes the same jnp expression graphs eagerly (trigger statistics
+through ``runtime.triggers.load_stats``, planning through the same bound
+Strategy closure, the exchange through the same
+``runtime.migrate.build_and_apply``), so fire steps, placements and moved
+KV bytes agree **bit-for-bit** across paths.
+
+The carry is the session fleet as fixed-shape slabs — ``uid`` (which
+session occupies each slot), ``replica`` (its owner) and ``kv`` (its
+resident KV-cache bytes, growing with decode activity) — plus the trigger
+state.  A fired rebalance re-buckets the slabs into replica-contiguous
+order via the counting-scatter manifest (PR 6) and reads the executed
+exchange volume off ``Manifest.moved_sum`` with *per-session* KV sizes;
+that volume (in the trigger cost model's load units) feeds
+``Trigger.observe``, so the predictive gate amortizes future fires against
+what migration actually moved.  ``slot_capacity`` bounds live sessions per
+replica through ``migrate.spill_owner`` — overflow moves defer in place
+and retry at the next fire (graceful degradation, payload never dropped).
+
+``num_shards > 1`` (or an explicit ``mesh``) runs the multi-replica-group
+path: the same loop with the fired exchange executed as a ``ppermute``
+ring all-to-all under ``shard_map`` (``migrate.migrate_sharded`` →
+``migrate.ring_exchange``).  Strict mode's layout contract makes the
+concatenated per-shard valid prefixes bit-for-bit the single-device
+bucketed slabs, so the sharded replay reproduces the single-device
+trajectory exactly.
+
+Workloads:
+
+  * :class:`ServeWorkload` — synthetic bursty multi-turn traffic: every
+    session alternates decode turns and idle gaps (per-session random
+    phase/rate), prefix-sharing groups of ``group_size`` sessions, and
+    burst *waves* that periodically surge one cohort's load (the
+    imbalance the balancer must chase).  Scales to 10⁵⁺ sessions — all
+    tables are O(S) device arrays.
+  * :class:`TraceWorkload` — trace-driven replay of a recorded ``(T, S)``
+    load table (request logs, or a trace captured from any workload via
+    :func:`record_trace`).
+
+The ``serving-trace`` scenario in ``sim/scenarios.py`` adapts a recorded
+trace to the simulator's scenario registry, so every existing bench and
+parity suite (run_series, run_series_batch, run_series_sharded) consumes
+the serving workload too.  The fleet-scale policy comparison is
+``benchmarks/serve_bench.py`` (serve-bench/v1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_graph, engine
+from repro.runtime import migrate as rt_migrate
+from repro.runtime import triggers as rt_triggers
+from repro.serve.scheduler import LOAD_FLOOR
+
+# ------------------------------------------------------------- workloads --
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeWorkload:
+    """Synthetic bursty multi-turn session traffic (pure function of t).
+
+    Session ``u``'s load at tick ``t`` is ``idle_load`` outside its
+    decode turns and ``rate[u] * surge`` inside them, where turns open
+    for ``turn_len`` of every ``turn_period`` ticks at a per-session
+    random phase, and ``surge`` multiplies by ``1 + burst_amp`` whenever
+    the session's burst *wave* is the active one (waves rotate every
+    ``burst_period`` ticks — a moving cohort hotspot).  Prefix groups are
+    ``uid // group_size``.  Hashable (frozen floats/ints only), so
+    compiled replay runners cache across calls."""
+
+    num_sessions: int = 4096
+    num_replicas: int = 16
+    group_size: int = 4
+    turn_period: int = 12
+    turn_len: int = 6
+    burst_waves: int = 4
+    burst_period: int = 25
+    burst_amp: float = 3.0
+    idle_load: float = 0.05
+    rate_lo: float = 0.5
+    rate_hi: float = 2.0
+    kv0: float = 64.0
+    kv_per_token: float = 1.0
+    seed: int = 0
+
+    def _tables(self):
+        return _serve_tables(self)
+
+    def loads_at(self, t, uid) -> jax.Array:
+        """(S,) f32 decode load of the sessions in ``uid`` at tick t."""
+        rate, phase, wave, _ = map(jnp.asarray, self._tables())
+        t = jnp.asarray(t, jnp.int32)
+        uid = jnp.asarray(uid, jnp.int32)
+        in_turn = ((t + phase[uid]) % self.turn_period) < self.turn_len
+        hot = wave[uid] == (t // self.burst_period) % self.burst_waves
+        surge = 1.0 + self.burst_amp * hot.astype(jnp.float32)
+        return jnp.where(
+            in_turn, rate[uid] * surge,
+            jnp.float32(self.idle_load)).astype(jnp.float32)
+
+    def group_of(self, uid) -> jax.Array:
+        return (jnp.asarray(uid, jnp.int32)
+                // jnp.int32(max(1, self.group_size)))
+
+    def kv0_of(self, uid) -> jax.Array:
+        kv0 = jnp.asarray(self._tables()[3])
+        return kv0[jnp.asarray(uid, jnp.int32)]
+
+
+@functools.lru_cache(maxsize=64)
+def _serve_tables(w: ServeWorkload):
+    """Per-session random tables (rate, phase, wave, kv0).
+
+    Cached as **numpy** and converted at the use site: a first call from
+    inside a jit/vmap trace would otherwise cache traced constants that
+    leak into later calls."""
+    rng = np.random.default_rng(w.seed)
+    S = w.num_sessions
+    rate = rng.uniform(w.rate_lo, w.rate_hi, S).astype(np.float32)
+    phase = rng.integers(0, max(1, w.turn_period), S).astype(np.int32)
+    wave = rng.integers(0, max(1, w.burst_waves), S).astype(np.int32)
+    kv0 = (w.kv0 * rng.uniform(0.5, 1.5, S)).astype(np.float32)
+    return rate, phase, wave, kv0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jnp fields
+class TraceWorkload:
+    """Trace-driven workload: a recorded ``(T, S)`` load table.
+
+    ``group`` ids must be canonical (``[0, S)``, -1 for ungrouped) and the
+    table loops when replayed past its length.  Instances hash by
+    identity, so reusing one instance reuses the compiled runner."""
+
+    table: jax.Array              # (T, S) f32 per-tick session loads
+    group: jax.Array              # (S,) i32 prefix groups
+    kv0: jax.Array                # (S,) f32 initial KV bytes
+    num_replicas: int = 16
+    kv_per_token: float = 1.0
+
+    @property
+    def num_sessions(self) -> int:
+        return int(self.table.shape[1])
+
+    def loads_at(self, t, uid) -> jax.Array:
+        row = self.table[jnp.mod(jnp.asarray(t, jnp.int32),
+                                 self.table.shape[0])]
+        return row[jnp.asarray(uid, jnp.int32)]
+
+    def group_of(self, uid) -> jax.Array:
+        return self.group[jnp.asarray(uid, jnp.int32)]
+
+    def kv0_of(self, uid) -> jax.Array:
+        return self.kv0[jnp.asarray(uid, jnp.int32)]
+
+
+def record_trace(workload, *, steps: int) -> TraceWorkload:
+    """Capture ``steps`` ticks of any workload into a
+    :class:`TraceWorkload` (the trace-driven scenario's source)."""
+    S = workload.num_sessions
+    uid = jnp.arange(S, dtype=jnp.int32)
+    rows = jax.jit(lambda ts: jax.vmap(
+        lambda t: workload.loads_at(t, uid))(ts))(
+            jnp.arange(steps, dtype=jnp.int32))
+    return TraceWorkload(
+        table=jnp.asarray(rows, jnp.float32),
+        group=jnp.asarray(workload.group_of(uid), jnp.int32),
+        kv0=jnp.asarray(workload.kv0_of(uid), jnp.float32),
+        num_replicas=workload.num_replicas,
+        kv_per_token=float(workload.kv_per_token))
+
+
+# --------------------------------------------------------------- results --
+
+
+@dataclasses.dataclass
+class ServeReplayResult:
+    """Per-tick records + final fleet state of one serving replay."""
+
+    max_avg: np.ndarray           # (T,) post-LB replica load imbalance
+    lb_fired: np.ndarray          # (T,) 0/1 trigger decisions
+    moved_sessions: np.ndarray    # (T,) sessions exchanged at that tick
+    moved_kv_bytes: np.ndarray    # (T,) executed KV transfer volume
+    prefix_local: np.ndarray      # (T,) intra-replica prefix-edge fraction
+    deferred: np.ndarray          # (T,) capacity-deferred moves (spill)
+    occ_max: np.ndarray           # (T,) max live sessions on one replica
+    final_uid: np.ndarray         # (S,) slot → session id
+    final_replica: np.ndarray     # (S,) slot → replica
+    final_kv: np.ndarray          # (S,) slot → resident KV bytes
+    scanned: bool = False
+    sharded: bool = False
+    wall_seconds: float = 0.0
+
+    @property
+    def final_replica_by_uid(self) -> np.ndarray:
+        """(S,) replica of each session id — slot-permutation invariant
+        (the exchange re-buckets slots; identity lives in ``uid``)."""
+        out = np.full(self.final_uid.shape, -1, np.int32)
+        out[self.final_uid] = self.final_replica
+        return out
+
+    @property
+    def total_moved_kv(self) -> float:
+        return float(self.moved_kv_bytes.sum())
+
+
+# ------------------------------------------------------------- step body --
+
+
+def _locality(group, loads_c, replica) -> jax.Array:
+    """Intra-replica fraction of prefix-sharing (star) edge weight."""
+    S = int(group.shape[0])
+    es, ed, ew = comm_graph.prefix_group_edges(
+        group, loads_c, None, ring_eps=LOAD_FLOOR)
+    es, ed, ew = es[:S], ed[:S], ew[:S]
+    valid = es >= 0
+    w = jnp.where(valid, ew, 0.0)
+    intra = jnp.where(
+        valid & (replica[jnp.clip(es, 0, S - 1)]
+                 == replica[jnp.clip(ed, 0, S - 1)]), ew, 0.0)
+    return intra.sum() / jnp.maximum(w.sum(), jnp.float32(1e-30))
+
+
+def _make_parts(workload, trig, plan, slot_capacity, R: int, S: int,
+                lb_on: bool, bytes_per_load: float):
+    """The shared jnp step pieces — one source of truth for every path.
+
+    ``pre``  advances the workload and decides; ``fire``/``nofire`` are
+    the two exchange branches (identical signatures, so the scanned path
+    puts them under ``lax.cond`` and the host path picks one after a
+    device sync — same compiled graphs either way); ``post`` computes the
+    post-exchange records."""
+
+    def pre(uid, kv, replica, tstate, t):
+        ld = workload.loads_at(t, uid)
+        kv = kv + jnp.float32(workload.kv_per_token) * ld
+        ldc = jnp.maximum(ld, jnp.float32(LOAD_FLOOR))
+        if lb_on:
+            mx, av, tot = rt_triggers.load_stats(ldc, replica, R)
+            do, tstate = trig.decide(tstate, t, mx, av, tot)
+        else:
+            do = jnp.asarray(False)
+        return kv, do, tstate
+
+    def _problem(uid, ldc, replica):
+        es, ed, ew = comm_graph.prefix_group_edges(
+            workload.group_of(uid), ldc, None, ring_eps=LOAD_FLOOR)
+        return comm_graph.LBProblem(
+            loads=ldc, assignment=replica, edges_src=es, edges_dst=ed,
+            edges_bytes=ew, num_nodes=R)
+
+    def plan_owner(uid, kv, replica, t):
+        """Effective post-spill target owners for a fired tick."""
+        ldc = jnp.maximum(workload.loads_at(t, uid),
+                          jnp.float32(LOAD_FLOOR))
+        owner_new, _ = plan(_problem(uid, ldc, replica))
+        owner_new = owner_new.astype(jnp.int32)
+        if slot_capacity is not None:
+            owner_new, dmask = rt_migrate.spill_owner(
+                replica, owner_new, num_nodes=R,
+                capacity=int(slot_capacity))
+            deferred = dmask.sum().astype(jnp.float32)
+        else:
+            deferred = jnp.float32(0.0)
+        return owner_new, deferred
+
+    def fire(uid, kv, replica, t):
+        owner_new, deferred = plan_owner(uid, kv, replica, t)
+        (uid2, kv2), man = rt_migrate.build_and_apply(
+            replica, owner_new, (uid, kv), num_nodes=R)
+        replica2 = jnp.take(owner_new, man.order)
+        moved_n = man.moved_count.astype(jnp.float32)
+        moved_kv = man.moved_sum(kv)
+        return uid2, kv2, replica2, moved_n, moved_kv, deferred
+
+    def nofire(uid, kv, replica, t):
+        return (uid, kv, replica, jnp.float32(0.0), jnp.float32(0.0),
+                jnp.float32(0.0))
+
+    def post(uid, kv, replica, tstate, do, moved_kv, t):
+        tstate = trig.observe(
+            tstate, moved_kv / jnp.float32(bytes_per_load), do)
+        ldc = jnp.maximum(workload.loads_at(t, uid),
+                          jnp.float32(LOAD_FLOOR))
+        mx, av, _ = rt_triggers.load_stats(ldc, replica, R)
+        occ = jax.ops.segment_sum(
+            jnp.ones((S,), jnp.int32), replica, num_segments=R)
+        ploc = _locality(workload.group_of(uid), ldc, replica)
+        return tstate, (mx / av, ploc, occ.max().astype(jnp.float32))
+
+    return pre, plan_owner, fire, nofire, post
+
+
+def _initial_state(workload):
+    S = workload.num_sessions
+    R = workload.num_replicas
+    uid = jnp.arange(S, dtype=jnp.int32)
+    replica = ((uid * R) // S).astype(jnp.int32)   # contiguous blocks
+    kv = jnp.asarray(workload.kv0_of(uid), jnp.float32)
+    return uid, kv, replica
+
+
+def _resolve(workload, strategy, strategy_kwargs, trigger, lb_every):
+    strat = engine.get_strategy(strategy)
+    kw = dict(strategy_kwargs or {})
+    if strat.variant is not None:
+        kw.setdefault(
+            "k", max(1, min(4, int(workload.num_replicas) - 1)))
+    trig = rt_triggers.resolve_for_strategy(
+        trigger, lb_every=lb_every, strategy=strategy)
+    cost = getattr(trig, "cost", None)
+    bpl = float(cost.bytes_per_load) if cost is not None else 1.0
+    lb_on = strategy != "none" and not trig.never
+    return strat, kw, trig, bpl, lb_on
+
+
+# ---------------------------------------------------------- scanned path --
+
+
+@functools.lru_cache(maxsize=64)
+def _scanned_serve_runner(workload, steps: int, strategy: str,
+                          kw_items: tuple, trig, lb_every: int,
+                          slot_capacity: Optional[int]):
+    strat = engine.get_strategy(strategy)
+    plan = strat.bind(**dict(kw_items))
+    S, R = workload.num_sessions, workload.num_replicas
+    cost = getattr(trig, "cost", None)
+    bpl = float(cost.bytes_per_load) if cost is not None else 1.0
+    lb_on = strategy != "none" and not trig.never
+    pre, _, fire, nofire, post = _make_parts(
+        workload, trig, plan, slot_capacity, R, S, lb_on, bpl)
+
+    def step(carry, t):
+        uid, kv, replica, tstate = carry
+        kv, do, tstate = pre(uid, kv, replica, tstate, t)
+        uid, kv, replica, moved_n, moved_kv, deferred = jax.lax.cond(
+            do, fire, nofire, uid, kv, replica, t)
+        tstate, (ma, ploc, occ) = post(
+            uid, kv, replica, tstate, do, moved_kv, t)
+        return (uid, kv, replica, tstate), (
+            ma, do.astype(jnp.float32), moved_n, moved_kv, ploc,
+            deferred, occ)
+
+    def run(uid, kv, replica):
+        return jax.lax.scan(step, (uid, kv, replica, trig.init_state()),
+                            jnp.arange(steps))
+
+    return jax.jit(run)
+
+
+# ------------------------------------------------------------ host paths --
+
+
+def _host_serve_loop(workload, steps, strategy, kw, trig, lb_every,
+                     slot_capacity, *, mesh=None):
+    """Eager replay: the scanned step pieces executed one tick at a time.
+
+    ``mesh`` switches the fired exchange to the multi-replica-group path:
+    ``migrate.migrate_sharded`` (ring all-to-all under shard_map) in
+    strict mode, whose layout contract reconstructs the single-device
+    bucketed slabs bit-for-bit from the per-shard valid prefixes."""
+    strat = engine.get_strategy(strategy)
+    plan = strat.bind(**kw) if strat.jittable else None
+    S, R = workload.num_sessions, workload.num_replicas
+    cost = getattr(trig, "cost", None)
+    bpl = float(cost.bytes_per_load) if cost is not None else 1.0
+    lb_on = strategy != "none" and not trig.never
+    pre, plan_owner, fire, nofire, post = _make_parts(
+        workload, trig, plan, slot_capacity, R, S, lb_on, bpl)
+    pre_j = jax.jit(pre)
+    fire_j, nofire_j = jax.jit(fire), jax.jit(nofire)
+    post_j = jax.jit(post)
+    plan_owner_j = jax.jit(plan_owner) if strat.jittable else None
+
+    def host_plan_owner(uid, kv, replica, t):
+        """Host-baseline planning (greedy & co): eager Strategy.run on
+        the same device-built problem, then the same spill clamp."""
+        ldc = jnp.maximum(workload.loads_at(t, uid),
+                          jnp.float32(LOAD_FLOOR))
+        es, ed, ew = comm_graph.prefix_group_edges(
+            workload.group_of(uid), ldc, None, ring_eps=LOAD_FLOOR)
+        prob = comm_graph.LBProblem(
+            loads=ldc, assignment=replica, edges_src=es, edges_dst=ed,
+            edges_bytes=ew, num_nodes=R)
+        owner_new = jnp.asarray(strat.run(prob, **kw).assignment,
+                                jnp.int32)
+        if slot_capacity is not None:
+            owner_new, dmask = rt_migrate.spill_owner(
+                replica, owner_new, num_nodes=R,
+                capacity=int(slot_capacity))
+            return owner_new, dmask.sum().astype(jnp.float32)
+        return owner_new, jnp.float32(0.0)
+
+    uid, kv, replica = _initial_state(workload)
+    tstate = trig.init_state()
+    recs = []
+    for ti in range(steps):
+        t = jnp.int32(ti)
+        kv, do, tstate = pre_j(uid, kv, replica, tstate, t)
+        fired = bool(do)
+        if not fired:
+            uid, kv, replica, moved_n, moved_kv, deferred = nofire_j(
+                uid, kv, replica, t)
+        elif mesh is not None or plan_owner_j is None:
+            getter = plan_owner_j or host_plan_owner
+            owner_new, deferred = getter(uid, kv, replica, t)
+            moved = jnp.asarray(owner_new) != replica
+            moved_n = moved.sum().astype(jnp.float32)
+            moved_kv = jnp.where(moved, kv, 0.0).sum()
+            if mesh is None:
+                (uid, kv), man = rt_migrate.migrate(
+                    replica, owner_new, (uid, kv), num_nodes=R)
+                replica = jnp.take(owner_new, man.order)
+            else:
+                owner_out, (uid_p, kv_p), counts = rt_migrate.migrate_sharded(
+                    owner_new, (uid, kv), num_nodes=R, mesh=mesh)
+                # strict-mode layout contract: concatenated valid
+                # prefixes == the single-device bucketed slabs
+                D = int(np.prod(mesh.devices.shape))
+                cap = int(np.asarray(owner_out).shape[0]) // D
+                cnt = np.asarray(counts)
+                keep = np.concatenate([
+                    np.arange(d * cap, d * cap + cnt[d]) for d in range(D)])
+                uid = jnp.asarray(np.asarray(uid_p)[keep], jnp.int32)
+                kv = jnp.asarray(np.asarray(kv_p)[keep], jnp.float32)
+                replica = jnp.asarray(np.asarray(owner_out)[keep],
+                                      jnp.int32)
+        else:
+            uid, kv, replica, moved_n, moved_kv, deferred = fire_j(
+                uid, kv, replica, t)
+        tstate, (ma, ploc, occ) = post_j(
+            uid, kv, replica, tstate, do, moved_kv, t)
+        recs.append((float(ma), 1.0 if fired else 0.0, float(moved_n),
+                     float(moved_kv), float(ploc), float(deferred),
+                     float(occ)))
+    return uid, kv, replica, recs
+
+
+# ------------------------------------------------------------- the entry --
+
+
+def run_serve_replay(
+    workload,
+    *,
+    steps: int,
+    strategy: str = "diff-comm",
+    strategy_kwargs: Optional[Dict] = None,
+    trigger=None,
+    lb_every: int = 10,
+    slot_capacity: Optional[int] = None,
+    scan: Optional[bool] = None,
+    num_shards: Optional[int] = None,
+    mesh=None,
+) -> ServeReplayResult:
+    """Replay ``steps`` serving ticks with executed KV-cache migration.
+
+    ``scan=None`` auto-selects the scanned path for jittable strategies
+    (host baselines like ``"greedy"`` run the eager loop with the same
+    executed exchange).  ``trigger`` resolves through
+    ``runtime.triggers.resolve_for_strategy`` — the predictive policy
+    amortizes fires against the **measured** KV bytes of the previous
+    exchange.  ``num_shards`` / ``mesh`` run the fired exchanges as ring
+    all-to-alls under ``shard_map`` (bit-for-bit the single-device
+    trajectory via the strict layout contract); ``S`` and ``R`` must
+    divide the shard count."""
+    strat, kw, trig, _bpl, _lb_on = _resolve(
+        workload, strategy, strategy_kwargs, trigger, lb_every)
+    sharded = mesh is not None or num_shards is not None
+    if sharded:
+        if scan:
+            raise ValueError(
+                "the sharded serving replay is a host-driven loop; "
+                "pass scan=False/None")
+        from repro.distributed import replay_shard
+
+        mesh = replay_shard.resolve_mesh(
+            mesh, num_shards,
+            (workload.num_sessions, workload.num_replicas))
+        scan = False
+    if scan is None:
+        scan = strat.jittable
+    if scan and not strat.jittable:
+        raise ValueError(
+            f"strategy {strategy!r} is not jittable; the scanned serving "
+            "replay needs a traceable plan_fn (use scan=False or a "
+            "diff-* / none strategy)")
+    t0 = time.perf_counter()
+    if scan:
+        runner = _scanned_serve_runner(
+            workload, int(steps), strategy, tuple(sorted(kw.items())),
+            trig, int(lb_every),
+            None if slot_capacity is None else int(slot_capacity))
+        (uid, kv, replica, _), ys = runner(*_initial_state(workload))
+        ma, fired, moved_n, moved_kv, ploc, deferred, occ = jax.device_get(ys)
+        recs = np.stack([ma, fired, moved_n, moved_kv, ploc, deferred,
+                         occ], axis=1)
+    else:
+        uid, kv, replica, rec_list = _host_serve_loop(
+            workload, int(steps), strategy, kw, trig, int(lb_every),
+            None if slot_capacity is None else int(slot_capacity),
+            mesh=mesh)
+        recs = np.asarray(rec_list, np.float64).reshape(int(steps), 7)
+    return ServeReplayResult(
+        max_avg=np.asarray(recs[:, 0], np.float64),
+        lb_fired=np.asarray(recs[:, 1], np.float64),
+        moved_sessions=np.asarray(recs[:, 2], np.float64),
+        moved_kv_bytes=np.asarray(recs[:, 3], np.float64),
+        prefix_local=np.asarray(recs[:, 4], np.float64),
+        deferred=np.asarray(recs[:, 5], np.float64),
+        occ_max=np.asarray(recs[:, 6], np.float64),
+        final_uid=np.asarray(uid, np.int32),
+        final_replica=np.asarray(replica, np.int32),
+        final_kv=np.asarray(kv, np.float32),
+        scanned=bool(scan), sharded=bool(sharded),
+        wall_seconds=time.perf_counter() - t0)

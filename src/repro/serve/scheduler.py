@@ -1,5 +1,4 @@
-"""Cross-replica request scheduling with the paper's balancer
-(DESIGN.md §3.3).
+"""Cross-replica session scheduling on the device-resident runtime.
 
 Serving replicas are nodes; *sessions* (multi-turn decode requests) are the
 persistently interacting objects: a session's KV cache lives on its replica
@@ -8,21 +7,47 @@ prompt prefix form comm edges (prefix-cache hits are only possible when the
 sharers are colocated), and session loads (active decode tokens/s) persist
 over many scheduling periods.
 
-``DiffusionScheduler.rebalance`` runs the three-stage balancer over the
-current (session → replica) map; the greedy baseline re-places sessions by
-load only, breaking prefix-sharing groups — the serving analogue of the
-paper's GreedyRefine-vs-Diffusion comparison (measured in
-benchmarks/serve_sched.py).
+The data plane is a :class:`SessionFleet` — fixed-shape ``(S,)`` device
+arrays of load EMA, prefix-group id, replica owner and resident KV bytes —
+and the prefix-sharing comm graph is built on device by
+``core.comm_graph.prefix_group_edges`` (a segment-min leader election plus
+per-member star edges: O(S) segment ops instead of the legacy O(n²) host
+pair loop).  Planning goes through the Strategy registry
+(``core.engine.get_strategy``), so the scheduler prices every registered
+policy — diffusion variants, trigger-wrapped variants and the host
+baselines — identically to the simulator and PIC replay layers.
+
+A rebalance is **executed**, not modeled: the placement delta becomes a
+real exchange through ``runtime.migrate`` — the fleet slabs are re-bucketed
+into replica-contiguous slot order by the counting-scatter manifest, moved
+KV bytes are read off ``Manifest.moved_sum`` (per-session sizes), and an
+optional per-replica slot budget degrades gracefully through
+``migrate.spill_owner`` (overflow sessions stay put and retry at the next
+fire).  ``maybe_rebalance`` adds the control plane: a
+``runtime.triggers`` policy (predictive by default) decides *when* a
+rebalance amortizes the KV bytes the previous one actually moved.
+
+The scan-compiled continuous-batching twin of this facade is
+``serve/replay.py`` (``run_serve_replay``), and the fleet-scale policy
+comparison lives in ``benchmarks/serve_bench.py`` (serve-bench/v1).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, NamedTuple, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api as core_api
-from repro.core import comm_graph, metrics
+from repro.core import comm_graph, engine, metrics
+from repro.runtime import migrate as rt_migrate
+from repro.runtime import triggers as rt_triggers
+from repro.runtime.cost import RuntimeCostModel
+
+#: shared load floor: node loads *and* edge weights are priced from the
+#: same clamped values (the legacy path clamped only the node loads)
+LOAD_FLOOR = 1e-3
 
 
 @dataclasses.dataclass
@@ -31,101 +56,310 @@ class Session:
     replica: int
     tokens_per_s: float             # decode load (EMA)
     prefix_group: int = -1          # sessions sharing a prompt prefix
-    kv_bytes: float = 1.0           # migration cost proxy
+    kv_bytes: float = 1.0           # resident KV cache size (exchange cost)
+
+
+class SessionFleet(NamedTuple):
+    """Device-resident session store: one fixed-shape slab per field.
+
+    ``uid < 0`` marks a free slot.  ``group`` ids are canonical slot-range
+    ids in ``[0, S)`` with ``-1`` for ungrouped — what
+    ``comm_graph.prefix_group_edges`` needs for its segment ops."""
+
+    uid: jax.Array        # (S,) i32 — session id, -1 = free slot
+    load: jax.Array       # (S,) f32 — decode tokens/s EMA
+    group: jax.Array      # (S,) i32 — canonical prefix-group id, -1 = none
+    replica: jax.Array    # (S,) i32 — owning replica
+    kv: jax.Array         # (S,) f32 — resident KV bytes
+
+    @property
+    def active(self) -> jax.Array:
+        return self.uid >= 0
+
+
+def fleet_loads(fleet: SessionFleet) -> jax.Array:
+    """(S,) f32 clamped planning loads: live sessions floored at
+    ``LOAD_FLOOR``; free slots carry exactly the floor (they must exist in
+    the fixed-shape problem but should not attract the balancer)."""
+    return jnp.where(fleet.active,
+                     jnp.maximum(jnp.asarray(fleet.load, jnp.float32),
+                                 jnp.float32(LOAD_FLOOR)),
+                     jnp.float32(LOAD_FLOOR))
+
+
+def fleet_problem(fleet: SessionFleet, num_replicas: int,
+                  *, coords=None) -> comm_graph.LBProblem:
+    """Device-side ``LBProblem`` over the fleet: N = S slots, P = replicas.
+
+    Edge weights and node loads both come from :func:`fleet_loads` — the
+    consistent-clamping contract — and the prefix-sharing graph is the
+    star + connectivity-ring construction of
+    ``comm_graph.prefix_group_edges``.  Pure jnp, so the serving replay
+    rebuilds it every step inside its scan."""
+    loads = fleet_loads(fleet)
+    es, ed, ew = comm_graph.prefix_group_edges(
+        fleet.group, loads, fleet.active, ring_eps=LOAD_FLOOR)
+    return comm_graph.LBProblem(
+        loads=loads,
+        assignment=jnp.asarray(fleet.replica, jnp.int32),
+        edges_src=es, edges_dst=ed, edges_bytes=ew,
+        num_nodes=int(num_replicas), coords=coords)
+
+
+def prefix_locality(fleet: SessionFleet, assignment=None) -> jax.Array:
+    """f32 scalar in [0, 1]: fraction of prefix-sharing edge weight kept
+    intra-replica — the prefix-cache-hit opportunity the placement
+    preserves (1.0 when every group is colocated).  Uses only the star
+    half of the edge construction (the connectivity ring is load-floor
+    noise, not sharing)."""
+    a = jnp.asarray(fleet.replica if assignment is None else assignment,
+                    jnp.int32)
+    S = int(a.shape[0])
+    es, ed, ew = comm_graph.prefix_group_edges(
+        fleet.group, fleet_loads(fleet), fleet.active, ring_eps=LOAD_FLOOR)
+    es, ed, ew = es[:S], ed[:S], ew[:S]        # star edges only
+    valid = es >= 0
+    w = jnp.where(valid, ew, 0.0)
+    intra = jnp.where(
+        valid & (a[jnp.clip(es, 0, S - 1)] == a[jnp.clip(ed, 0, S - 1)]),
+        ew, 0.0)
+    return intra.sum() / jnp.maximum(w.sum(), jnp.float32(1e-30))
+
+
+def _strategy_params(strat: engine.Strategy, num_replicas: int,
+                     k: int) -> Dict:
+    """Per-strategy planning params: diffusion variants get the clamped
+    neighbor count; host baselines take no params."""
+    if strat.variant is None:
+        return {}
+    return dict(k=max(1, min(int(k), int(num_replicas) - 1)))
 
 
 class DiffusionScheduler:
-    def __init__(self, num_replicas: int, *, k: int = 4):
-        self.num_replicas = num_replicas
-        self.k = k
-        self.sessions: Dict[int, Session] = {}
+    """Session → replica placement with executed KV migration.
+
+    The legacy facade API is preserved (``add`` / ``remove`` /
+    ``place_new`` / ``replica_loads`` / ``rebalance`` and the ``sessions``
+    mapping view), but the store is a fixed-shape slot mirror of
+    :class:`SessionFleet` (host numpy, auto-growing by doubling) and every
+    plan + exchange runs on device."""
+
+    def __init__(self, num_replicas: int, *, k: int = 4,
+                 capacity: int = 64):
+        self.num_replicas = int(num_replicas)
+        self.k = int(k)
+        S = max(8, int(capacity))
+        self._uid = np.full(S, -1, np.int32)
+        self._load = np.zeros(S, np.float32)
+        self._group = np.full(S, -1, np.int64)   # raw (caller) group ids
+        self._replica = np.zeros(S, np.int32)
+        self._kv = np.zeros(S, np.float32)
+        self._slot: Dict[int, int] = {}
+        self._trig = None
+        self._tstate = None
+        self._tstep = 0
+
+    # ------------------------------------------------------------ store --
+
+    @property
+    def capacity(self) -> int:
+        return int(self._uid.shape[0])
+
+    def __len__(self) -> int:
+        return len(self._slot)
+
+    @property
+    def sessions(self) -> Dict[int, Session]:
+        """Materialized ``{uid: Session}`` view of the fleet slabs."""
+        return {
+            int(self._uid[i]): Session(
+                uid=int(self._uid[i]), replica=int(self._replica[i]),
+                tokens_per_s=float(self._load[i]),
+                prefix_group=int(self._group[i]),
+                kv_bytes=float(self._kv[i]))
+            for i in self._slot.values()
+        }
+
+    def _grow(self) -> None:
+        S = self.capacity
+        for name in ("_uid", "_load", "_group", "_replica", "_kv"):
+            a = getattr(self, name)
+            pad = np.full(S, -1 if name in ("_uid", "_group") else 0,
+                          a.dtype)
+            setattr(self, name, np.concatenate([a, pad]))
 
     def add(self, s: Session) -> None:
-        self.sessions[s.uid] = s
+        if s.uid in self._slot:
+            i = self._slot[s.uid]
+        else:
+            free = np.flatnonzero(self._uid < 0)
+            if not len(free):
+                self._grow()
+                free = np.flatnonzero(self._uid < 0)
+            i = int(free[0])
+            self._slot[s.uid] = i
+        self._uid[i] = s.uid
+        self._load[i] = s.tokens_per_s
+        self._group[i] = s.prefix_group
+        self._replica[i] = s.replica
+        self._kv[i] = s.kv_bytes
 
     def remove(self, uid: int) -> None:
-        self.sessions.pop(uid, None)
+        i = self._slot.pop(uid, None)
+        if i is not None:
+            self._uid[i] = -1
+            self._load[i] = 0.0
+            self._group[i] = -1
+            self._kv[i] = 0.0
 
     def place_new(self, s: Session) -> int:
-        """Admission: prefer the replica already holding s's prefix group
-        (prefix-cache hit), else the least-loaded replica."""
-        peers = [t for t in self.sessions.values()
-                 if t.prefix_group == s.prefix_group and s.prefix_group >= 0]
-        if peers:
-            s.replica = peers[0].replica
-        else:
-            load = self.replica_loads()
-            s.replica = int(np.argmin(load))
+        """Admission: prefer the **least-loaded** replica among those
+        already holding s's prefix group (prefix-cache hit without piling
+        onto the hottest peer), else the least-loaded replica overall."""
+        load = self.replica_loads()
+        if s.prefix_group >= 0:
+            peers = (self._uid >= 0) & (self._group == s.prefix_group)
+            if peers.any():
+                reps = np.unique(self._replica[peers])
+                s.replica = int(reps[np.argmin(load[reps])])
+                self.add(s)
+                return s.replica
+        s.replica = int(np.argmin(load))
         self.add(s)
         return s.replica
 
     def replica_loads(self) -> np.ndarray:
-        load = np.zeros(self.num_replicas)
-        for s in self.sessions.values():
-            load[s.replica] += s.tokens_per_s
-        return load
+        act = self._uid >= 0
+        return np.bincount(self._replica[act],
+                           weights=self._load[act].astype(np.float64),
+                           minlength=self.num_replicas)
 
-    def _problem(self) -> Tuple[comm_graph.LBProblem, List[int]]:
-        uids = sorted(self.sessions)
-        idx = {u: i for i, u in enumerate(uids)}
-        loads = np.array([self.sessions[u].tokens_per_s for u in uids])
-        assign = np.array([self.sessions[u].replica for u in uids], np.int32)
-        # comm edges: same prefix group ⇒ pairwise edges weighted by the
-        # smaller session's load (shared-prefix reuse volume)
-        groups: Dict[int, List[int]] = {}
-        for u in uids:
-            g = self.sessions[u].prefix_group
-            if g >= 0:
-                groups.setdefault(g, []).append(idx[u])
-        edges, w = [], []
-        for members in groups.values():
-            for a in range(len(members)):
-                for b in range(a + 1, len(members)):
-                    i, j = members[a], members[b]
-                    edges.append((i, j))
-                    w.append(min(loads[i], loads[j]) + 1e-3)
-        if not edges:
-            n = len(uids)
-            edges = [(i, (i + 1) % n) for i in range(n)]
-            w = [1e-3] * n
-        return comm_graph.make_problem(
-            loads=np.maximum(loads, 1e-3),
-            assignment=assign,
-            edges=np.array(edges, np.int32),
-            edge_bytes=np.array(w, np.float32),
-            num_nodes=self.num_replicas,
-        ), uids
+    # ------------------------------------------------------------ fleet --
 
-    def rebalance(self, *, strategy: str = "diff-comm") -> Dict:
-        if len(self.sessions) < 2:
+    def _canonical_groups(self) -> np.ndarray:
+        """Raw group ids → canonical ids in [0, S) (slot-count bounded),
+        -1 for ungrouped/free — the device edge builder's contract."""
+        out = np.full(self.capacity, -1, np.int32)
+        act = np.flatnonzero(self._uid >= 0)
+        grouped = act[self._group[act] >= 0]
+        if len(grouped):
+            _, inv = np.unique(self._group[grouped], return_inverse=True)
+            out[grouped] = inv.astype(np.int32)
+        return out
+
+    def fleet(self) -> SessionFleet:
+        """Device snapshot of the session store."""
+        return SessionFleet(
+            uid=jnp.asarray(self._uid, jnp.int32),
+            load=jnp.asarray(self._load, jnp.float32),
+            group=jnp.asarray(self._canonical_groups(), jnp.int32),
+            replica=jnp.asarray(self._replica, jnp.int32),
+            kv=jnp.asarray(self._kv, jnp.float32))
+
+    def problem(self) -> comm_graph.LBProblem:
+        return fleet_problem(self.fleet(), self.num_replicas)
+
+    # -------------------------------------------------------- rebalance --
+
+    def rebalance(self, *, strategy: str = "diff-comm",
+                  slot_capacity: Optional[int] = None) -> Dict:
+        """Plan through the Strategy registry, then **execute** the
+        placement delta as a slab exchange through ``runtime.migrate``.
+
+        The fleet store is re-bucketed into replica-contiguous slot order
+        by the counting-scatter manifest (free slots ride along at zero
+        cost) and ``moved_kv_bytes`` is the executed per-session KV
+        volume (``Manifest.moved_sum``).  ``slot_capacity`` bounds the
+        per-replica slot count: moves that would overflow are deferred in
+        place via ``migrate.spill_owner`` (``deferred_sessions`` in the
+        info dict) rather than dropped."""
+        if len(self._slot) < 2:
             return dict(skipped=True)
-        prob, uids = self._problem()
-        if strategy == "greedy":
-            new = _greedy(prob)
-            info: Dict = dict(strategy="greedy")
-        else:
-            plan = core_api.diffusion_lb(
-                prob, k=min(self.k, self.num_replicas - 1), variant="comm")
-            new, info = plan.assignment, plan.info
-        moved_kv = 0.0
-        for u, r in zip(uids, new):
-            if self.sessions[u].replica != int(r):
-                moved_kv += self.sessions[u].kv_bytes
-            self.sessions[u].replica = int(r)
-        import jax.numpy as jnp
-        info.update(metrics.evaluate(prob, jnp.asarray(np.asarray(new))))
-        info["moved_kv_bytes"] = moved_kv
+        fleet = self.fleet()
+        prob = fleet_problem(fleet, self.num_replicas)
+        strat = engine.get_strategy(strategy)
+        plan = strat.run(
+            prob, **_strategy_params(strat, self.num_replicas, self.k))
+        info = dict(plan.info)
+        owner_new = jnp.asarray(plan.assignment, jnp.int32)
+        deferred = 0
+        if slot_capacity is not None:
+            # the budget bounds *live sessions* per replica: free slots are
+            # parked on a virtual node with unbounded capacity so they
+            # neither consume the budget nor block admissions
+            # (spill_admissions broadcasts a per-group capacity vector)
+            R, park = self.num_replicas, self.num_replicas
+            act = fleet.active
+            cap = jnp.full((R + 1,), int(slot_capacity), jnp.int32)
+            cap = cap.at[park].set(self.capacity)
+            eff, dmask = rt_migrate.spill_owner(
+                jnp.where(act, fleet.replica, park),
+                jnp.where(act, owner_new, park),
+                num_nodes=R + 1, capacity=cap)
+            owner_new = jnp.where(act, eff, owner_new)
+            deferred = int(np.asarray((jnp.asarray(dmask) & act).sum()))
+        (uid, load, group, kv, raw_group), man = rt_migrate.migrate(
+            fleet.replica, owner_new,
+            (fleet.uid, fleet.load, fleet.group, fleet.kv,
+             jnp.asarray(self._group)),
+            num_nodes=self.num_replicas)
+        new_replica = jnp.take(owner_new, man.order)
+        moved_kv = float(np.asarray(
+            man.moved_sum(fleet.kv, where=fleet.active)))
+        moved_n = int(np.asarray(
+            jnp.where(man.moved & fleet.active, 1, 0).sum()))
+        # refresh the host mirror from the relocated slabs (np.array:
+        # jax buffers view as read-only, the mirror must stay mutable)
+        self._uid = np.array(uid, np.int32)
+        self._load = np.array(load, np.float32)
+        self._group = np.array(raw_group)
+        self._replica = np.array(new_replica, np.int32)
+        self._kv = np.array(kv, np.float32)
+        self._slot = {int(u): i for i, u in enumerate(self._uid) if u >= 0}
+        info.update(metrics.evaluate(prob, jnp.asarray(plan.assignment)))
+        info.update(moved_kv_bytes=moved_kv, moved_sessions=moved_n,
+                    deferred_sessions=deferred,
+                    prefix_local=float(np.asarray(
+                        prefix_locality(self.fleet()))))
         return info
 
+    # ---------------------------------------------------- control plane --
 
-def _greedy(prob: comm_graph.LBProblem) -> np.ndarray:
-    import numpy as np
-    loads = np.asarray(prob.loads)
-    order = np.argsort(-loads)
-    rl = np.zeros(prob.num_nodes)
-    out = np.zeros(len(loads), np.int32)
-    for i in order:
-        r = int(np.argmin(rl))
-        out[i] = r
-        rl[r] += loads[i]
-    return out
+    def maybe_rebalance(self, *, strategy: str = "diff-comm+predictive",
+                        trigger=None, lb_every: int = 10,
+                        slot_capacity: Optional[int] = None,
+                        cost: Optional[RuntimeCostModel] = None) -> Dict:
+        """One control-plane tick: trigger decides, ``rebalance`` executes.
+
+        The trigger (resolved through ``runtime.triggers`` — the
+        strategy's registered policy by default) sees the clamped fleet
+        load statistics; after a fire, the **executed** KV volume is fed
+        back through ``Trigger.observe`` in load units
+        (``moved_kv_bytes / cost.bytes_per_load``), so the predictive
+        gate amortizes future fires against what migration actually
+        cost — not the a-priori estimate."""
+        trig = rt_triggers.resolve_for_strategy(
+            trigger, lb_every=lb_every, strategy=strategy)
+        if cost is None:
+            cost = getattr(trig, "cost", None) or RuntimeCostModel()
+        if trig is not self._trig:
+            self._trig, self._tstate, self._tstep = trig, trig.init_state(), 0
+        t = self._tstep
+        self._tstep += 1
+        fleet = self.fleet()
+        mx, av, tot = rt_triggers.load_stats_jit(
+            fleet_loads(fleet), fleet.replica, self.num_replicas)
+        do, self._tstate = trig.decide(
+            self._tstate, jnp.int32(t), mx, av, tot)
+        if bool(do):
+            info = self.rebalance(strategy=strategy,
+                                  slot_capacity=slot_capacity)
+            moved_load = jnp.float32(
+                info.get("moved_kv_bytes", 0.0)
+                / max(cost.bytes_per_load, 1e-30))
+        else:
+            info = dict(skipped=True)
+            moved_load = jnp.float32(0.0)
+        self._tstate = trig.observe(self._tstate, moved_load, do)
+        info.update(fired=bool(do), t=t)
+        return info

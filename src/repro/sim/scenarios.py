@@ -19,7 +19,13 @@ Registered workloads:
                       which can only move load one neighbor hop per round;
   bimodal-churn     — bimodal object loads (few heavy, many light) whose
                       heavy-set membership churns over time (Boulmier et
-                      al.'s unpredictable-imbalance regime).
+                      al.'s unpredictable-imbalance regime);
+  serving-trace     — trace-driven serving replay: a recorded table of
+                      bursty multi-turn session loads (serve/replay.py's
+                      synthetic workload captured via ``record_trace``)
+                      with prefix-sharing star+ring comm edges — sessions
+                      are the persistently interacting objects, replicas
+                      the nodes.
 """
 from __future__ import annotations
 
@@ -138,6 +144,9 @@ def batch_instances(batch: int = 16, *, grid: int = 16, num_nodes: int = 16):
         "pic-geometric": lambda v: dict(
             cx=grid, cy=grid, num_pes=num_nodes, rho=0.85 + 0.03 * v,
             n_particles=20_000.0),
+        "serving-trace": lambda v: dict(
+            num_sessions=grid * grid, num_replicas=num_nodes,
+            burst_period=20 + 5 * v, seed=v),
     }
     missing = sorted(set(SCENARIOS) - set(variants))
     if missing:
@@ -306,4 +315,65 @@ register(Scenario(
     _bimodal_churn,
     defaults=dict(grid=32, num_nodes=16, mapping="tiled", heavy_frac=0.1,
                   heavy_load=20.0, churn_every=5, stride=7919, seed=0),
+))
+
+
+# --------------------------------------------------------- serving trace --
+
+
+def _serving_trace(*, num_sessions: int = 256, num_replicas: int = 16,
+                   group_size: int = 4, trace_len: int = 64,
+                   turn_period: int = 12, turn_len: int = 6,
+                   burst_waves: int = 4, burst_period: int = 25,
+                   burst_amp: float = 3.0, seed: int = 0):
+    """Recorded serving trace as a registry workload.
+
+    Captures ``trace_len`` ticks of ``serve.replay.ServeWorkload``'s
+    bursty multi-turn traffic into a ``(T, S)`` table and replays it
+    through the scenario interface: sessions are the objects (identity
+    fixed to slot index here — the simulator path never migrates
+    payload), replicas the nodes, and the prefix-sharing comm graph is
+    the device-built star+ring construction
+    (``comm_graph.prefix_group_edges``), with edge weights re-priced from
+    the clamped loads every step.  The table loops past its length, so
+    any replay horizon works."""
+    from repro.serve import replay as serve_replay  # local: serve uses core
+
+    w = serve_replay.ServeWorkload(
+        num_sessions=num_sessions, num_replicas=num_replicas,
+        group_size=group_size, turn_period=turn_period, turn_len=turn_len,
+        burst_waves=burst_waves, burst_period=burst_period,
+        burst_amp=burst_amp, seed=seed)
+    trace = serve_replay.record_trace(w, steps=trace_len)
+    table, group = trace.table, trace.group
+    S, T = num_sessions, trace_len
+    uid = jnp.arange(S, dtype=jnp.int32)
+    assignment = ((uid * num_replicas) // S).astype(jnp.int32)
+
+    def edges(loads):
+        return comm_graph.prefix_group_edges(group, loads, None)
+
+    loads0 = finite_loads(table[0])
+    es, ed, ew = edges(loads0)
+    problem = comm_graph.LBProblem(
+        loads=loads0, assignment=assignment, edges_src=es, edges_dst=ed,
+        edges_bytes=ew, num_nodes=num_replicas)
+
+    def evolve(p: comm_graph.LBProblem, t) -> comm_graph.LBProblem:
+        loads = finite_loads(
+            table[jnp.mod(jnp.asarray(t, jnp.int32), T)])
+        _, _, ew = edges(loads)
+        return dataclasses.replace(p, loads=loads, edges_bytes=ew)
+
+    return problem, evolve
+
+
+register(Scenario(
+    "serving-trace",
+    "trace-driven serving replay: recorded bursty multi-turn session "
+    "loads with prefix-sharing comm edges (serve/replay.py)",
+    _serving_trace,
+    defaults=dict(num_sessions=256, num_replicas=16, group_size=4,
+                  trace_len=64, turn_period=12, turn_len=6, burst_waves=4,
+                  burst_period=25, burst_amp=3.0, seed=0),
 ))

@@ -6,7 +6,8 @@ from repro.configs import get_arch
 from repro.models import transformer
 from repro.models.params import init_params
 from repro.serve.engine import Request, ServeConfig, ServeEngine
-from repro.serve.scheduler import DiffusionScheduler, Session
+from repro.serve.scheduler import (DiffusionScheduler, Session, fleet_loads,
+                                   fleet_problem, prefix_locality)
 
 
 @pytest.fixture(scope="module")
@@ -68,6 +69,46 @@ def test_engine_decode_matches_dedicated_decode(engine_setup):
     assert out_engine == toks
 
 
+def test_engine_eos_at_admission_frees_slot_for_next_request(engine_setup):
+    # the prefill-produced first token can already be terminal
+    # (max_new_tokens=1): the request must finish at admission and the
+    # slot must be reused for the next queued request in the same pass
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, ServeConfig(num_slots=1, max_len=64))
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=rng.integers(1, cfg.vocab_size, 4),
+                           max_new_tokens=1))
+    eng.submit(Request(uid=3, prompt=rng.integers(1, cfg.vocab_size, 4),
+                       max_new_tokens=4))
+    eng._admit()
+    # the three one-token requests completed without occupying the slot;
+    # the fourth holds it with its prefill token pending decode
+    assert {r.uid for r in eng.done} == {0, 1, 2}
+    assert all(len(r.out) == 1 for r in eng.done)
+    assert eng.slot_req[0] is not None and eng.slot_req[0].uid == 3
+    done = eng.run_until_drained()
+    assert {r.uid for r in done} == {0, 1, 2, 3}
+    assert len([r for r in done if r.uid == 3][0].out) == 4
+
+
+def test_engine_eos_token_at_prefill_terminates(engine_setup):
+    # eos_id == the argmax first token ⇒ done at admission, no decode tick
+    cfg, params = engine_setup
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, cfg.vocab_size, 5)
+    probe = ServeEngine(cfg, params, ServeConfig(num_slots=1, max_len=64))
+    probe.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    first = probe.run_until_drained()[0].out[0]
+
+    eng = ServeEngine(cfg, params, ServeConfig(num_slots=1, max_len=64))
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=16,
+                       eos_id=first))
+    done = eng.run_until_drained()
+    assert done[0].out == [first]
+    assert eng.ticks == 0
+
+
 def test_scheduler_prefix_affinity():
     s = DiffusionScheduler(4)
     for i in range(8):
@@ -113,3 +154,152 @@ def test_scheduler_diffusion_preserves_prefix_groups_better_than_greedy():
     sg = build()
     sg.rebalance(strategy="greedy")
     assert split_groups(sd) <= split_groups(sg)
+
+
+def test_place_new_picks_least_loaded_prefix_peer():
+    # group 7 lives on replicas 0 (hot) and 2 (cool): a new group-7
+    # session must join the *cool* peer, not the first one found
+    s = DiffusionScheduler(4)
+    s.add(Session(uid=0, replica=0, tokens_per_s=9.0, prefix_group=7))
+    s.add(Session(uid=1, replica=2, tokens_per_s=1.0, prefix_group=7))
+    s.add(Session(uid=2, replica=3, tokens_per_s=0.1, prefix_group=5))
+    r = s.place_new(Session(uid=3, replica=-1, tokens_per_s=1.0,
+                            prefix_group=7))
+    assert r == 2
+    # no peers anywhere ⇒ least-loaded replica overall (1 is empty)
+    r = s.place_new(Session(uid=4, replica=-1, tokens_per_s=1.0,
+                            prefix_group=99))
+    assert r == 1
+
+
+def test_rebalance_conserves_sessions_and_kv_bytes():
+    s = DiffusionScheduler(4, k=3)
+    rng = np.random.default_rng(7)
+    ref = {}
+    for i in range(40):
+        sess = Session(uid=100 + i, replica=int(rng.integers(0, 2)),
+                       tokens_per_s=float(rng.uniform(0.1, 5.0)),
+                       prefix_group=i // 5,
+                       kv_bytes=float(rng.uniform(10.0, 200.0)))
+        ref[sess.uid] = sess
+        s.add(sess)
+    kv_before = sum(x.kv_bytes for x in ref.values())
+    info = s.rebalance(strategy="diff-comm")
+    after = s.sessions
+    # identity: same uid set, and every per-session field except the
+    # replica owner survives the slab exchange exactly
+    assert set(after) == set(ref)
+    for uid, sess in after.items():
+        assert sess.tokens_per_s == pytest.approx(ref[uid].tokens_per_s)
+        assert sess.prefix_group == ref[uid].prefix_group
+        assert sess.kv_bytes == pytest.approx(ref[uid].kv_bytes)
+    assert sum(x.kv_bytes for x in after.values()) == \
+        pytest.approx(kv_before)
+    # the executed exchange priced real per-session KV volume
+    moved = [uid for uid in ref if after[uid].replica != ref[uid].replica]
+    assert info["moved_sessions"] == len(moved)
+    assert info["moved_kv_bytes"] == pytest.approx(
+        sum(ref[u].kv_bytes for u in moved))
+
+
+def test_rebalance_slot_capacity_defers_overflow():
+    s = DiffusionScheduler(2)
+    for i in range(12):
+        s.add(Session(uid=i, replica=0, tokens_per_s=1.0))
+    info = s.rebalance(strategy="diff-comm", slot_capacity=8)
+    occ = np.bincount([x.replica for x in s.sessions.values()], minlength=2)
+    assert occ.max() <= 8
+    assert len(s.sessions) == 12          # deferred, never dropped
+    assert info["deferred_sessions"] >= 0
+    assert info["moved_sessions"] + info["deferred_sessions"] >= 2
+
+
+def test_edge_weights_share_the_node_load_floor():
+    # a zero-load session still contributes a (floored) edge weight: the
+    # problem's edge bytes come from the same clamped loads as its node
+    # loads, so planning never sees a 0-weight prefix tie
+    s = DiffusionScheduler(4)
+    s.add(Session(uid=0, replica=0, tokens_per_s=0.0, prefix_group=1))
+    s.add(Session(uid=1, replica=1, tokens_per_s=0.0, prefix_group=1))
+    prob = s.problem()
+    loads = np.asarray(prob.loads)
+    ew = np.asarray(prob.edges_bytes)
+    es = np.asarray(prob.edges_src)
+    assert loads.min() >= 1e-3
+    star = ew[(es >= 0)]
+    assert star.size and (star >= 1e-3).all()
+
+
+def test_prefix_locality_metric():
+    import jax.numpy as jnp
+    s = DiffusionScheduler(4)
+    for i in range(8):
+        s.add(Session(uid=i, replica=i % 4, tokens_per_s=1.0,
+                      prefix_group=i // 4))
+    fleet = s.fleet()
+    split = float(prefix_locality(fleet))
+    # perfect placement: group 0 (uids 0..3) on replica 0, group 1 on 1
+    colocated = float(prefix_locality(
+        fleet, assignment=jnp.where(fleet.uid < 4, 0, 1)))
+    assert colocated == pytest.approx(1.0)
+    assert split < colocated
+
+
+def test_maybe_rebalance_predictive_amortizes_executed_kv():
+    from repro.runtime.cost import RuntimeCostModel
+    from repro.runtime.triggers import PredictiveTrigger
+
+    def build(cost):
+        s = DiffusionScheduler(4, k=3)
+        rng = np.random.default_rng(11)
+        for i in range(24):
+            s.add(Session(uid=i, replica=0,
+                          tokens_per_s=float(rng.uniform(0.5, 4.0)),
+                          prefix_group=i // 3,
+                          kv_bytes=float(rng.uniform(50.0, 100.0))))
+        return s
+
+    def drive(cost, measured):
+        s = build(cost)
+        trig = PredictiveTrigger(cost=cost, measured_gate=measured)
+        fires = 0
+        for _ in range(12):
+            info = s.maybe_rebalance(trigger=trig, lb_every=2, cost=cost)
+            fires += int(info["fired"])
+            # keep the imbalance pressure on so the estimate gate would
+            # keep firing: pile fresh load onto replica 0
+            for uid, sess in s.sessions.items():
+                if sess.replica == 0:
+                    s.add(Session(uid=uid, replica=0,
+                                  tokens_per_s=sess.tokens_per_s + 2.0,
+                                  prefix_group=sess.prefix_group,
+                                  kv_bytes=sess.kv_bytes))
+        return fires
+
+    # KV bytes are made astronomically expensive in load units: the
+    # measured gate must fire less often than the estimate-only gate once
+    # it has seen what one executed exchange actually moved
+    cost = RuntimeCostModel(t_load=1.0, t_byte=50.0, bytes_per_load=1e-4,
+                            moved_frac_est=1e-6)
+    measured, legacy = drive(cost, True), drive(cost, False)
+    assert legacy > 0
+    assert measured < legacy
+    assert measured >= 1                 # cold start still fires once
+
+
+def test_scheduler_fleet_roundtrip_via_sessions_facade():
+    # legacy dict-of-sessions view stays faithful to the slab store
+    s = DiffusionScheduler(3, capacity=4)   # forces a _grow
+    for i in range(9):
+        s.add(Session(uid=i * 10, replica=i % 3, tokens_per_s=float(i),
+                      prefix_group=i % 2, kv_bytes=2.0 * i))
+    s.remove(30)
+    assert len(s) == 8 and 30 not in s.sessions
+    sess = s.sessions[70]
+    assert sess.tokens_per_s == 7.0 and sess.kv_bytes == 14.0
+    loads = s.replica_loads()
+    assert loads.sum() == pytest.approx(sum(
+        x.tokens_per_s for x in s.sessions.values()))
+    assert np.asarray(fleet_loads(s.fleet())).min() >= 1e-3
+    prob = fleet_problem(s.fleet(), 3)
+    prob.validate()
