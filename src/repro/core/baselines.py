@@ -51,6 +51,32 @@ def greedy(problem: comm_graph.LBProblem) -> np.ndarray:
     return new
 
 
+def greedy_capped(problem: comm_graph.LBProblem,
+                  cap: int = 0) -> np.ndarray:
+    """GreedyLB under a rigid per-node object-count budget.
+
+    Sorted objects go to the least-loaded node that still has slots —
+    the indivisible-slot regime (MoE experts: exactly E/R experts fit a
+    rank's weight buffers).  ``cap <= 0`` derives the tightest uniform
+    budget ``ceil(N / P)``; like :func:`greedy` it ignores the current
+    assignment and the comm graph entirely."""
+    loads, a, *_ = _np(problem)
+    P = problem.num_nodes
+    N = len(loads)
+    if cap <= 0:
+        cap = -(-N // P)
+    new = np.empty_like(a)
+    node_load = np.zeros(P)
+    node_cnt = np.zeros(P, np.int64)
+    for o in np.argsort(-loads):
+        open_ = np.nonzero(node_cnt < cap)[0]
+        p = open_[np.argmin(node_load[open_])]
+        new[o] = p
+        node_load[p] += loads[o]
+        node_cnt[p] += 1
+    return new
+
+
 def greedy_refine(
     problem: comm_graph.LBProblem, threshold: float = 1.003
 ) -> np.ndarray:

@@ -499,6 +499,8 @@ register(Strategy("diff-comm", _diffusion_plan_fn("comm"), jittable=True,
 register(Strategy("diff-coord", _diffusion_plan_fn("coord"), jittable=True,
                   variant="coord"))
 register(Strategy("greedy", _host(baselines.greedy)))
+register(Strategy("ep-greedy", _host(baselines.greedy_capped),
+                  defaults=dict(cap=0)))
 register(Strategy("greedy-refine", _host(baselines.greedy_refine)))
 register(Strategy("metis", _host(baselines.metis_like)))
 register(Strategy("parmetis", _host(baselines.parmetis_like)))

@@ -29,6 +29,7 @@ rank, ignores co-activation — the GreedyLB analogue).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -36,8 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import api as core_api
-from repro.core import comm_graph, metrics
+from repro.core import comm_graph, engine, metrics
 
 
 @dataclasses.dataclass
@@ -57,23 +57,58 @@ class ExpertStats:
             self.coact = np.zeros((E, E))
 
     def update(self, expert_ids: np.ndarray) -> None:
-        """``expert_ids``: (T, k) routed expert ids for one step's tokens."""
-        E = self.num_experts
-        ids = np.asarray(expert_ids)
-        counts = np.bincount(ids.reshape(-1), minlength=E).astype(np.float64)
-        co = np.zeros((E, E))
-        k = ids.shape[1]
-        for a in range(k):
-            for b in range(a + 1, k):
-                np.add.at(co, (ids[:, a], ids[:, b]), 1.0)
-        co = co + co.T
+        """``expert_ids``: (T, k) routed expert ids for one step's tokens.
+
+        One batched bincount + outer-product update: with ``C`` the
+        (T, E) per-token selection-count matrix, the symmetrized
+        ordered-pair co-activation is ``CᵀC − diag(counts)`` — exactly
+        the historical O(k²) ``np.add.at`` pair loop (kept as
+        :func:`pair_stats_loop` and property-tested equal), in two BLAS
+        calls instead of k(k−1)/2 scatter passes."""
+        counts, co = pair_stats_np(expert_ids, self.num_experts)
         self.tokens = self.ema * self.tokens + (1 - self.ema) * counts
         self.coact = self.ema * self.coact + (1 - self.ema) * co
+
+    def update_from_counts(self, counts, coact) -> None:
+        """EMA update from precomputed stats (the device-resident path:
+        ``models.moe.pair_stats`` sums ride the train step's metrics)."""
+        self.tokens = (self.ema * self.tokens
+                       + (1 - self.ema) * np.asarray(counts, np.float64))
+        self.coact = (self.ema * self.coact
+                      + (1 - self.ema) * np.asarray(coact, np.float64))
 
     def imbalance(self, placement: np.ndarray, num_ranks: int) -> float:
         rank_load = np.bincount(placement, weights=self.tokens,
                                 minlength=num_ranks)
         return float(rank_load.max() / (rank_load.mean() + 1e-30))
+
+
+def pair_stats_np(expert_ids, num_experts: int):
+    """(counts (E,), coact (E, E)) from (T, k) routed ids — host twin of
+    the device op ``models.moe.pair_stats`` (same identity, numpy)."""
+    E = int(num_experts)
+    ids = np.asarray(expert_ids)
+    T = ids.shape[0]
+    counts = np.bincount(ids.reshape(-1), minlength=E).astype(np.float64)
+    C = np.zeros((T, E))
+    np.add.at(C, (np.repeat(np.arange(T), ids.shape[1]), ids.reshape(-1)),
+              1.0)
+    co = C.T @ C - np.diag(counts)
+    return counts, co
+
+
+def pair_stats_loop(expert_ids, num_experts: int):
+    """The historical O(k²) pair loop, kept as the property-test oracle
+    for :meth:`ExpertStats.update` / :func:`pair_stats_np`."""
+    E = int(num_experts)
+    ids = np.asarray(expert_ids)
+    counts = np.bincount(ids.reshape(-1), minlength=E).astype(np.float64)
+    co = np.zeros((E, E))
+    k = ids.shape[1]
+    for a in range(k):
+        for b in range(a + 1, k):
+            np.add.at(co, (ids[:, a], ids[:, b]), 1.0)
+    return counts, co + co.T
 
 
 def build_problem(stats: ExpertStats, placement: np.ndarray,
@@ -96,27 +131,50 @@ def build_problem(stats: ExpertStats, placement: np.ndarray,
     )
 
 
-def _repair_counts(assignment: np.ndarray, loads: np.ndarray,
-                   num_ranks: int, cap: int) -> np.ndarray:
-    """Enforce exactly ``cap`` experts per rank, moving light experts from
-    over-full to under-full ranks."""
-    a = assignment.copy()
-    counts = np.bincount(a, minlength=num_ranks)
-    over = [r for r in range(num_ranks) if counts[r] > cap]
-    under = [r for r in range(num_ranks) if counts[r] < cap]
-    for r in over:
-        movable = np.nonzero(a == r)[0]
-        movable = movable[np.argsort(loads[movable])]      # lightest first
-        i = 0
-        while counts[r] > cap and i < len(movable):
-            dst = min(under, key=lambda q: counts[q])
-            a[movable[i]] = dst
-            counts[r] -= 1
-            counts[dst] += 1
-            if counts[dst] >= cap:
-                under.remove(dst)
-            i += 1
-    return a
+@functools.partial(jax.jit, static_argnames=("num_ranks", "cap"))
+def repair_capacity(assignment, loads, *, num_ranks: int,
+                    cap: int) -> jax.Array:
+    """Enforce exactly ``cap`` experts per rank — as a jittable pass.
+
+    Replaces the historical host repair loop with fixed-shape segment
+    ops, so the in-scan expert-placement runtime
+    (``train/ep_runtime.py``) runs it inside ``lax.scan`` / ``lax.cond``
+    and the eager callers execute the *same expression graph* (bit-for-
+    bit identical repairs on both paths).  Semantics: each over-full
+    rank evicts its lightest excess experts; evicted experts — globally
+    ordered by ascending load, ties by index (stable) — fill the
+    under-full ranks in rank order.  Deterministic, O(E·R) one-hot
+    cumsums, no data-dependent shapes."""
+    a = jnp.asarray(assignment, jnp.int32)
+    loads = jnp.asarray(loads, jnp.float32)
+    E = a.shape[0]
+    R = int(num_ranks)
+    counts = jax.ops.segment_sum(jnp.ones((E,), jnp.int32), a,
+                                 num_segments=R)
+    # within-rank position in ascending-load order (stable)
+    ordl = jnp.argsort(loads, stable=True).astype(jnp.int32)
+    onehot = jax.nn.one_hot(jnp.take(a, ordl), R, dtype=jnp.int32)
+    pos_s = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=1) - 1
+    pos = jnp.zeros((E,), jnp.int32).at[ordl].set(pos_s)
+    excess = jnp.maximum(counts - cap, 0)
+    evict = pos < jnp.take(excess, a)                  # lightest first
+    # destinations: the j-th evicted expert (ascending load, stable)
+    # takes the j-th open slot in cumulative-deficit order
+    deficit = jnp.maximum(cap - counts, 0)
+    cd = jnp.cumsum(deficit)
+    key = jnp.where(evict, loads, jnp.inf)
+    orde = jnp.argsort(key, stable=True).astype(jnp.int32)
+    slot = jnp.zeros((E,), jnp.int32).at[orde].set(
+        jnp.arange(E, dtype=jnp.int32))
+    dst = jnp.searchsorted(cd, slot, side="right").astype(jnp.int32)
+    return jnp.where(evict, jnp.clip(dst, 0, R - 1), a)
+
+
+#: strategy-name aliases: the legacy ``strategy="greedy"`` spelling maps
+#: to the registered capacity-capped greedy (``core.baselines
+#: .greedy_capped``) — plain ``greedy`` has no slot budget and would
+#: leave the capacity repair to do all the work
+_ALIASES = {"greedy": "ep-greedy"}
 
 
 def plan_placement(
@@ -127,20 +185,27 @@ def plan_placement(
     k: int = 4,
     strategy: str = "diff-comm",
 ) -> Tuple[np.ndarray, Dict]:
-    """New expert→rank placement (exactly E/R per rank) + plan info."""
+    """New expert→rank placement (exactly E/R per rank) + plan info.
+
+    Planning goes through the Strategy registry (``core.engine``) — the
+    same jitted ``LBEngine`` plan the replay layers trace — followed by
+    the jittable :func:`repair_capacity` pass.  The legacy
+    ``core_api.diffusion_lb`` path is gone; ``strategy`` accepts any
+    registered name (``diff-comm``, ``diff-comm+predictive``,
+    ``ep-greedy``, ...) plus the historical ``"greedy"`` alias."""
     E = stats.num_experts
     assert E % num_ranks == 0
     cap = E // num_ranks
     prob = build_problem(stats, placement, num_ranks)
-    if strategy == "greedy":
-        new = greedy_placement(stats, num_ranks)
-        info: Dict = dict(strategy="greedy")
-    else:
-        plan = core_api.diffusion_lb(
-            prob, k=min(k, num_ranks - 1),
-            variant="comm", tol=0.05)
-        new, info = plan.assignment, plan.info
-    new = _repair_counts(np.asarray(new), stats.tokens, num_ranks, cap)
+    strat = engine.get_strategy(_ALIASES.get(strategy, strategy))
+    kw: Dict = {}
+    if strat.variant is not None:
+        kw = dict(k=min(k, num_ranks - 1), tol=0.05)
+    plan = strat.run(prob, **kw)
+    new, info = np.asarray(plan.assignment), dict(plan.info)
+    new = np.asarray(repair_capacity(
+        new, np.asarray(stats.tokens, np.float32),
+        num_ranks=num_ranks, cap=cap))
     info.update(metrics.evaluate(prob, jnp.asarray(new)))
     info["moved_experts"] = int((new != placement).sum())
     return new.astype(np.int32), info

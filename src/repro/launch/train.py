@@ -25,11 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.distributed import ep_balance
 from repro.models import transformer
 from repro.models.params import init_params
 from repro.train import checkpoint as ckpt
 from repro.train import data as data_mod
+from repro.train import ep_runtime
 from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts_mod
 
@@ -48,6 +48,9 @@ class RunConfig:
     resume: bool = True
     remat: str = "none"
     ep_balance_every: int = 0       # MoE expert rebalance cadence (0 = off)
+    ep_strategy: str = "diff-comm"  # any registered strategy (+ "greedy")
+    ep_trigger: Optional[str] = None  # None → strategy default / cadence
+    ep_num_ranks: int = 0           # EP ranks (0 = min(4, E) at host scale)
     seed: int = 0
     log_every: int = 10
 
@@ -60,7 +63,9 @@ def build(cfg: RunConfig):
     ocfg = opt_mod.OptConfig(lr=cfg.lr, warmup_steps=cfg.warmup,
                              total_steps=cfg.steps)
     opt_state = opt_mod.init(params)
-    step_fn = jax.jit(ts_mod.make_train_step(mcfg, ocfg, remat=cfg.remat),
+    collect = bool(cfg.ep_balance_every) and mcfg.moe is not None
+    step_fn = jax.jit(ts_mod.make_train_step(mcfg, ocfg, remat=cfg.remat,
+                                             collect_router_stats=collect),
                       donate_argnums=(0, 1))
     dcfg = data_mod.DataConfig(vocab_size=mcfg.vocab_size,
                                seq_len=cfg.seq_len,
@@ -80,9 +85,16 @@ def train(cfg: RunConfig) -> Dict:
             pipe.state = data_mod.PipelineState.from_dict(ds)
         print(f"resumed from step {start}")
 
-    estats = None
+    rebalancer = None
     if cfg.ep_balance_every and mcfg.moe is not None:
-        estats = ep_balance.ExpertStats(mcfg.moe.num_experts)
+        E = mcfg.moe.num_experts
+        # EP ranks at host scale: a few virtual ranks (the planning logic
+        # is rank-count agnostic; at production scale this is the
+        # model-axis size).
+        R = cfg.ep_num_ranks or min(4, E)
+        rebalancer = ep_runtime.EPRebalancer(
+            E, R, strategy=cfg.ep_strategy, trigger=cfg.ep_trigger,
+            lb_every=cfg.ep_balance_every)
 
     hist = []
     t0 = time.time()
@@ -99,9 +111,12 @@ def train(cfg: RunConfig) -> Dict:
         if cfg.ckpt_dir and cfg.save_every and (step + 1) % cfg.save_every == 0:
             ckpt.save(cfg.ckpt_dir, step + 1, params, opt_state,
                       data_state=pipe.state.to_dict())
-        if (estats is not None and cfg.ep_balance_every
-                and (step + 1) % cfg.ep_balance_every == 0):
-            _rebalance_experts(mcfg, params, estats)
+        if rebalancer is not None:
+            params, info = _rebalance_experts(params, rebalancer, m, step)
+            if info.get("fired") and cfg.log_every:
+                print(f"  [ep-balance] moved {info['moved_experts']} "
+                      f"experts ({info['moved_bytes']:.0f} B), "
+                      f"max/avg {info['max_avg']:.3f}", flush=True)
     if cfg.ckpt_dir:
         ckpt.save(cfg.ckpt_dir, cfg.steps, params, opt_state,
                   data_state=pipe.state.to_dict())
@@ -110,16 +125,34 @@ def train(cfg: RunConfig) -> Dict:
                 opt_state=opt_state)
 
 
-def _rebalance_experts(mcfg, params, estats: ep_balance.ExpertStats):
-    """Collect router stats from the last batch and re-place experts."""
-    E = mcfg.moe.num_experts
-    # EP ranks at host scale: pretend 4 ranks (the planning logic is rank-
-    # count agnostic; at production scale this is the model-axis size).
-    R = min(4, E)
-    placement = (np.arange(E) * R // E).astype(np.int32)
-    new, info = ep_balance.plan_placement(estats, placement, R)
-    print(f"  [ep-balance] moved {info['moved_experts']} experts, "
-          f"max/avg {info['max_avg_load']:.3f}")
+def _moe_blocks(params) -> list:
+    """(section, index) of every block param dict holding a MoE layer."""
+    out = []
+    for sect in ("unit", "prefix", "suffix"):
+        for i, blk in enumerate(params.get(sect, ())):
+            if isinstance(blk, dict) and "moe" in blk:
+                out.append((sect, i))
+    return out
+
+
+def _rebalance_experts(params, rebalancer: "ep_runtime.EPRebalancer",
+                       metrics: Dict, step: int):
+    """One live-rebalancing tick on the real parameter tree.
+
+    The train step already accumulated the router statistics on device
+    (``router_counts``/``router_coact`` in its metrics); the rebalancer
+    decides, plans, and — on fire — relocates every MoE layer's expert
+    weights through the executed exchange, reporting the measured moved
+    bytes back to its trigger."""
+    where = _moe_blocks(params)
+    layers = [params[s][i]["moe"] for s, i in where]
+    layers, info = rebalancer.step(
+        step, np.asarray(metrics["router_counts"]),
+        np.asarray(metrics["router_coact"]), layers)
+    if info.get("fired"):
+        for (s, i), moe in zip(where, layers):
+            params[s][i] = {**params[s][i], "moe": moe}
+    return params, info
 
 
 def main():

@@ -19,7 +19,7 @@ balancer on it and feeds the resulting permutation back in via
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,50 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.layers import BATCH, MODEL, ParamSpec, shard
+
+
+# ---------------------------------------------------------- routing stats --
+
+
+class RouterStats(NamedTuple):
+    """Per-step routing statistics — the live expert-placement inputs.
+
+    ``counts[e]`` is the number of (token, k) selections of expert ``e``
+    this step; ``coact[i, j]`` counts ordered selections of experts i and
+    j by the same token (symmetric, zero diagonal-free convention of
+    ``distributed/ep_balance.ExpertStats`` — see :func:`pair_stats`).
+    Both are f32 device arrays with fixed shapes, so they ride scan
+    carries and training-step metrics without host trips."""
+
+    counts: jax.Array   # (E,) f32
+    coact: jax.Array    # (E, E) f32
+
+
+def zero_router_stats(num_experts: int) -> RouterStats:
+    return RouterStats(jnp.zeros((num_experts,), jnp.float32),
+                       jnp.zeros((num_experts, num_experts), jnp.float32))
+
+
+def pair_stats(ids, num_experts: int) -> RouterStats:
+    """Token counts + co-activation matrix from top-k ids, in one batch.
+
+    ``ids`` is (T, k) i32.  With ``c_t`` the per-token selection-count
+    vector (sum of one-hots over the k columns), the ordered-pair
+    co-activation identity is
+
+        coact = Σ_t (c_t c_tᵀ − diag(c_t)) = CᵀC − diag(counts)
+
+    — exactly the symmetrized O(k²) ``np.add.at`` pair loop this replaces
+    (``ep_balance.ExpertStats`` property-tests the equality), computed as
+    one one-hot matmul.  Traceable with fixed shapes: this is the
+    device-side hook the training scan and the expert-placement runtime
+    (``train/ep_runtime.py``) share."""
+    ids = jnp.asarray(ids, jnp.int32)
+    E = int(num_experts)
+    sel = jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(axis=-2)   # (T, E)
+    counts = sel.sum(axis=0)
+    coact = jnp.einsum("te,tf->ef", sel, sel) - jnp.diag(counts)
+    return RouterStats(counts=counts, coact=coact)
 
 
 def moe_specs(cfg: ModelConfig) -> Dict:
@@ -80,13 +124,15 @@ def _shared(params, cfg, x, dt):
 # ------------------------------------------------------------- dense path --
 
 
-def moe_dense(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """One-hot dispatch/combine.  x: (B, S, D) → (y, aux)."""
+def moe_dense(params, cfg: ModelConfig, x: jax.Array,
+              collect_stats: bool = False):
+    """One-hot dispatch/combine.  x: (B, S, D) → (y, aux[, RouterStats])."""
     m = cfg.moe
     B, S, D = x.shape
     dt = x.dtype
     x2d = x.reshape(B * S, D)
     w, ids, aux = _router(params, cfg, x2d)
+    stats = pair_stats(ids, m.num_experts) if collect_stats else None
     onehot = jax.nn.one_hot(ids, m.num_experts, dtype=dt)       # (T, k, E)
     comb = jnp.einsum("tk,tke->te", w, onehot)                  # (T, E)
     hg = jnp.einsum("td,edf->tef", x2d, params["wg"].astype(dt))
@@ -97,6 +143,8 @@ def moe_dense(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Ar
     y = y.reshape(B, S, D)
     if m.num_shared:
         y = y + _shared(params, cfg, x, dt)
+    if collect_stats:
+        return y, aux, stats
     return y, aux
 
 
@@ -104,7 +152,8 @@ def moe_dense(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Ar
 
 
 def _a2a_local(x_loc, router, wi, wg, wo, *, cfg: ModelConfig, ep: int,
-               ep_axis: str, tok_axes: Tuple[str, ...]):
+               ep_axis: str, tok_axes: Tuple[str, ...],
+               collect_stats: bool = False):
     """shard_map body: x_loc (B_loc, S_loc, D) tokens local to this EP rank."""
     m = cfg.moe
     E = m.num_experts
@@ -161,10 +210,17 @@ def _a2a_local(x_loc, router, wi, wg, wo, *, cfg: ModelConfig, ep: int,
                          back[jnp.where(keep, flat_e * cap + slot, 0)], 0.0)
     y = jnp.sum(gathered.reshape(T_loc, k, D) * w[:, :, None], axis=1)
     aux = jax.lax.pmean(jnp.asarray(aux, jnp.float32), tok_axes)
+    if collect_stats:
+        # global routing stats: every rank routes its own tokens, so the
+        # psum over the token axes is the full-batch count/co-activation
+        st = pair_stats(ids, E)
+        st = RouterStats(*(jax.lax.psum(s, tok_axes) for s in st))
+        return y.reshape(B_loc, S_loc, D), aux, st
     return y.reshape(B_loc, S_loc, D), aux
 
 
-def moe_a2a(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def moe_a2a(params, cfg: ModelConfig, x: jax.Array,
+            collect_stats: bool = False):
     """Expert-parallel MoE over the ambient mesh's "model" axis.
 
     Boundary layout: the (B, S, D) activation keeps its factored form —
@@ -177,14 +233,14 @@ def moe_a2a(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Arra
     """
     mesh = jax.sharding.get_abstract_mesh()
     if mesh is None or mesh.empty or MODEL not in mesh.axis_names:
-        return moe_dense(params, cfg, x)
+        return moe_dense(params, cfg, x, collect_stats)
     ep_axes = tuple(a for a in cfg.ep_axes if a in mesh.axis_names)
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     ep = 1
     for a in ep_axes:
         ep *= sizes[a]
     if not ep_axes or cfg.moe.num_experts % ep != 0 or x.shape[1] % sizes[MODEL] != 0:
-        return moe_dense(params, cfg, x)
+        return moe_dense(params, cfg, x, collect_stats)
 
     B, S, D = x.shape
     dt = x.dtype
@@ -197,31 +253,42 @@ def moe_a2a(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Arra
     # gather-before-use).  With ep_axes=("data","model") the weights are
     # fully resident per chip and nothing is gathered (EP-wide).
     espec = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
-    y, aux = jax.shard_map(
+    out_specs = (P(ba, MODEL, None), P())
+    if collect_stats:
+        out_specs = out_specs + (moe_pkg_stats_spec(),)
+    out = jax.shard_map(
         lambda xl, r, wi, wg, wo: _a2a_local(
             xl, r, wi, wg, wo, cfg=cfg, ep=ep, ep_axis=ep_axes,
-            tok_axes=tok_axes),
+            tok_axes=tok_axes, collect_stats=collect_stats),
         mesh=mesh,
         in_specs=(P(ba, MODEL, None), P(None, None), espec, espec, espec),
-        out_specs=(P(ba, MODEL, None), P()),
+        out_specs=out_specs,
         check_vma=False,
     )(x, params["router"], params["wi"], params["wg"], params["wo"])
+    y, aux = out[0], out[1]
 
     y = shard(y, BATCH, None, None)               # S all-gather out
     if cfg.moe.num_shared:
         y = y + _shared(params, cfg, x, dt)
+    if collect_stats:
+        return y, aux, out[2]
     return y, aux
 
 
+def moe_pkg_stats_spec() -> RouterStats:
+    """Replicated out_spec pytree for the stats leg of the a2a body."""
+    return RouterStats(P(), P())
+
+
 def moe_ffn(params, cfg: ModelConfig, x: jax.Array,
-            impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+            impl: Optional[str] = None, collect_stats: bool = False):
     impl = impl or cfg.moe.impl
     if impl == "dense":
-        return moe_dense(params, cfg, x)
+        return moe_dense(params, cfg, x, collect_stats)
     if impl == "a2a":
-        return moe_a2a(params, cfg, x)
+        return moe_a2a(params, cfg, x, collect_stats)
     # auto: a2a whenever a model-axis mesh is ambient
     mesh = jax.sharding.get_abstract_mesh()
     if mesh is not None and not mesh.empty and MODEL in mesh.axis_names:
-        return moe_a2a(params, cfg, x)
-    return moe_dense(params, cfg, x)
+        return moe_a2a(params, cfg, x, collect_stats)
+    return moe_dense(params, cfg, x, collect_stats)

@@ -212,6 +212,17 @@ def shard_cache(cache):
 # ------------------------------------------------------------------ block --
 
 
+def zero_aux(cfg: ModelConfig, collect_router_stats: bool = False):
+    """The aux channel's zero: a scalar, or (scalar, RouterStats) when the
+    training scan is accumulating device-resident routing statistics."""
+    if collect_router_stats:
+        if cfg.moe is None:
+            raise ValueError("collect_router_stats needs a MoE config")
+        return (jnp.float32(0.0),
+                moe_mod.zero_router_stats(cfg.moe.num_experts))
+    return jnp.float32(0.0)
+
+
 def apply_block(
     params: Dict,
     cfg: ModelConfig,
@@ -222,10 +233,17 @@ def apply_block(
     *,
     prefix_len: int = 0,
     decode: bool = False,
+    collect_router_stats: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
-    """Returns (x_out, new_cache, aux_loss)."""
+    """Returns (x_out, new_cache, aux_loss).
+
+    With ``collect_router_stats`` the aux leg is the fixed-shape pytree
+    ``(aux_scalar, RouterStats)`` for *every* block kind (zeros outside
+    MoE blocks), so the layer-unit scan carries per-expert token counts
+    and the (E, E) co-activation matrix on device — the live
+    expert-placement runtime's input (``train/ep_runtime.py``)."""
     dt = x.dtype
-    aux = jnp.float32(0.0)
+    aux = zero_aux(cfg, collect_router_stats)
     window = cfg.sliding_window if kind in ("attn_local", "moe_local",
                                             "hymba") else 0
 
@@ -238,7 +256,12 @@ def apply_block(
         x = x + a
         h = rms_norm(x, params["norm2"], cfg.norm_eps)
         if kind.startswith("moe"):
-            f, aux = moe_mod.moe_ffn(params["moe"], cfg, h)
+            if collect_router_stats:
+                f, a_s, stats = moe_mod.moe_ffn(params["moe"], cfg, h,
+                                                collect_stats=True)
+                aux = (a_s, stats)
+            else:
+                f, aux = moe_mod.moe_ffn(params["moe"], cfg, h)
         else:
             f = mlp(params["mlp"], h, dt)
         x = x + f
@@ -296,6 +319,11 @@ def _embed_inputs(params, cfg: ModelConfig, batch: Dict) -> jax.Array:
     return shard(x, BATCH, None, None)
 
 
+def _aux_add(a, b):
+    """Pytree add for the aux channel (scalar or (scalar, RouterStats))."""
+    return jax.tree.map(jnp.add, a, b)
+
+
 def forward(
     params: Dict,
     cfg: ModelConfig,
@@ -304,8 +332,14 @@ def forward(
     cache: Optional[Dict] = None,
     decode: bool = False,
     remat: str = "none",
+    collect_router_stats: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
-    """Run the stack.  Returns (hidden (B,S,D), new_cache, aux_loss)."""
+    """Run the stack.  Returns (hidden (B,S,D), new_cache, aux_loss).
+
+    ``collect_router_stats`` widens the aux return to
+    ``(aux_scalar, moe.RouterStats)`` — per-expert token counts and the
+    co-activation matrix summed over every MoE layer, accumulated inside
+    the layer-unit scan with fixed shapes (no host round-trip)."""
     from repro.models.layers import set_profile
     # dp (batch-over-everything) pays off for training small models; cache
     # paths (prefill/decode) need the 2d layout's KV-length sharding —
@@ -317,16 +351,17 @@ def forward(
     x = _embed_inputs(params, cfg, batch)
     positions = batch["positions"]
     prefix_len = cfg.vision_prefix if cfg.prefix_lm else 0
-    aux_total = jnp.float32(0.0)
+    aux_total = zero_aux(cfg, collect_router_stats)
 
     new_prefix = []
     for i, kind in enumerate(cfg.prefix_layers):
         c = None if cache is None else cache["prefix"][i]
         x, c_new, aux = apply_block(params["prefix"][i], cfg, kind, x,
                                     positions, c, prefix_len=prefix_len,
-                                    decode=decode)
+                                    decode=decode,
+                                    collect_router_stats=collect_router_stats)
         new_prefix.append(c_new)
-        aux_total += aux
+        aux_total = _aux_add(aux_total, aux)
 
     # scanned groups
     def group_body(carry, xs):
@@ -337,9 +372,10 @@ def forward(
             c = None if unit_cache is None else unit_cache[i]
             x, c_new, aux = apply_block(unit_params[i], cfg, kind, x,
                                         positions, c, prefix_len=prefix_len,
-                                        decode=decode)
+                                        decode=decode,
+                                        collect_router_stats=collect_router_stats)
             new_unit_cache.append(c_new)
-            aux_acc = aux_acc + aux
+            aux_acc = _aux_add(aux_acc, aux)
         ys = tuple(new_unit_cache) if unit_cache is not None else None
         return (x, aux_acc), ys
 
@@ -364,9 +400,10 @@ def forward(
         c = None if cache is None else cache["suffix"][i]
         x, c_new, aux = apply_block(params["suffix"][i], cfg, kind, x,
                                     positions, c, prefix_len=prefix_len,
-                                    decode=decode)
+                                    decode=decode,
+                                    collect_router_stats=collect_router_stats)
         new_suffix.append(c_new)
-        aux_total += aux
+        aux_total = _aux_add(aux_total, aux)
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     new_cache = None
@@ -397,14 +434,26 @@ def loss_fn(
     remat: str = "none",
     seq_chunk: int = 512,
     z_weight: float = 1e-4,
+    collect_router_stats: bool = False,
 ) -> Tuple[jax.Array, Dict]:
     """Next-token CE.  ``batch["labels"]`` is (B, S) with -1 = masked.
 
     The head is applied in sequence chunks under ``lax.scan`` with the vocab
     dim sharded over "model": per-chunk logits are (B, c, V/shards) locally
     and the full (B, S, V) tensor never exists.
+
+    ``collect_router_stats`` adds ``router_counts`` (E,) and
+    ``router_coact`` (E, E) to the metrics dict — the device-resident
+    routing statistics the expert-placement runtime consumes.  They ride
+    the aux channel as non-differentiated metrics (``stop_gradient``), so
+    the loss value and gradients are unchanged.
     """
-    h, _, aux = forward(params, cfg, batch, remat=remat)
+    h, _, aux = forward(params, cfg, batch, remat=remat,
+                        collect_router_stats=collect_router_stats)
+    rstats = None
+    if collect_router_stats:
+        aux, rstats = aux
+        rstats = jax.lax.stop_gradient(rstats)
     labels = batch["labels"]
     B, S = labels.shape
     dt = h.dtype
@@ -453,7 +502,11 @@ def loss_fn(
         mtp_loss = _mtp_loss(params, cfg, batch, h[:, :S])
         loss = loss + 0.3 * mtp_loss
 
-    return loss, dict(ce=ce, aux=aux, tokens=cnt, mtp=mtp_loss)
+    metrics = dict(ce=ce, aux=aux, tokens=cnt, mtp=mtp_loss)
+    if rstats is not None:
+        metrics["router_counts"] = rstats.counts
+        metrics["router_coact"] = rstats.coact
+    return loss, metrics
 
 
 def _mtp_loss(params, cfg: ModelConfig, batch, h):

@@ -403,7 +403,10 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
         [jnp.zeros((1,), jnp.int32),
          jnp.cumsum(my_sizes).astype(jnp.int32)])[:rpd]  # (rpd,)
 
-    outs = tuple(jnp.zeros((capacity,), a.dtype) for a in arr_loc)
+    # payload slabs relocate on the leading axis; trailing axes ride
+    # along untouched (expert weight matrices are just bigger rows)
+    outs = tuple(jnp.zeros((capacity,) + a.shape[1:], a.dtype)
+                 for a in arr_loc)
     out_owner = jnp.zeros((capacity,), jnp.int32)
     buf = (owner_loc,) + tuple(arr_loc)
     for s in range(D):
@@ -467,9 +470,10 @@ def _ring_exchange_spill(owner_loc, arr_loc, *, live, counts,
                      jnp.cumsum(keep.astype(jnp.int32)) - 1, capacity)
     out_owner = jnp.zeros((capacity,), jnp.int32).at[kpos].set(
         owner_loc, mode="drop")
-    outs = tuple(jnp.zeros((capacity,), a.dtype).at[kpos].set(a,
-                                                              mode="drop")
-                 for a in arr_loc)
+    outs = tuple(
+        jnp.zeros((capacity,) + a.shape[1:], a.dtype).at[kpos].set(
+            a, mode="drop")
+        for a in arr_loc)
     buf = (owner_loc, admitted.astype(jnp.int32), rank) + tuple(arr_loc)
     shift = [(d, (d - 1) % D) for d in range(D)]
     for s in range(1, D):

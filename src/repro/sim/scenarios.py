@@ -25,7 +25,12 @@ Registered workloads:
                       synthetic workload captured via ``record_trace``)
                       with prefix-sharing star+ring comm edges — sessions
                       are the persistently interacting objects, replicas
-                      the nodes.
+                      the nodes;
+  routing-skew      — recorded MoE expert-routing trace
+                      (train/ep_runtime.py's skewed top-k workload):
+                      experts are the objects, EP ranks the nodes, loads
+                      are EMA routed tokens and edges the strongest
+                      co-activation pairs.
 """
 from __future__ import annotations
 
@@ -147,6 +152,9 @@ def batch_instances(batch: int = 16, *, grid: int = 16, num_nodes: int = 16):
         "serving-trace": lambda v: dict(
             num_sessions=grid * grid, num_replicas=num_nodes,
             burst_period=20 + 5 * v, seed=v),
+        "routing-skew": lambda v: dict(
+            num_experts=grid * grid, num_ranks=num_nodes,
+            drift_period=12 + 4 * v, seed=v),
     }
     missing = sorted(set(SCENARIOS) - set(variants))
     if missing:
@@ -376,4 +384,87 @@ register(Scenario(
     defaults=dict(num_sessions=256, num_replicas=16, group_size=4,
                   trace_len=64, turn_period=12, turn_len=6, burst_waves=4,
                   burst_period=25, burst_amp=3.0, seed=0),
+))
+
+
+# ---------------------------------------------------------- routing skew --
+
+
+def _routing_skew(*, num_experts: int = 64, num_ranks: int = 8,
+                  top_k: int = 4, tokens_per_step: int = 1024,
+                  trace_len: int = 48, alpha: float = 1.0,
+                  hot_frac: float = 0.25, hot_amp: float = 4.0,
+                  drift_period: int = 16, edges_per_expert: int = 4,
+                  ema: float = 0.9, seed: int = 0):
+    """Recorded MoE expert-routing trace as a registry workload.
+
+    Captures ``trace_len`` steps of ``train.ep_runtime.RoutingWorkload``'s
+    skewed drifting top-k traffic and replays the **EMA** routing
+    statistics through the scenario interface: experts are the objects,
+    EP ranks the nodes, loads are the EMA tokens-per-expert and the comm
+    graph is the static set of strongest co-activation pairs (top
+    ``edges_per_expert·E`` by total EMA co-activation over the trace,
+    plus a ring floor for connectivity) with weights re-read from the
+    recorded per-step EMA co-activation each step.  The table loops past
+    its length, so any replay horizon works."""
+    from repro.distributed import ep_balance  # local: heavier deps
+    from repro.train import ep_runtime
+
+    E = num_experts
+    w = ep_runtime.RoutingWorkload(
+        num_experts=E, num_ranks=num_ranks, top_k=top_k,
+        tokens_per_step=tokens_per_step, alpha=alpha, hot_frac=hot_frac,
+        hot_amp=hot_amp, drift_period=drift_period, trace_len=trace_len,
+        seed=seed)
+    ids = w.ids_table()                              # (L, T, k)
+    L = trace_len
+    counts = np.zeros((L, E), np.float32)
+    coact = np.zeros((L, E, E), np.float32)
+    run_c = np.zeros(E)
+    run_x = np.zeros((E, E))
+    for t in range(L):
+        c, x = ep_balance.pair_stats_np(ids[t], E)
+        run_c = ema * run_c + (1.0 - ema) * c
+        run_x = ema * run_x + (1.0 - ema) * x
+        counts[t] = run_c
+        coact[t] = run_x
+    # static edge set: strongest persistent co-activation pairs + ring
+    iu, ju = np.triu_indices(E, k=1)
+    tot = coact.sum(axis=0)[iu, ju]
+    M = min(len(iu), edges_per_expert * E)
+    top = np.sort(np.argpartition(-tot, M - 1)[:M])
+    ring = {(i, (i + 1) % E) for i in range(E)}
+    ring |= {(j, i) for i, j in ring if i > j}
+    pairs = sorted({(int(iu[m]), int(ju[m])) for m in top}
+                   | {(min(a, b), max(a, b)) for a, b in ring})
+    es = np.asarray([a for a, _ in pairs], np.int32)
+    ed = np.asarray([b for _, b in pairs], np.int32)
+    ew_table = jnp.asarray(coact[:, es, ed] + 1e-3)  # (L, M') weights
+    counts_t = jnp.asarray(counts)
+    cap = E // num_ranks
+    assignment = (jnp.arange(E, dtype=jnp.int32) // cap).astype(jnp.int32)
+
+    problem = comm_graph.LBProblem(
+        loads=finite_loads(counts_t[0]), assignment=assignment,
+        edges_src=jnp.asarray(es), edges_dst=jnp.asarray(ed),
+        edges_bytes=ew_table[0], num_nodes=num_ranks)
+
+    def evolve(p: comm_graph.LBProblem, t) -> comm_graph.LBProblem:
+        row = jnp.mod(jnp.asarray(t, jnp.int32), L)
+        return dataclasses.replace(
+            p, loads=finite_loads(counts_t[row]),
+            edges_bytes=ew_table[row])
+
+    return problem, evolve
+
+
+register(Scenario(
+    "routing-skew",
+    "recorded MoE expert-routing trace: EMA tokens-per-expert loads and "
+    "co-activation comm edges over EP ranks (train/ep_runtime.py)",
+    _routing_skew,
+    defaults=dict(num_experts=64, num_ranks=8, top_k=4,
+                  tokens_per_step=1024, trace_len=48, alpha=1.0,
+                  hot_frac=0.25, hot_amp=4.0, drift_period=16,
+                  edges_per_expert=4, ema=0.9, seed=0),
 ))

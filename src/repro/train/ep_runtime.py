@@ -1,0 +1,682 @@
+"""Live MoE expert rebalancing inside the train step (DESIGN.md §3.1).
+
+The expert-placement runtime closes the loop that ``distributed/
+ep_balance.py`` only planned: router statistics accumulate **on device**
+inside the training scan, the runtime trigger machinery decides *when*
+to replace the placement, the Strategy registry plans *where* every
+expert goes, and the placement delta executes as an **expert-weight
+exchange** whose measured bytes feed the predictive gate.  Three layers:
+
+  * :func:`run_ep_replay` — the self-contained replay driver (mirrors
+    ``serve/replay.py``): a :class:`RoutingWorkload` emits recorded
+    top-k routing ids; one ``lax.scan`` carries the EMA token/
+    co-activation statistics as fixed-shape arrays (updated from the ids
+    via ``models.moe.pair_stats`` — one one-hot matmul, no host
+    ``np.add.at`` loop), runs ``runtime.triggers`` on the expert-load
+    skew, plans through the jitted ``LBEngine`` strategies followed by
+    the jittable ``ep_balance.repair_capacity`` pass, and executes fired
+    placements over the expert slabs with
+    ``runtime.migrate.build_and_apply``.  The host path executes the
+    same jnp expression graphs eagerly, so fire steps, placements and
+    moved bytes agree **bit-for-bit** across paths; ``mesh``/
+    ``num_shards`` runs the fired exchange as a ``ppermute`` ring
+    all-to-all (``migrate.migrate_sharded``) whose strict layout
+    contract reproduces the single-device trajectory exactly (capacity-
+    exact placements make every shard prefix dense).
+  * :func:`execute_placement` — the eager entry for **real** MoE
+    parameters: relocates every per-slot weight tensor (``wi``/``wg``/
+    ``wo`` on the expert axis, ``router`` on its column axis) by the
+    manifest permutation, or — given a mesh — as the ring exchange on
+    the "model" axis with the weight matrices flattened to slot-leading
+    payload slabs.  Returns the executed moved-byte count.
+  * :class:`EPRebalancer` — the train-loop driver ``launch/train.py``
+    uses: consumes the ``router_counts``/``router_coact`` metrics the
+    train step surfaces (``collect_router_stats=True``), converts
+    physical-slot statistics to logical-expert statistics through the
+    tracked ``slot_expert`` permutation, and fires
+    plan → repair → :func:`execute_placement`, feeding the trigger the
+    bytes the exchange actually moved (replacing ``ep_balance
+    .migration_bytes``'s modeled estimate).
+
+Object/load/edge mapping (the paper's persistently interacting objects):
+objects = experts, loads = EMA routed tokens, edges = co-activation
+counts, nodes = EP ranks, migration = expert-weight traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_graph, engine
+from repro.distributed import ep_balance
+from repro.models import moe as moe_mod
+from repro.runtime import migrate as rt_migrate
+from repro.runtime import triggers as rt_triggers
+
+LOAD_FLOOR = 1e-3
+
+
+# ------------------------------------------------------------- workloads --
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingWorkload:
+    """Synthetic skewed top-k routing traffic (pure function of t).
+
+    Expert popularity is Zipf-like (``(rank+1)^-alpha`` over a random
+    expert order) with a rotating *hotspot*: every ``drift_period``
+    steps the hot block of ``hot_frac·E`` experts advances, and hot
+    experts' popularity multiplies by ``1 + hot_amp`` — the slow load
+    drift the balancer must chase.  ``trace_len`` steps of (T, k) routed
+    ids are drawn once per instance (cached numpy, seeded) and loop when
+    replayed past the end.  Hashable (frozen scalars only), so compiled
+    replay runners cache across calls."""
+
+    num_experts: int = 64
+    num_ranks: int = 8
+    top_k: int = 4
+    tokens_per_step: int = 2048
+    alpha: float = 1.0
+    hot_frac: float = 0.25
+    hot_amp: float = 4.0
+    drift_period: int = 16
+    trace_len: int = 64
+    weight_bytes: float = 2048.0   # per-expert weight size (exchange unit)
+    seed: int = 0
+
+    def ids_table(self) -> np.ndarray:
+        """(trace_len, T, k) i32 routed expert ids."""
+        return _routing_tables(self)
+
+    def ids_at(self, t) -> jax.Array:
+        tab = jnp.asarray(self.ids_table())
+        return tab[jnp.mod(jnp.asarray(t, jnp.int32), tab.shape[0])]
+
+
+@functools.lru_cache(maxsize=64)
+def _routing_tables(w: RoutingWorkload) -> np.ndarray:
+    """Draw the recorded routing trace (numpy, cached — see
+    ``serve.replay._serve_tables`` for why numpy and not jnp)."""
+    rng = np.random.default_rng(w.seed)
+    E, T, k = w.num_experts, w.tokens_per_step, w.top_k
+    base = (np.argsort(rng.permutation(E)) + 1.0) ** (-w.alpha)
+    hot_n = max(1, int(round(w.hot_frac * E)))
+    ids = np.empty((w.trace_len, T, k), np.int32)
+    for t in range(w.trace_len):
+        epoch = t // max(1, w.drift_period)
+        hot = (np.arange(hot_n) + epoch * hot_n) % E
+        p = base.copy()
+        p[hot] *= 1.0 + w.hot_amp
+        p /= p.sum()
+        ids[t] = rng.choice(E, size=(T, k), p=p)
+    return ids
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jnp fields
+class RoutingTrace:
+    """Trace-driven routing workload: a recorded ``(L, T, k)`` id table.
+
+    Instances hash by identity, so reusing one instance reuses the
+    compiled runner (mirrors ``serve.replay.TraceWorkload``)."""
+
+    table: jax.Array              # (L, T, k) i32 routed ids
+    num_experts: int
+    num_ranks: int = 8
+    weight_bytes: float = 2048.0
+
+    @property
+    def top_k(self) -> int:
+        return int(self.table.shape[2])
+
+    @property
+    def tokens_per_step(self) -> int:
+        return int(self.table.shape[1])
+
+    def ids_at(self, t) -> jax.Array:
+        return self.table[jnp.mod(jnp.asarray(t, jnp.int32),
+                                  self.table.shape[0])]
+
+
+def record_routing(workload, *, steps: int) -> RoutingTrace:
+    """Capture ``steps`` routing steps into a :class:`RoutingTrace`
+    (the ``routing-skew`` scenario's source)."""
+    rows = jax.jit(jax.vmap(workload.ids_at))(
+        jnp.arange(steps, dtype=jnp.int32))
+    return RoutingTrace(
+        table=jnp.asarray(rows, jnp.int32),
+        num_experts=int(workload.num_experts),
+        num_ranks=int(workload.num_ranks),
+        weight_bytes=float(workload.weight_bytes))
+
+
+# --------------------------------------------------------------- results --
+
+
+@dataclasses.dataclass
+class EPReplayResult:
+    """Per-step records + final placement of one rebalancing replay."""
+
+    max_avg: np.ndarray           # (T,) post-LB expert-load imbalance
+    lb_fired: np.ndarray          # (T,) 0/1 trigger decisions
+    moved_experts: np.ndarray     # (T,) experts exchanged at that step
+    moved_bytes: np.ndarray       # (T,) executed weight transfer volume
+    final_placement: np.ndarray   # (E,) logical expert → rank
+    final_slot_expert: np.ndarray  # (E,) physical slot → logical expert
+    final_wsig: np.ndarray        # (E, d) relocated payload signature
+    scanned: bool = False
+    sharded: bool = False
+    wall_seconds: float = 0.0
+
+    @property
+    def total_moved_bytes(self) -> float:
+        return float(self.moved_bytes.sum())
+
+
+# ------------------------------------------------------------- step body --
+
+
+def _sig0(E: int, d: int = 4) -> jax.Array:
+    """Deterministic (E, d) payload signature — a stand-in expert-weight
+    slab that makes relocation observable (conservation tests check the
+    exact row set survives every exchange)."""
+    return (jnp.arange(E, dtype=jnp.float32)[:, None] * d
+            + jnp.arange(d, dtype=jnp.float32)[None, :])
+
+
+def _edge_template(E: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static all-upper-tri edge list + ring-connectivity mask.
+
+    The in-scan problem needs fixed shapes, so every expert pair is an
+    edge; weights come from the live co-activation matrix with an eps
+    floor on the ring pairs (i, i+1), (0, E-1) to keep the comm graph
+    connected before any co-activation accumulates (the fixed-shape twin
+    of ``ep_balance.build_problem``'s fallback)."""
+    iu, ju = np.triu_indices(E, k=1)
+    ring = (ju == iu + 1) | ((iu == 0) & (ju == E - 1))
+    return iu.astype(np.int32), ju.astype(np.int32), ring
+
+
+def _make_parts(workload, trig, plan, R: int, E: int, lb_on: bool,
+                bytes_per_load: float, ema: float):
+    """The shared jnp step pieces — one source of truth for every path.
+
+    ``pre`` accumulates routing statistics and decides; ``fire``/
+    ``nofire`` are the two exchange branches (identical signatures, so
+    the scanned path puts them under ``lax.cond`` and the host path
+    picks one after a device sync — same compiled graphs either way);
+    ``post`` observes the measured moved bytes and records."""
+    cap = E // R
+    iu, ju, ring = _edge_template(E)
+    iu_j, ju_j = jnp.asarray(iu), jnp.asarray(ju)
+    ring_j = jnp.asarray(ring, jnp.float32)
+    bpe = jnp.float32(workload.weight_bytes)
+
+    def pre(slot_expert, wsig, placement, tokens, coact, tstate, t):
+        st = moe_mod.pair_stats(workload.ids_at(t), E)
+        tokens = ema * tokens + (1.0 - ema) * st.counts
+        coact = ema * coact + (1.0 - ema) * st.coact
+        if lb_on:
+            mx, av, tot = rt_triggers.load_stats(
+                jnp.maximum(tokens, LOAD_FLOOR), placement, R)
+            do, tstate = trig.decide(tstate, t, mx, av, tot)
+        else:
+            do = jnp.asarray(False)
+        return tokens, coact, do, tstate
+
+    def _problem(placement, tokens, coact):
+        ew = coact[iu_j, ju_j] + jnp.float32(LOAD_FLOOR) * ring_j
+        return comm_graph.LBProblem(
+            loads=jnp.maximum(tokens, LOAD_FLOOR).astype(jnp.float32),
+            assignment=placement, edges_src=iu_j, edges_dst=ju_j,
+            edges_bytes=ew.astype(jnp.float32), num_nodes=R)
+
+    def plan_placement(placement, tokens, coact):
+        """Capacity-exact new logical placement for a fired step."""
+        new, _ = plan(_problem(placement, tokens, coact))
+        return ep_balance.repair_capacity(
+            new.astype(jnp.int32), tokens, num_ranks=R, cap=cap)
+
+    def fire(slot_expert, wsig, placement, tokens, coact, t):
+        newp = plan_placement(placement, tokens, coact)
+        oo = jnp.take(placement, slot_expert)      # == slot // cap
+        on = jnp.take(newp, slot_expert)
+        (se2, ws2), man = rt_migrate.build_and_apply(
+            oo, on, (slot_expert, wsig), num_nodes=R)
+        moved_n = man.moved_count.astype(jnp.float32)
+        return se2, ws2, newp, moved_n, man.moved_bytes(bpe)
+
+    def nofire(slot_expert, wsig, placement, tokens, coact, t):
+        return (slot_expert, wsig, placement, jnp.float32(0.0),
+                jnp.float32(0.0))
+
+    def post(placement, tokens, tstate, do, moved_b, t):
+        tstate = trig.observe(
+            tstate, moved_b / jnp.float32(bytes_per_load), do)
+        mx, av, _ = rt_triggers.load_stats(
+            jnp.maximum(tokens, LOAD_FLOOR), placement, R)
+        return tstate, mx / av
+
+    return pre, plan_placement, fire, nofire, post
+
+
+def _initial_state(workload, ema_unused=None):
+    E = int(workload.num_experts)
+    R = int(workload.num_ranks)
+    cap = E // R
+    slot_expert = jnp.arange(E, dtype=jnp.int32)
+    placement = (slot_expert // cap).astype(jnp.int32)
+    tokens = jnp.zeros((E,), jnp.float32)
+    coact = jnp.zeros((E, E), jnp.float32)
+    return slot_expert, _sig0(E), placement, tokens, coact
+
+
+def _resolve(workload, strategy, strategy_kwargs, trigger, lb_every):
+    strat = engine.get_strategy(
+        ep_balance._ALIASES.get(strategy, strategy))
+    kw = dict(strategy_kwargs or {})
+    if strat.variant is not None:
+        kw.setdefault("k", max(1, min(4, int(workload.num_ranks) - 1)))
+    trig = rt_triggers.resolve_for_strategy(
+        trigger, lb_every=lb_every, strategy=strategy)
+    cost = getattr(trig, "cost", None)
+    bpl = float(cost.bytes_per_load) if cost is not None else 1.0
+    lb_on = strategy != "none" and not trig.never
+    return strat, kw, trig, bpl, lb_on
+
+
+# ---------------------------------------------------------- scanned path --
+
+
+@functools.lru_cache(maxsize=64)
+def _scanned_ep_runner(workload, steps: int, strategy: str,
+                       kw_items: tuple, trig, lb_every: int, ema: float):
+    strat = engine.get_strategy(
+        ep_balance._ALIASES.get(strategy, strategy))
+    plan = strat.bind(**dict(kw_items))
+    E, R = int(workload.num_experts), int(workload.num_ranks)
+    cost = getattr(trig, "cost", None)
+    bpl = float(cost.bytes_per_load) if cost is not None else 1.0
+    lb_on = strategy != "none" and not trig.never
+    pre, _, fire, nofire, post = _make_parts(
+        workload, trig, plan, R, E, lb_on, bpl, ema)
+
+    def step(carry, t):
+        se, ws, placement, tokens, coact, tstate = carry
+        tokens, coact, do, tstate = pre(
+            se, ws, placement, tokens, coact, tstate, t)
+        se, ws, placement, moved_n, moved_b = jax.lax.cond(
+            do, fire, nofire, se, ws, placement, tokens, coact, t)
+        tstate, ma = post(placement, tokens, tstate, do, moved_b, t)
+        return (se, ws, placement, tokens, coact, tstate), (
+            ma, do.astype(jnp.float32), moved_n, moved_b)
+
+    def run(se, ws, placement, tokens, coact):
+        return jax.lax.scan(
+            step, (se, ws, placement, tokens, coact, trig.init_state()),
+            jnp.arange(steps))
+
+    return jax.jit(run)
+
+
+# ------------------------------------------------------------ host paths --
+
+
+def _host_ep_loop(workload, steps, strategy, kw, trig, ema, *, mesh=None):
+    """Eager replay: the scanned step pieces executed one step at a time.
+
+    ``mesh`` switches the fired exchange to ``migrate.migrate_sharded``
+    (ring all-to-all under shard_map) in strict mode with the exact
+    per-shard budget ``E // D`` — capacity-exact placements fill every
+    shard's slab completely, so the strict layout contract makes the
+    reassembled slabs bit-for-bit the single-device result with no
+    prefix bookkeeping."""
+    strat = engine.get_strategy(
+        ep_balance._ALIASES.get(strategy, strategy))
+    plan = strat.bind(**kw) if strat.jittable else None
+    E, R = int(workload.num_experts), int(workload.num_ranks)
+    cap = E // R
+    cost = getattr(trig, "cost", None)
+    bpl = float(cost.bytes_per_load) if cost is not None else 1.0
+    lb_on = strategy != "none" and not trig.never
+    pre, plan_placement, fire, nofire, post = _make_parts(
+        workload, trig, plan, R, E, lb_on, bpl, ema)
+    pre_j, post_j = jax.jit(pre), jax.jit(post)
+    fire_j, nofire_j = jax.jit(fire), jax.jit(nofire)
+    plan_j = jax.jit(plan_placement) if strat.jittable else None
+
+    def host_plan(placement, tokens, coact):
+        """Host-baseline planning (ep-greedy & co): eager Strategy.run
+        on the same device-built stats, then the same jittable repair."""
+        stats = ep_balance.ExpertStats(
+            num_experts=E, ema=0.0,
+            tokens=np.asarray(tokens, np.float64),
+            coact=np.asarray(coact, np.float64))
+        new, _ = ep_balance.plan_placement(
+            stats, np.asarray(placement), R,
+            strategy=strategy, **({"k": kw["k"]} if "k" in kw else {}))
+        return jnp.asarray(new, jnp.int32)
+
+    se, ws, placement, tokens, coact = _initial_state(workload)
+    tstate = trig.init_state()
+    recs = []
+    for ti in range(steps):
+        t = jnp.int32(ti)
+        tokens, coact, do, tstate = pre_j(
+            se, ws, placement, tokens, coact, tstate, t)
+        fired = bool(do)
+        if not fired:
+            se, ws, placement, moved_n, moved_b = nofire_j(
+                se, ws, placement, tokens, coact, t)
+        elif mesh is not None or plan_j is None:
+            getter = plan_j or host_plan
+            newp = jnp.asarray(getter(placement, tokens, coact),
+                               jnp.int32)
+            oo = jnp.take(placement, se)
+            on = jnp.take(newp, se)
+            moved = on != oo
+            moved_n = moved.sum().astype(jnp.float32)
+            moved_b = moved_n * jnp.float32(workload.weight_bytes)
+            if mesh is None:
+                (se, ws), man = rt_migrate.migrate(
+                    oo, on, (se, ws), num_nodes=R)
+            else:
+                D = int(np.prod(mesh.devices.shape))
+                _, (se, ws), counts = rt_migrate.migrate_sharded(
+                    on, (se, ws), num_nodes=R, mesh=mesh,
+                    capacity=E // D)
+                assert (np.asarray(counts) == E // D).all(), \
+                    "capacity-exact placement must fill every shard"
+                se = jnp.asarray(se, jnp.int32)
+                ws = jnp.asarray(ws, jnp.float32)
+            placement = newp
+        else:
+            se, ws, placement, moved_n, moved_b = fire_j(
+                se, ws, placement, tokens, coact, t)
+        tstate, ma = post_j(placement, tokens, tstate, do, moved_b, t)
+        recs.append((float(ma), 1.0 if fired else 0.0, float(moved_n),
+                     float(moved_b)))
+    return se, ws, placement, recs
+
+
+# ------------------------------------------------------------- the entry --
+
+
+def run_ep_replay(
+    workload,
+    *,
+    steps: int,
+    strategy: str = "diff-comm",
+    strategy_kwargs: Optional[Dict] = None,
+    trigger=None,
+    lb_every: int = 10,
+    ema: float = 0.9,
+    scan: Optional[bool] = None,
+    num_shards: Optional[int] = None,
+    mesh=None,
+) -> EPReplayResult:
+    """Replay ``steps`` training steps of live expert rebalancing.
+
+    ``scan=None`` auto-selects the scanned path for jittable strategies
+    (host baselines like ``"greedy"``/``"ep-greedy"`` run the eager loop
+    with the same executed exchange).  ``trigger`` resolves through
+    ``runtime.triggers.resolve_for_strategy`` — the predictive policy
+    amortizes fires against the **measured** weight bytes of the
+    previous exchange.  ``num_shards`` / ``mesh`` execute fired
+    exchanges as ring all-to-alls under ``shard_map`` (bit-for-bit the
+    single-device trajectory); ``E`` and ``num_ranks`` must divide the
+    shard count."""
+    strat, kw, trig, _bpl, _lb_on = _resolve(
+        workload, strategy, strategy_kwargs, trigger, lb_every)
+    E, R = int(workload.num_experts), int(workload.num_ranks)
+    if E % R:
+        raise ValueError(f"num_experts={E} must divide num_ranks={R}")
+    sharded = mesh is not None or num_shards is not None
+    if sharded:
+        if scan:
+            raise ValueError(
+                "the sharded rebalancing replay is a host-driven loop; "
+                "pass scan=False/None")
+        from repro.distributed import replay_shard
+
+        mesh = replay_shard.resolve_mesh(mesh, num_shards, (E, R))
+        scan = False
+    if scan is None:
+        scan = strat.jittable
+    if scan and not strat.jittable:
+        raise ValueError(
+            f"strategy {strategy!r} is not jittable; the scanned replay "
+            "needs a traceable plan_fn (use scan=False or a diff-* "
+            "strategy)")
+    t0 = time.perf_counter()
+    if scan:
+        runner = _scanned_ep_runner(
+            workload, int(steps), strategy, tuple(sorted(kw.items())),
+            trig, int(lb_every), float(ema))
+        (se, ws, placement, _, _, _), ys = runner(
+            *_initial_state(workload))
+        ma, fired, moved_n, moved_b = jax.device_get(ys)
+        recs = np.stack([ma, fired, moved_n, moved_b], axis=1)
+    else:
+        se, ws, placement, rec_list = _host_ep_loop(
+            workload, int(steps), strategy, kw, trig, float(ema),
+            mesh=mesh)
+        recs = np.asarray(rec_list, np.float64).reshape(int(steps), 4)
+    return EPReplayResult(
+        max_avg=np.asarray(recs[:, 0], np.float64),
+        lb_fired=np.asarray(recs[:, 1], np.float64),
+        moved_experts=np.asarray(recs[:, 2], np.float64),
+        moved_bytes=np.asarray(recs[:, 3], np.float64),
+        final_placement=np.asarray(placement, np.int32),
+        final_slot_expert=np.asarray(se, np.int32),
+        final_wsig=np.asarray(ws, np.float32),
+        scanned=bool(scan), sharded=bool(sharded),
+        wall_seconds=time.perf_counter() - t0)
+
+
+# ------------------------------------------- real-weight execution layer --
+
+
+#: the per-expert-slot tensors of a MoE layer; everything else in the
+#: param dict (shared-expert weights, biases) has no expert axis and
+#: rides no exchange
+EXPERT_KEYS = ("wi", "wg", "wo", "router")
+
+
+def _expert_axis(key: str, ndim: int) -> int:
+    """Expert axis of a per-expert MoE parameter, layout-agnostic.
+
+    ``wi``/``wg``/``wo`` are (..., E, D, F)-shaped (a leading group axis
+    may or may not be stacked on), the ``router`` is (..., D, E)."""
+    return ndim - 1 if key == "router" else ndim - 3
+
+
+def _expert_items(moe_params: Dict):
+    for k in EXPERT_KEYS:
+        if k in moe_params:
+            yield k, jnp.asarray(moe_params[k])
+
+
+def apply_order_to_moe(moe_params: Dict, order) -> Dict:
+    """Gather every per-slot tensor of one MoE layer by the manifest
+    permutation (slot ``p`` of the relocated layout holds old slot
+    ``order[p]``); non-expert tensors pass through untouched."""
+    order = jnp.asarray(order, jnp.int32)
+    out = dict(moe_params)
+    for k, v in _expert_items(moe_params):
+        out[k] = jnp.take(v, order, axis=_expert_axis(k, v.ndim))
+    return out
+
+
+def expert_param_bytes(moe_layers: Sequence[Dict]) -> float:
+    """Weight bytes resident per expert slot, summed over MoE layers —
+    the exchange unit :func:`execute_placement` reports moved volume in."""
+    total = 0.0
+    for layer in moe_layers:
+        for k, v in _expert_items(layer):
+            E = v.shape[_expert_axis(k, v.ndim)]
+            total += v.size * jnp.dtype(v.dtype).itemsize / float(E)
+    return total
+
+
+def execute_placement(moe_layers: Sequence[Dict], slot_expert,
+                      new_placement, *, num_ranks: int, mesh=None):
+    """Relocate real expert weights to a new logical placement.
+
+    ``moe_layers`` is the sequence of MoE parameter dicts sharing one
+    placement (the transformer accumulates router statistics across
+    layers, so one plan serves all of them); ``slot_expert`` maps
+    physical slot → logical expert and ``new_placement`` maps logical
+    expert → rank (capacity-exact).  Single-device, the relocation is
+    the manifest gather; with ``mesh`` it executes as the ``ppermute``
+    ring all-to-all on the model axis (``migrate.migrate_sharded``) with
+    each weight tensor flattened to a slot-leading payload slab — the
+    strict layout contract plus capacity-exactness reassemble the
+    single-device layout bit-for-bit.
+
+    Returns ``(new_layers, new_slot_expert, moved_experts,
+    moved_bytes)`` — the **measured** exchange volume (moved slots ×
+    resident bytes per slot), the number the trigger's ``observe``
+    feedback should see instead of ``ep_balance.migration_bytes``'s
+    model."""
+    slot_expert = jnp.asarray(slot_expert, jnp.int32)
+    E = int(slot_expert.shape[0])
+    R = int(num_ranks)
+    cap = E // R
+    oo = (jnp.arange(E, dtype=jnp.int32) // cap)
+    on = jnp.take(jnp.asarray(new_placement, jnp.int32), slot_expert)
+    bpe = expert_param_bytes(moe_layers)
+    if mesh is None:
+        man = rt_migrate.build_manifest(oo, on, R)
+        new_layers = [apply_order_to_moe(layer, man.order)
+                      for layer in moe_layers]
+        se2 = jnp.take(slot_expert, man.order)
+        moved = int(man.moved_count)
+        return new_layers, se2, moved, moved * bpe
+    D = int(np.prod(mesh.devices.shape))
+    if E % D or R % D:
+        raise ValueError(
+            f"E={E} and num_ranks={R} must divide the {D}-device mesh")
+    # flatten every per-expert tensor to a slot-leading (E, ...) slab;
+    # trailing axes ride the exchange unchanged (the N-D ring payload
+    # path); shared-expert tensors stay put
+    keys = [[k for k, _ in _expert_items(layer)] for layer in moe_layers]
+    slabs, shapes = [], []
+    for layer, ks in zip(moe_layers, keys):
+        for k in ks:
+            v = jnp.asarray(layer[k])
+            ax = _expert_axis(k, v.ndim)
+            lead = jnp.moveaxis(v, ax, 0)
+            slabs.append(lead.reshape(E, -1))
+            shapes.append((ax, lead.shape, v.dtype))
+    _, outs, counts = rt_migrate.migrate_sharded(
+        on, (slot_expert,) + tuple(slabs), num_nodes=R, mesh=mesh,
+        capacity=E // D)
+    if not (np.asarray(counts) == E // D).all():
+        raise ValueError(
+            "capacity-exact placement must fill every shard slab")
+    se2 = jnp.asarray(outs[0], jnp.int32)
+    new_layers, i = [], 1
+    for layer, ks in zip(moe_layers, keys):
+        out = dict(layer)
+        for k in ks:
+            ax, lead_shape, dt = shapes[i - 1]
+            out[k] = jnp.moveaxis(
+                jnp.asarray(outs[i], dt).reshape(lead_shape), 0, ax)
+            i += 1
+        new_layers.append(out)
+    moved = int(jnp.sum(on != oo))
+    return new_layers, se2, moved, moved * bpe
+
+
+class EPRebalancer:
+    """Trigger-driven live rebalancer for the training loop.
+
+    ``launch/train.py`` holds one of these and calls :meth:`step` after
+    every train step with the ``router_counts``/``router_coact`` metrics
+    the model accumulated on device (``collect_router_stats=True``).
+    Those statistics are keyed by **physical slot** (the router's ids
+    index the stacked weight arrays); the rebalancer converts them to
+    logical-expert statistics through the tracked ``slot_expert``
+    permutation, feeds the EMA :class:`ep_balance.ExpertStats`, runs the
+    resolved trigger on the rank-load skew, and on fire plans through
+    :func:`ep_balance.plan_placement` (Strategy registry + jittable
+    capacity repair) and **executes** the delta with
+    :func:`execute_placement` — observing the measured moved bytes, not
+    a model."""
+
+    def __init__(self, num_experts: int, num_ranks: int, *,
+                 strategy: str = "diff-comm", trigger=None,
+                 lb_every: int = 50, ema: float = 0.9):
+        E, R = int(num_experts), int(num_ranks)
+        assert E % R == 0
+        self.num_experts, self.num_ranks = E, R
+        self.strategy = strategy
+        self.stats = ep_balance.ExpertStats(num_experts=E, ema=ema)
+        self.trig = rt_triggers.resolve_for_strategy(
+            trigger, lb_every=lb_every, strategy=strategy)
+        cost = getattr(self.trig, "cost", None)
+        self.bytes_per_load = (float(cost.bytes_per_load)
+                               if cost is not None else 1.0)
+        self.tstate = self.trig.init_state()
+        self.slot_expert = np.arange(E, dtype=np.int32)
+        self.history: list = []
+
+    @property
+    def placement(self) -> np.ndarray:
+        """(E,) logical expert → rank, derived from ``slot_expert``."""
+        cap = self.num_experts // self.num_ranks
+        pos = np.empty(self.num_experts, np.int64)
+        pos[self.slot_expert] = np.arange(self.num_experts)
+        return (pos // cap).astype(np.int32)
+
+    def _to_logical(self, counts, coact):
+        """Physical-slot stats → logical-expert stats (scatter by the
+        slot_expert permutation on both axes)."""
+        se = self.slot_expert
+        E = self.num_experts
+        lc = np.zeros(E)
+        lc[se] = np.asarray(counts, np.float64)
+        co = np.zeros((E, E))
+        co[np.ix_(se, se)] = np.asarray(coact, np.float64)
+        return lc, co
+
+    def step(self, t: int, counts, coact, moe_layers: Sequence[Dict],
+             *, mesh=None):
+        """One post-train-step tick.  Returns ``(moe_layers, info)`` —
+        the (possibly relocated) MoE parameter dicts and a record with
+        the trigger decision and measured exchange volume."""
+        lc, co = self._to_logical(counts, coact)
+        self.stats.update_from_counts(lc, co)
+        placement = self.placement
+        mx, av, tot = rt_triggers.load_stats(
+            jnp.asarray(np.maximum(self.stats.tokens, LOAD_FLOOR),
+                        jnp.float32),
+            jnp.asarray(placement), self.num_ranks)
+        do, self.tstate = self.trig.decide(
+            self.tstate, jnp.int32(t), mx, av, tot)
+        fired = bool(do)
+        moved, moved_bytes = 0, 0.0
+        info: Dict = dict(t=int(t), fired=fired,
+                          max_avg=float(mx / av))
+        if fired:
+            new, plan_info = ep_balance.plan_placement(
+                self.stats, placement, self.num_ranks,
+                strategy=self.strategy)
+            moe_layers, se2, moved, moved_bytes = execute_placement(
+                moe_layers, self.slot_expert, new,
+                num_ranks=self.num_ranks, mesh=mesh)
+            self.slot_expert = np.asarray(se2, np.int32)
+            info.update(moved_experts=int(moved),
+                        moved_bytes=float(moved_bytes),
+                        plan=plan_info)
+        self.tstate = self.trig.observe(
+            self.tstate,
+            jnp.float32(moved_bytes / self.bytes_per_load), do)
+        self.history.append(info)
+        return moe_layers, info

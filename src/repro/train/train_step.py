@@ -19,9 +19,12 @@ from repro.models.config import ModelConfig
 from repro.train import optimizer as opt_mod
 
 
-def make_loss(cfg: ModelConfig, remat: str = "none") -> Callable:
+def make_loss(cfg: ModelConfig, remat: str = "none",
+              collect_router_stats: bool = False) -> Callable:
     def loss(params, batch):
-        return transformer.loss_fn(params, cfg, batch, remat=remat)
+        return transformer.loss_fn(
+            params, cfg, batch, remat=remat,
+            collect_router_stats=collect_router_stats)
     return loss
 
 
@@ -31,10 +34,17 @@ def make_train_step(
     *,
     remat: str = "none",
     grad_transform: Optional[Callable] = None,
+    collect_router_stats: bool = False,
 ) -> Callable:
     """``grad_transform(grads) -> grads`` hooks gradient compression
-    (distributed/grad_compress.py) between backward and update."""
-    loss = make_loss(cfg, remat)
+    (distributed/grad_compress.py) between backward and update.
+
+    ``collect_router_stats`` surfaces the MoE router's per-step
+    statistics (``router_counts`` (E,), ``router_coact`` (E, E)) in the
+    metrics dict — accumulated on device inside the model's layer scan,
+    so the expert-placement runtime (``train/ep_runtime.py``) never
+    replays routing on the host."""
+    loss = make_loss(cfg, remat, collect_router_stats)
 
     def step(params, opt_state, batch):
         (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(

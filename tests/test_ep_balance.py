@@ -105,3 +105,120 @@ def test_colocation_of_coactivated_experts():
     new, info = eb.plan_placement(stats, placement, R)
     # already-colocated pairs with balanced load: nothing should move
     assert info["moved_experts"] == 0
+
+
+# --------------------------------------------------- vectorized statistics --
+
+
+@pytest.mark.parametrize("E,k,T,seed", [(8, 2, 64, 0), (16, 4, 256, 1),
+                                        (32, 3, 128, 2), (4, 4, 512, 3)])
+def test_pair_stats_vectorized_matches_loop(E, k, T, seed):
+    """Property test: the one-shot CᵀC−diag update equals the historical
+    O(k²) pair loop — including rows with duplicate expert ids (top-k
+    samplers with replacement produce them)."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, E, size=(T, k))
+    c_vec, co_vec = eb.pair_stats_np(ids, E)
+    c_loop, co_loop = eb.pair_stats_loop(ids, E)
+    np.testing.assert_array_equal(c_vec, c_loop)
+    np.testing.assert_array_equal(co_vec, co_loop)
+    # structural invariants: symmetric, zero diagonal contribution rule
+    np.testing.assert_array_equal(co_vec, co_vec.T)
+
+
+def test_pair_stats_device_matches_host():
+    """``models.moe.pair_stats`` (the in-scan op) computes the identical
+    statistics as the host numpy twin the EMA collector uses."""
+    from repro.models import moe as moe_mod
+
+    rng = np.random.default_rng(7)
+    ids = rng.integers(0, 16, size=(128, 4))
+    st = moe_mod.pair_stats(jnp.asarray(ids), 16)
+    c_np, co_np = eb.pair_stats_np(ids, 16)
+    np.testing.assert_array_equal(np.asarray(st.counts), c_np)
+    np.testing.assert_array_equal(np.asarray(st.coact), co_np)
+
+
+def test_update_from_counts_matches_update():
+    """The device-stats EMA path and the raw-ids EMA path agree."""
+    rng = np.random.default_rng(5)
+    a = eb.ExpertStats(8, ema=0.7)
+    b = eb.ExpertStats(8, ema=0.7)
+    for _ in range(4):
+        ids = rng.integers(0, 8, size=(64, 2))
+        a.update(ids)
+        c, co = eb.pair_stats_np(ids, 8)
+        b.update_from_counts(c, co)
+    np.testing.assert_allclose(a.tokens, b.tokens)
+    np.testing.assert_allclose(a.coact, b.coact)
+
+
+# ------------------------------------------------------- capacity repair --
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_repair_capacity_is_exact(seed):
+    E, R = 24, 4
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, R, size=E).astype(np.int32)
+    loads = rng.uniform(0.1, 5.0, size=E).astype(np.float32)
+    out = np.asarray(eb.repair_capacity(a, loads, num_ranks=R, cap=E // R))
+    assert (np.bincount(out, minlength=R) == E // R).all()
+    # experts on non-overfull ranks never move
+    counts = np.bincount(a, minlength=R)
+    for e in range(E):
+        if counts[a[e]] <= E // R:
+            assert out[e] == a[e]
+
+
+def test_repair_capacity_evicts_lightest_first():
+    # rank 0 holds 5 experts (cap 2); the three lightest must leave
+    a = np.array([0, 0, 0, 0, 0, 1, 2, 3], np.int32)
+    loads = np.array([5.0, 1.0, 4.0, 2.0, 3.0, 1.0, 1.0, 1.0], np.float32)
+    out = np.asarray(eb.repair_capacity(a, loads, num_ranks=4, cap=2))
+    assert (np.bincount(out, minlength=4) == 2).all()
+    assert out[0] == 0 and out[2] == 0          # heaviest two stay
+    assert set(np.nonzero(out != a)[0]) == {1, 3, 4}
+
+
+def test_repair_capacity_traceable_in_scan():
+    """The repair pass must run inside lax.scan (the in-scan runtime
+    plans under a traced cond) and match the eager result bit-for-bit."""
+    E, R = 16, 4
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.integers(0, R, size=E), jnp.int32)
+    loads = jnp.asarray(rng.uniform(0.1, 2.0, size=E), jnp.float32)
+
+    def body(carry, _):
+        return eb.repair_capacity(carry, loads, num_ranks=R, cap=E // R), 0
+
+    scanned, _ = jax.lax.scan(body, a, jnp.arange(1))
+    eager = eb.repair_capacity(a, loads, num_ranks=R, cap=E // R)
+    np.testing.assert_array_equal(np.asarray(scanned), np.asarray(eager))
+
+
+# ------------------------------------------------------ strategy registry --
+
+
+def test_plan_placement_accepts_registered_strategies():
+    """plan_placement routes through the Strategy registry: the historic
+    "greedy" alias, the registered "ep-greedy", and any diff-* name."""
+    from repro.core import engine
+
+    assert "ep-greedy" in engine.available()
+    stats = _skewed_stats(seed=11)
+    placement = (np.arange(16) // 4).astype(np.int32)
+    # (diff-coord is registered too but needs coords, which expert
+    # comm graphs don't carry)
+    for name in ("greedy", "ep-greedy", "diff-comm",
+                 "diff-comm+predictive"):
+        new, info = eb.plan_placement(stats, placement, 4, strategy=name)
+        assert (np.bincount(new, minlength=4) == 4).all(), name
+
+
+def test_greedy_alias_matches_registered_greedy():
+    stats = _skewed_stats(seed=13)
+    placement = (np.arange(16) // 4).astype(np.int32)
+    a, _ = eb.plan_placement(stats, placement, 4, strategy="greedy")
+    b, _ = eb.plan_placement(stats, placement, 4, strategy="ep-greedy")
+    np.testing.assert_array_equal(a, b)
