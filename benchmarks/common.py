@@ -3,8 +3,9 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                          "bench")
@@ -15,6 +16,57 @@ def save_result(name: str, payload: Dict) -> str:
     path = os.path.join(ARTIFACTS, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def provenance() -> Dict:
+    """Where/what produced a bench file: device kind + count, backend,
+    jax version, git sha.  Stamped into every ``BENCH_*.json`` by
+    :func:`write_bench_json` so perf trajectories across commits carry
+    their own context (the CI artifact and the committed file agree on
+    the schema; consumers treat missing git metadata as ``None``)."""
+    import jax
+
+    devs = jax.devices()
+    sha = None
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        if proc.returncode == 0:
+            sha = proc.stdout.strip() or None
+    except Exception:
+        sha = None
+    return dict(
+        device_kind=devs[0].device_kind,
+        device_count=len(devs),
+        backend=jax.default_backend(),
+        jax_version=jax.__version__,
+        git_sha=sha,
+    )
+
+
+def write_bench_json(path: str, *, schema: str, generated_by: str,
+                     repeats: Optional[int] = None, **out) -> str:
+    """The one writer behind every repo-root ``BENCH_*.json``.
+
+    Stable shape: ``schema`` / ``generated_by`` / ``provenance`` (see
+    :func:`provenance`) / optional ``repeats`` + the bench's own keys,
+    serialized sorted with a trailing newline so diffs across commits
+    stay minimal."""
+    payload = dict(
+        schema=schema,
+        generated_by=generated_by,
+        provenance=provenance(),
+        **out,
+    )
+    if repeats is not None:
+        payload["repeats"] = repeats
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+        f.write("\n")
     return path
 
 

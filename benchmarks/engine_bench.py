@@ -35,7 +35,7 @@ from benchmarks.common import save_result, table, timeit_median
 from repro.pic import driver
 from repro.sim import scenarios, simulator
 
-SCHEMA = "engine-bench/v1"
+SCHEMA = "engine-bench/v2"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_engine.json")
@@ -208,17 +208,11 @@ def _bench_pic(out):
 
 def write_bench_json(out) -> str:
     """Stable-schema perf-trajectory artifact at the repo root."""
-    payload = dict(
-        schema=SCHEMA,
-        generated_by="benchmarks/engine_bench.py",
-        repeats=REPEATS,
-        **out,
-    )
-    path = os.path.abspath(BENCH_PATH)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float, sort_keys=True)
-        f.write("\n")
-    return path
+    from benchmarks import common
+
+    return common.write_bench_json(
+        BENCH_PATH, schema=SCHEMA,
+        generated_by="benchmarks/engine_bench.py", repeats=REPEATS, **out)
 
 
 def run(P: int = 64, K: int = 8, steps: int = 200, grid: int = 32,

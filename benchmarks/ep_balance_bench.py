@@ -11,10 +11,16 @@ co-activation (token duplication proxy — the ext/int analogue):
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
-from benchmarks.common import save_result, table
+from benchmarks.common import save_result, table, write_bench_json
 from repro.distributed import ep_balance as eb
+
+SCHEMA = "ep-balance-bench/v1"
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_ep_balance.json")
 
 
 def _route(E, T, k, phase, rng):
@@ -73,6 +79,11 @@ def run(E: int = 64, R: int = 8, periods: int = 12, T: int = 4096,
     assert results["diff-comm"]["mean_max_avg"] < results["static"]["mean_max_avg"]
     assert results["diff-comm"]["moved_experts"] <= results["greedy"]["moved_experts"]
     save_result("ep_balance", results)
+    write_bench_json(
+        BENCH_PATH, schema=SCHEMA,
+        generated_by="benchmarks/ep_balance_bench.py",
+        config=dict(E=E, R=R, periods=periods, T=T, k=k, seed=seed),
+        policies=results)
     return results
 
 

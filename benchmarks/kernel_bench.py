@@ -33,7 +33,7 @@ from repro.core.virtual_lb import reference_sweep, reverse_slots
 from repro.kernels.migrate import ops as migrate_ops
 from repro.runtime import migrate as rt_migrate
 
-SCHEMA = "kernel-bench/v1"
+SCHEMA = "kernel-bench/v2"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_kernels.json")
@@ -133,18 +133,13 @@ def _bench_migrate(out):
 
 def write_bench_json(out) -> str:
     """Stable-schema perf-trajectory artifact at the repo root."""
-    payload = dict(
-        schema=SCHEMA,
-        generated_by="benchmarks/kernel_bench.py",
-        repeats=REPEATS,
+    from benchmarks import common
+
+    return common.write_bench_json(
+        BENCH_PATH, schema=SCHEMA,
+        generated_by="benchmarks/kernel_bench.py", repeats=REPEATS,
         backend=jax.default_backend(),
-        **out,
-    )
-    path = os.path.abspath(BENCH_PATH)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float, sort_keys=True)
-        f.write("\n")
-    return path
+        **out)
 
 
 def run():

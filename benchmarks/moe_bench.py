@@ -34,7 +34,7 @@ from __future__ import annotations
 import json
 import os
 
-SCHEMA = "moe-bench/v1"
+SCHEMA = "moe-bench/v2"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_moe.json")
@@ -235,17 +235,12 @@ def _bench_scale(out, *, num_experts=256, num_ranks=32, steps=48):
 
 def write_bench_json(out) -> str:
     """Stable-schema perf-trajectory artifact at the repo root."""
-    payload = dict(
-        schema=SCHEMA,
-        generated_by="benchmarks/moe_bench.py",
-        repeats=REPEATS,
-        **out,
-    )
-    path = os.path.abspath(BENCH_PATH)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float, sort_keys=True)
-        f.write("\n")
-    return path
+    from benchmarks import common
+
+    return common.write_bench_json(
+        BENCH_PATH, schema=SCHEMA,
+        generated_by="benchmarks/moe_bench.py", repeats=REPEATS,
+        **out)
 
 
 def run():

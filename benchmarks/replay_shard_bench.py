@@ -35,7 +35,7 @@ from __future__ import annotations
 import json
 import os
 
-SCHEMA = "replay-bench/v3"
+SCHEMA = "replay-bench/v4"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_replay.json")
@@ -271,17 +271,12 @@ def _bench_resilience(out, *, steps=120, lb_every=10, k=4):
 
 def write_bench_json(out) -> str:
     """Stable-schema perf-trajectory artifact at the repo root."""
-    payload = dict(
-        schema=SCHEMA,
-        generated_by="benchmarks/replay_shard_bench.py",
-        repeats=REPEATS,
-        **out,
-    )
-    path = os.path.abspath(BENCH_PATH)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float, sort_keys=True)
-        f.write("\n")
-    return path
+    from benchmarks import common
+
+    return common.write_bench_json(
+        BENCH_PATH, schema=SCHEMA,
+        generated_by="benchmarks/replay_shard_bench.py", repeats=REPEATS,
+        **out)
 
 
 def run():

@@ -37,7 +37,7 @@ from repro.runtime import migrate as rt_migrate
 from repro.runtime import triggers as rt_triggers
 from repro.sim import scenarios, simulator
 
-SCHEMA = "runtime-bench/v2"
+SCHEMA = "runtime-bench/v3"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_runtime.json")
@@ -140,20 +140,15 @@ def _bench_pic(out, *, steps=60, lb_every=10):
 
 def write_bench_json(out) -> str:
     """Stable-schema perf-trajectory artifact at the repo root."""
-    payload = dict(
-        schema=SCHEMA,
-        generated_by="benchmarks/runtime_bench.py",
-        repeats=REPEATS,
+    from benchmarks import common
+
+    return common.write_bench_json(
+        BENCH_PATH, schema=SCHEMA,
+        generated_by="benchmarks/runtime_bench.py", repeats=REPEATS,
         cost_model=dict(t_load=MODEL.t_load, t_byte=MODEL.t_byte,
                         bytes_per_load=MODEL.bytes_per_load,
                         lb_overhead=MODEL.lb_overhead),
-        **out,
-    )
-    path = os.path.abspath(BENCH_PATH)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float, sort_keys=True)
-        f.write("\n")
-    return path
+        **out)
 
 
 def run():

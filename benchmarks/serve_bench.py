@@ -28,7 +28,7 @@ from __future__ import annotations
 import json
 import os
 
-SCHEMA = "serve-bench/v1"
+SCHEMA = "serve-bench/v2"
 REPEATS = 3
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_serve.json")
@@ -166,17 +166,12 @@ def _bench_scale(out, *, num_sessions=131_072, num_replicas=64, steps=30):
 
 def write_bench_json(out) -> str:
     """Stable-schema perf-trajectory artifact at the repo root."""
-    payload = dict(
-        schema=SCHEMA,
-        generated_by="benchmarks/serve_bench.py",
-        repeats=REPEATS,
-        **out,
-    )
-    path = os.path.abspath(BENCH_PATH)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float, sort_keys=True)
-        f.write("\n")
-    return path
+    from benchmarks import common
+
+    return common.write_bench_json(
+        BENCH_PATH, schema=SCHEMA,
+        generated_by="benchmarks/serve_bench.py", repeats=REPEATS,
+        **out)
 
 
 def run():

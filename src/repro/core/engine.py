@@ -159,38 +159,48 @@ class LBEngine:
         self, problem: comm_graph.LBProblem, alive
     ) -> Tuple[jax.Array, PlanStats]:
         """Shared three-stage body; ``alive=None`` keeps the exact
-        unmasked trace (the ``if`` is static, nothing is added)."""
+        unmasked trace (the ``if`` is static, nothing is added).
+
+        Each stage runs under a ``compat.named_scope`` so profiler
+        traces and HLO dumps attribute planner time per stage."""
+        from repro.distributed import compat
+
         # -- stage 1: neighbor selection --------------------------------
-        if self.variant == "comm":
-            node_comm = comm_graph.node_comm_matrix(problem)
-            pref = ns.comm_preference(node_comm)
-        else:
-            assert problem.coords is not None, \
-                "coordinate variant needs coords"
-            cent = osel.centroids(
-                problem.coords, problem.assignment, problem.num_nodes
-            )
-            pref = ns.coordinate_preference(cent)
-        if alive is not None:
-            # zeroed rows/columns drop dead nodes from the candidate set
-            # (select_neighbors candidates are ``preference > 0``)
-            pref = jnp.where(alive[:, None] & alive[None, :], pref, 0.0)
-        nres = ns.select_neighbors(pref, k=self.k, max_rounds=self.max_rounds)
+        with compat.named_scope("lb-plan/stage1-neighbors"):
+            if self.variant == "comm":
+                node_comm = comm_graph.node_comm_matrix(problem)
+                pref = ns.comm_preference(node_comm)
+            else:
+                assert problem.coords is not None, \
+                    "coordinate variant needs coords"
+                cent = osel.centroids(
+                    problem.coords, problem.assignment, problem.num_nodes
+                )
+                pref = ns.coordinate_preference(cent)
+            if alive is not None:
+                # zeroed rows/columns drop dead nodes from the candidate
+                # set (select_neighbors candidates are ``preference > 0``)
+                pref = jnp.where(alive[:, None] & alive[None, :], pref,
+                                 0.0)
+            nres = ns.select_neighbors(pref, k=self.k,
+                                       max_rounds=self.max_rounds)
 
         # -- stage 2: virtual load balancing ----------------------------
-        nloads = comm_graph.node_loads(problem)
-        vres = vlb.virtual_balance(
-            nloads, nres.nbr_idx, nres.nbr_mask,
-            tol=self.tol, max_iters=self.max_iters,
-            single_hop=self.single_hop, step_fn=self.step_fn,
-            sweep_chunk=self.sweep_chunk, chunk_fn=self.chunk_fn,
-        )
+        with compat.named_scope("lb-plan/stage2-diffusion"):
+            nloads = comm_graph.node_loads(problem)
+            vres = vlb.virtual_balance(
+                nloads, nres.nbr_idx, nres.nbr_mask,
+                tol=self.tol, max_iters=self.max_iters,
+                single_hop=self.single_hop, step_fn=self.step_fn,
+                sweep_chunk=self.sweep_chunk, chunk_fn=self.chunk_fn,
+            )
 
         # -- stage 3: object selection ----------------------------------
-        sres = osel.select_objects(
-            problem, nres.nbr_idx, nres.nbr_mask, vres.flows,
-            metric="comm" if self.variant == "comm" else "coord",
-        )
+        with compat.named_scope("lb-plan/stage3-objects"):
+            sres = osel.select_objects(
+                problem, nres.nbr_idx, nres.nbr_mask, vres.flows,
+                metric="comm" if self.variant == "comm" else "coord",
+            )
 
         stats = PlanStats(
             protocol_rounds=nres.rounds.astype(jnp.int32),

@@ -59,6 +59,44 @@ def _make_mesh_compat(axis_shapes, axis_names, *, axis_types=None, **kw):
     return _make_mesh_compat.native(axis_shapes, axis_names, **kw)
 
 
+# ------------------------------------------------------------- profiler --
+#
+# Thin wrappers so instrumented code never has to care whether the pinned
+# jax ships the profiler API (CPU-only wheels and very old jax may not):
+# every helper degrades to a no-op context manager.
+
+
+def named_scope(name: str):
+    """Profiler scope usable inside traced code (``jax.named_scope``).
+
+    Names the enclosed ops in XLA HLO metadata, so ``jax.profiler`` traces
+    and HLO dumps attribute time to the planner stage / kernel dispatch /
+    exchange that spent it.  Free when no profiler is attached."""
+    try:
+        return jax.named_scope(name)
+    except Exception:  # pragma: no cover - ancient jax
+        return contextlib.nullcontext()
+
+
+def trace_annotation(name: str):
+    """Host-side profiler region (``jax.profiler.TraceAnnotation``)."""
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:  # pragma: no cover - profiler-less build
+        return contextlib.nullcontext()
+
+
+def profiler_trace(log_dir):
+    """``jax.profiler.trace(log_dir)`` — no-op when ``log_dir`` is falsy
+    or the runtime has no profiler (the launchers' ``--profile-dir``)."""
+    if not log_dir:
+        return contextlib.nullcontext()
+    try:
+        return jax.profiler.trace(log_dir)
+    except Exception:  # pragma: no cover - profiler-less build
+        return contextlib.nullcontext()
+
+
 def install() -> None:
     """Backfill missing jax.sharding / jax names (idempotent)."""
     if not hasattr(jax.sharding, "get_abstract_mesh"):

@@ -86,6 +86,7 @@ from repro.core import engine as core_engine
 from repro.core import neighbor_selection as ns
 from repro.core import object_selection as osel
 from repro.core import virtual_lb as vlb
+from repro.obs import telemetry as obs_telemetry
 from repro.runtime import migrate as rt_migrate
 from repro.runtime import resilience as rt_resilience
 from repro.runtime import triggers as rt_triggers
@@ -258,16 +259,17 @@ def _plan_step_sharded(problem: comm_graph.LBProblem, *, variant: str,
     if alive is not None:
         problem = rt_resilience.degrade_problem(problem, alive, speed)
     # -- stage 1: preference assembly + handshake (replicated) ----------
-    if variant == "comm":
-        node_comm = comm_graph.node_comm_matrix(problem)
-        pref = ns.comm_preference(node_comm)
-    else:
-        cent = osel.centroids(problem.coords, problem.assignment, P)
-        pref = ns.coordinate_preference(cent)
-    if alive is not None:
-        pref = rt_resilience.mask_preference(pref, alive)
-    nres = ns.select_neighbors(pref, k=k, max_rounds=max_rounds)
-    rev = vlb.reverse_slots(nres.nbr_idx, nres.nbr_mask)
+    with compat.named_scope("lb-plan/stage1-neighbors"):
+        if variant == "comm":
+            node_comm = comm_graph.node_comm_matrix(problem)
+            pref = ns.comm_preference(node_comm)
+        else:
+            cent = osel.centroids(problem.coords, problem.assignment, P)
+            pref = ns.coordinate_preference(cent)
+        if alive is not None:
+            pref = rt_resilience.mask_preference(pref, alive)
+        nres = ns.select_neighbors(pref, k=k, max_rounds=max_rounds)
+        rev = vlb.reverse_slots(nres.nbr_idx, nres.nbr_mask)
 
     # -- stage 2: sharded virtual diffusion (the hot loop) --------------
     nloads = comm_graph.node_loads(problem)
@@ -309,14 +311,16 @@ def _plan_step_sharded(problem: comm_graph.LBProblem, *, variant: str,
 
     init = (x0, x0, jnp.zeros((rpd, K), jnp.float32), jnp.int32(0),
             residual_fn(x0), jnp.int32(0))
-    _x_fin, _own, flows_loc, iters, res_fin, _stall = jax.lax.while_loop(
-        cond, body, init)
+    with compat.named_scope("lb-plan/stage2-diffusion"):
+        _x_fin, _own, flows_loc, iters, res_fin, _stall = \
+            jax.lax.while_loop(cond, body, init)
 
     # -- stage 3: selection on the gathered flows (replicated) ----------
-    flows = gather(flows_loc)                                # (P, K) exact
-    sres = osel.select_objects(
-        problem, nres.nbr_idx, nres.nbr_mask, flows,
-        metric="comm" if variant == "comm" else "coord")
+    with compat.named_scope("lb-plan/stage3-objects"):
+        flows = gather(flows_loc)                            # (P, K) exact
+        sres = osel.select_objects(
+            problem, nres.nbr_idx, nres.nbr_mask, flows,
+            metric="comm" if variant == "comm" else "coord")
 
     stats = core_engine.PlanStats(
         protocol_rounds=nres.rounds.astype(jnp.int32),
@@ -352,7 +356,7 @@ def _cached(cache: Dict, key: tuple, build):
 def _make_series_step(mesh: Mesh, evolve, strategy: str,
                       eng_params: Optional[Dict], trig,
                       threads_per_node: Optional[int], P: int,
-                      faults, guard: bool):
+                      faults, guard: bool, tel=None):
     """Shared per-step body of the series replay scans.
 
     Returns ``(step, track)`` where ``track`` says whether the step
@@ -362,7 +366,14 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
     bit-for-bit parity contract; the resilient variant adds
     health-masked trigger stats/planning, forced fires on health
     transitions or stranded objects, and the ``validate_plan`` rollback
-    guardrail."""
+    guardrail.
+
+    ``tel`` (an enabled ``obs.telemetry.TelemetryConfig``) appends a
+    replicated :class:`~repro.obs.telemetry.TelemetryState` to the scan
+    carry and records one StepRecord per step — every recorded quantity
+    (loads, fire bit, sweeps, moved counts) is already replicated under
+    the parity contract, so the ring stays replicated for free.
+    ``tel=None`` follows the same static-elision rule as ``faults``."""
     from repro.sim import simulator as sim   # local: sim imports us lazily
 
     D = int(np.prod(mesh.devices.shape))
@@ -370,6 +381,7 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
     do_lb_at_all = strategy != "none" and not trig.never
     resilient = faults is not None
     track = resilient or bool(guard)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
     plan = None
     if do_lb_at_all:
         eng_params = dict(eng_params)
@@ -378,10 +390,14 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
                                  **eng_params)
 
     def step(carry, t):
-        problem, tstate = carry
+        if tel:
+            problem, tstate, obs_state = carry
+        else:
+            problem, tstate = carry
         problem = evolve(problem, t)
         prev = problem.assignment
         rejected = jnp.float32(0.0)
+        health_changed = jnp.float32(0.0)
         if do_lb_at_all:
             if resilient:
                 alive_n, speed_n = faults.node_health(t, P, D)
@@ -398,8 +414,10 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
                 # node must fire a rebalance regardless of the policy
                 stranded = (~jnp.take(
                     alive_n, jnp.clip(prev, 0, P - 1))).any()
+                health_changed = faults.changed_at(
+                    t, D).astype(jnp.float32)
                 do = do | faults.changed_at(t, D) | stranded
-                planned, _stats = jax.lax.cond(
+                planned, stats = jax.lax.cond(
                     do,
                     lambda op: plan(op[0], alive=op[1], speed=op[2]),
                     lambda op: (op[0].assignment.astype(jnp.int32),
@@ -407,7 +425,7 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
                     (problem, alive_n, speed_n),
                 )
             else:
-                planned, _stats = jax.lax.cond(
+                planned, stats = jax.lax.cond(
                     do,
                     plan,
                     lambda p: (p.assignment.astype(jnp.int32),
@@ -436,11 +454,16 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
                 0.0)
             tstate = trig.observe(tstate, migrated_load, do)
             fired = do.astype(jnp.float32)
+            sweeps = stats.diffusion_iters.astype(jnp.float32)
+            moved_n = jnp.where(adopt, delta.sum().astype(jnp.float32),
+                                0.0)
             problem = problem.with_assignment(new_assignment)
         else:
             moved = jnp.float32(0.0)
             migrated_load = jnp.float32(0.0)
             fired = jnp.float32(0.0)
+            sweeps = jnp.float32(0.0)
+            moved_n = jnp.float32(0.0)
         m = metrics.evaluate_device(problem)
         if threads_per_node:
             tma = sim._thread_max_avg(problem.loads, problem.assignment,
@@ -451,6 +474,16 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
               m.max_load, migrated_load)
         if track:
             ys = ys + (rejected,)
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=obs_telemetry.node_loads(
+                    problem.loads, problem.assignment, P),
+                fired=fired, trigger_kind=tkind, plan_rejected=rejected,
+                sweeps=sweeps, moved_items=moved_n,
+                moved_bytes=migrated_load,
+                health_changed=health_changed)
+            return (problem, tstate, obs_state), ys
         return (problem, tstate), ys
 
     return step, track
@@ -459,21 +492,28 @@ def _make_series_step(mesh: Mesh, evolve, strategy: str,
 def _series_runner(mesh: Mesh, evolve, steps: int, strategy: str,
                    eng_params: Optional[Dict], trig,
                    threads_per_node: Optional[int], P: int,
-                   has_coords: bool, faults=None, guard: bool = False):
+                   has_coords: bool, faults=None, guard: bool = False,
+                   tel=None):
     """Compile-once ``shard_map`` wrapping the whole series replay."""
     step, track = _make_series_step(mesh, evolve, strategy, eng_params,
                                     trig, threads_per_node, P, faults,
-                                    guard)
+                                    guard, tel)
     nys = 8 if track else 7
+    nobs = 3 if tel else 0   # TelemetryState leaves (count, records, loads)
 
     def body(loads, assignment, e_src, e_dst, e_bytes, coords):
         problem = comm_graph.LBProblem(
             loads=loads, assignment=assignment, edges_src=e_src,
             edges_dst=e_dst, edges_bytes=e_bytes, num_nodes=P,
             coords=coords if has_coords else None)
-        (pfin, _ts), ys = jax.lax.scan(
-            step, (problem, trig.init_state()), jnp.arange(steps))
-        return (pfin.assignment.astype(jnp.int32),) + ys
+        init = (problem, trig.init_state())
+        if tel:
+            init = init + (obs_telemetry.init_state(tel, P),)
+        carry, ys = jax.lax.scan(step, init, jnp.arange(steps))
+        out = (carry[0].assignment.astype(jnp.int32),)
+        if tel:
+            out = out + tuple(carry[2])   # replicated ring — exits as-is
+        return out + ys
 
     # the problem arrays enter replicated: per-shard state materializes
     # *inside* the step (dynamic_slice by axis index for the diffusion
@@ -481,7 +521,7 @@ def _series_runner(mesh: Mesh, evolve, steps: int, strategy: str,
     fn = jax.shard_map(
         body, mesh=mesh,
         in_specs=(P_(),) * 6,
-        out_specs=(P_(),) * (1 + nys),
+        out_specs=(P_(),) * (1 + nobs + nys),
         check_vma=False)
     return jax.jit(fn)
 
@@ -546,6 +586,7 @@ def run_series_sharded(
     threads_per_node: Optional[int] = None,
     faults=None,
     guard: Optional[bool] = None,
+    telemetry=None,
 ):
     """Mesh-sharded ``run_series``: the whole replay in one ``shard_map``.
 
@@ -581,23 +622,32 @@ def run_series_sharded(
     the result.  An empty/None schedule with ``guard`` unset adds
     *nothing* to the trace — the bit-for-bit parity contract above is
     untouched.
+
+    ``telemetry`` (an ``obs.telemetry.TelemetryConfig`` / level string)
+    threads the scan-carried StepRecord ring through the shard_map —
+    replicated, since every recorded quantity already is under the
+    parity contract — and attaches the snapshot to the result.  Off /
+    absent is bit-for-bit free, exactly as in ``run_series``.
     """
     from repro.sim import simulator as sim   # local: sim imports us lazily
 
     strategy_kwargs, trig, P, mesh, faults, guard, eng = _series_setup(
         initial, evolve, strategy, strategy_kwargs, trigger, lb_every,
         mesh, num_shards, faults, guard)
+    tel = obs_telemetry.resolve(telemetry)
+    tel = tel if tel.enabled else None
 
     key = (_mesh_key(mesh), evolve, int(steps), int(lb_every), strategy,
            tuple(sorted(strategy_kwargs.items())), trig,
            None if threads_per_node is None else int(threads_per_node),
-           initial.coords is not None, P, faults, guard)
+           initial.coords is not None, P, faults, guard, tel)
     runner = _cached(
         _SERIES_CACHE, key,
         lambda: _series_runner(mesh, evolve, int(steps), strategy,
                                None if eng is None else dict(eng), trig,
                                threads_per_node, P,
-                               initial.coords is not None, faults, guard))
+                               initial.coords is not None, faults, guard,
+                               tel))
 
     prob = sim._canonical(initial)
     coords = (prob.coords if prob.coords is not None
@@ -605,7 +655,12 @@ def run_series_sharded(
     t_start = time.perf_counter()
     out = runner(prob.loads, prob.assignment, prob.edges_src,
                  prob.edges_dst, prob.edges_bytes, coords)
-    final_assignment, ys = out[0], out[1:]
+    if tel:
+        obs_state = obs_telemetry.TelemetryState(*out[1:4])
+        final_assignment, ys = out[0], out[4:]
+    else:
+        obs_state = None
+        final_assignment, ys = out[0], out[1:]
     track = (faults is not None) or guard
     ys = jax.device_get(ys)
     if track:
@@ -626,7 +681,9 @@ def run_series_sharded(
         migrated_load=np.asarray(migl, np.float64),
         final_assignment=final_assignment,
         plan_rejected=(None if rej is None
-                       else np.asarray(rej, np.float64)))
+                       else np.asarray(rej, np.float64)),
+        telemetry=(obs_telemetry.snapshot(obs_state, tel)
+                   if tel else None))
 
 
 class _PreparedSeries:
@@ -767,7 +824,7 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
                 kw_items: tuple, bpp: float, use_kernel: Optional[bool],
                 steps: int, capacity: int,
                 threads_per_node: Optional[int], trig,
-                faults=None, on_overflow: str = "strict"):
+                faults=None, on_overflow: str = "strict", tel=None):
     """Compile-once ``shard_map`` wrapping the whole PIC replay.
 
     Per-shard carry: the (capacity,) particle payload slabs (x, y, vx,
@@ -807,6 +864,7 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
     resilient = faults is not None
     spill = on_overflow == "spill"
     track = resilient or spill
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
     # the chare-level plan: sharded over the PE rows when the mesh
     # divides them (plan → manifest → apply on ONE mesh), else the
     # replicated single-device graph — bit-for-bit either way
@@ -827,7 +885,12 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
         plan = None
 
     def step(carry, t):
-        x, y, vx, vy, q, chare_id, assignment, perm, count, tstate = carry
+        if tel:
+            (x, y, vx, vy, q, chare_id, assignment, perm, count, tstate,
+             obs_state) = carry
+        else:
+            (x, y, vx, vy, q, chare_id, assignment, perm, count,
+             tstate) = carry
         xn, yn, vxn, vyn = pic_push(grid_q, x, y, vx, vy, q, L=L,
                                     use_kernel=use_kernel)
         new_chare = ch.chare_of_device(xn, yn, L, cx, cy)
@@ -854,6 +917,9 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
         ma = pe_max / (pe_loads.mean() + 1e-30)
         rejected = jnp.float32(0.0)
         deferred_n = jnp.int32(0)
+        health_changed = jnp.float32(0.0)
+        sweeps = jnp.float32(0.0)
+        moved_n = jnp.int32(0)
 
         if lb_on:
             if resilient:
@@ -870,6 +936,8 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
                 # and while any chare is still owned by a dead PE
                 stranded = (~jnp.take(
                     alive_n, jnp.clip(assignment, 0, num_pes - 1))).any()
+                health_changed = faults.changed_at(
+                    t, D).astype(jnp.float32)
                 do = do | faults.changed_at(t, D) | stranded
 
             def do_plan(args):
@@ -879,14 +947,15 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
                     num_pes=num_pes, k=k, vy0=vy0, lb_period=lb_every,
                     bytes_per_particle=bpp)
                 if resilient:
-                    a2, _stats = plan(problem, alive=alive_n,
-                                      speed=speed_n)
+                    a2, stats = plan(problem, alive=alive_n,
+                                     speed=speed_n)
                 else:
-                    a2, _stats = plan(problem)
-                return a2
+                    a2, stats = plan(problem)
+                return a2, stats.diffusion_iters.astype(jnp.float32)
 
-            planned = jax.lax.cond(
-                do, do_plan, lambda a: a[1].astype(jnp.int32),
+            planned, sweeps = jax.lax.cond(
+                do, do_plan,
+                lambda a: (a[1].astype(jnp.int32), jnp.float32(0.0)),
                 (loads, assignment))
             if resilient:
                 # guardrail: only adopt validated plans — owners alive
@@ -974,15 +1043,32 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
               count[None])
         if track:
             ys = ys + (rejected, deferred_n.astype(jnp.float32))
-        return (xn, yn, vxn, vyn, q, new_chare, assignment, perm,
-                count, tstate), ys
+        new_carry = (xn, yn, vxn, vyn, q, new_chare, assignment, perm,
+                     count, tstate)
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=jax.ops.segment_sum(loads, assignment,
+                                               num_segments=num_pes),
+                fired=fired, trigger_kind=tkind, plan_rejected=rejected,
+                sweeps=sweeps,
+                moved_items=moved_n.astype(jnp.float32), moved_bytes=migb,
+                deferred=deferred_n.astype(jnp.float32),
+                health_changed=health_changed)
+            new_carry = new_carry + (obs_state,)
+        return new_carry, ys
 
     def body(x, y, vx, vy, q, chare_id, perm, count0, assignment):
         carry = (x, y, vx, vy, q, chare_id, assignment, perm,
                  count0[0], trig.init_state())
+        if tel:
+            carry = carry + (obs_telemetry.init_state(tel, num_pes),)
         carry, ys = jax.lax.scan(step, carry, jnp.arange(steps))
-        (x, y, _vx, _vy, _q, _nc, _assignment, perm, count, _ts) = carry
-        return ys + (x, y, perm, count[None])
+        (x, y, perm, count) = (carry[0], carry[1], carry[7], carry[8])
+        out = ys + (x, y, perm, count[None])
+        if tel:
+            out = out + tuple(carry[10])   # replicated ring — exits as-is
+        return out
 
     fn = jax.shard_map(
         body, mesh=mesh,
@@ -990,7 +1076,8 @@ def _pic_runner(mesh: Mesh, L: int, cx: int, cy: int, num_pes: int,
         out_specs=((P_(),) * 8               # per-step replicated metrics
                    + (P_(None, ax),)         # per-step per-shard counts
                    + ((P_(),) * 2 if track else ())  # rejected, deferred
-                   + (P_(ax),) * 4),         # final slabs + counts
+                   + (P_(ax),) * 4           # final slabs + counts
+                   + ((P_(),) * 3 if tel else ())),  # TelemetryState
         check_vma=False)
     return jax.jit(fn)
 
@@ -1070,6 +1157,8 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
     faults, _ = _resolve_resilience(getattr(cfg, "faults", None), None, D,
                                     cfg.strategy, trig)
     track = (faults is not None) or on_overflow == "spill"
+    tel = obs_telemetry.resolve(getattr(cfg, "telemetry", None))
+    tel = tel if tel.enabled else None
 
     # LB planning cost for the CostModel — measured once on the initial
     # snapshot, exactly as the single-device scanned path charges it
@@ -1091,13 +1180,13 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
         (_mesh_key(mesh), cfg.L, cfg.cx, cfg.cy, cfg.num_pes, cfg.k,
          cfg.vy0, cfg.lb_every, cfg.strategy, kw_items,
          cfg.bytes_per_particle, cfg.use_kernel, cfg.steps, capacity,
-         cfg.threads_per_node, trig, faults, on_overflow),
+         cfg.threads_per_node, trig, faults, on_overflow, tel),
         lambda: _pic_runner(mesh, cfg.L, cfg.cx, cfg.cy, cfg.num_pes,
                             cfg.k, cfg.vy0, cfg.lb_every, cfg.strategy,
                             kw_items, cfg.bytes_per_particle,
                             cfg.use_kernel, cfg.steps, capacity,
                             cfg.threads_per_node, trig, faults,
-                            on_overflow))
+                            on_overflow, tel))
 
     slabs = _pad_slabs(
         (p.x, p.y, p.vx, p.vy, p.q, chare_id,
@@ -1109,6 +1198,11 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
     out = jax.device_get(out)
     wall = time.perf_counter() - t_start
 
+    if tel:
+        obs_state = obs_telemetry.TelemetryState(*out[-3:])
+        out = out[:-3]
+    else:
+        obs_state = None
     if track:
         (ma, pe_max, ext_b, int_b, mig, mig_bytes, tma, fired, counts_ts,
          rej, deferred, x_out, y_out, perm_out, counts) = out
@@ -1162,4 +1256,6 @@ def run_pic_sharded(cfg, cost) -> "PICResult":  # noqa: F821
         plan_rejected=(None if rej is None
                        else np.asarray(rej, np.float64)),
         deferred=(None if deferred is None
-                  else np.asarray(deferred, np.float64)))
+                  else np.asarray(deferred, np.float64)),
+        telemetry=(obs_telemetry.snapshot(obs_state, tel)
+                   if tel else None))

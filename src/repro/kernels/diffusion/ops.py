@@ -19,6 +19,7 @@ Implementation selection (``sweep_impl``):
 """
 from __future__ import annotations
 
+from repro.distributed import compat
 from repro.kernels import on_tpu
 from repro.kernels.diffusion.kernel import (
     diffusion_nsweeps_pallas,
@@ -74,13 +75,14 @@ def diffusion_nsweeps(x, own, flow, it, res, stall, nbr_idx, nbr_mask, rev,
     identical (shared ``core.virtual_lb.sweep_chunk_body``).
     """
     impl = sweep_impl(*nbr_idx.shape)
-    if impl == "fused":
-        return diffusion_nsweeps_pallas(
+    with compat.named_scope(f"kernel/diffusion-nsweeps-{impl}"):
+        if impl == "fused":
+            return diffusion_nsweeps_pallas(
+                x, own, flow, it, res, stall, nbr_idx, nbr_mask, rev,
+                alpha, n_sweeps=n_sweeps, single_hop=single_hop, tol=tol,
+                max_iters=max_iters)
+        step_fn = diffusion_sweep if impl == "streaming" else None
+        return reference_nsweeps(
             x, own, flow, it, res, stall, nbr_idx, nbr_mask, rev, alpha,
             n_sweeps=n_sweeps, single_hop=single_hop, tol=tol,
-            max_iters=max_iters)
-    step_fn = diffusion_sweep if impl == "streaming" else None
-    return reference_nsweeps(
-        x, own, flow, it, res, stall, nbr_idx, nbr_mask, rev, alpha,
-        n_sweeps=n_sweeps, single_hop=single_hop, tol=tol,
-        max_iters=max_iters, step_fn=step_fn)
+            max_iters=max_iters, step_fn=step_fn)

@@ -1,6 +1,7 @@
 """Jitted wrapper: Pallas on TPU, oracle on CPU (numerically identical)."""
 from __future__ import annotations
 
+from repro.distributed import compat
 from repro.kernels import on_tpu
 from repro.kernels.histogram.kernel import histogram_pallas
 from repro.kernels.histogram.ref import histogram_ref
@@ -9,6 +10,8 @@ from repro.kernels.histogram.ref import histogram_ref
 def histogram(ids, weights, *, C: int, use_kernel: bool = None):
     if use_kernel is None:
         use_kernel = on_tpu()
-    if use_kernel:
-        return histogram_pallas(ids, weights, C=C, interpret=not on_tpu())
-    return histogram_ref(ids, weights, C=C)
+    with compat.named_scope("kernel/histogram"):
+        if use_kernel:
+            return histogram_pallas(ids, weights, C=C,
+                                    interpret=not on_tpu())
+        return histogram_ref(ids, weights, C=C)

@@ -29,6 +29,7 @@ the sort network does not.
 """
 from __future__ import annotations
 
+from repro.distributed import compat
 from repro.kernels import on_tpu
 from repro.kernels.migrate.kernel import scatter_dest_pallas
 from repro.kernels.migrate.ref import bucket_ranks_ref, scatter_dest_ref
@@ -100,15 +101,17 @@ def scatter_dest(ids, *, C: int, use_kernel=None):
     n = ids.shape[0]
     if use_kernel is None:
         use_kernel = scatter_impl(n, C) == "kernel"
-    if use_kernel:
-        dest, counts = scatter_dest_pallas(
-            ids, C=C, block_n=kernel_block_n(C) or 128,
-            interpret=not on_tpu())
-    else:
-        dest, counts = scatter_dest_ref(ids, C=C)
-    offsets = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
-    return dest, counts, offsets
+    with compat.named_scope("kernel/scatter-dest"):
+        if use_kernel:
+            dest, counts = scatter_dest_pallas(
+                ids, C=C, block_n=kernel_block_n(C) or 128,
+                interpret=not on_tpu())
+        else:
+            dest, counts = scatter_dest_ref(ids, C=C)
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(counts).astype(jnp.int32)])
+        return dest, counts, offsets
 
 
 def bucket_ranks(ids, *, C: int, use_kernel=None):

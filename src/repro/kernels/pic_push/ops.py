@@ -1,6 +1,7 @@
 """Jitted wrapper: Pallas on TPU, interpret-mode Pallas or oracle on CPU."""
 from __future__ import annotations
 
+from repro.distributed import compat
 from repro.kernels import on_tpu
 from repro.kernels.pic_push.kernel import pic_push_pallas
 from repro.kernels.pic_push.ref import pic_push_ref
@@ -16,7 +17,9 @@ def pic_push(grid_q, x, y, vx, vy, q, *, L, dt=1.0, mass=1.0,
     """
     if use_kernel is None:
         use_kernel = on_tpu()
-    if use_kernel:
-        return pic_push_pallas(grid_q, x, y, vx, vy, q, L=L, dt=dt,
-                               mass=mass, interpret=not on_tpu())
-    return pic_push_ref(grid_q, x, y, vx, vy, q, L=L, dt=dt, mass=mass)
+    with compat.named_scope("kernel/pic-push"):
+        if use_kernel:
+            return pic_push_pallas(grid_q, x, y, vx, vy, q, L=L, dt=dt,
+                                   mass=mass, interpret=not on_tpu())
+        return pic_push_ref(grid_q, x, y, vx, vy, q, L=L, dt=dt,
+                            mass=mass)

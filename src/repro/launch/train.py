@@ -25,8 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro.distributed import compat
 from repro.models import transformer
 from repro.models.params import init_params
+from repro.obs import metrics as obs_metrics
 from repro.train import checkpoint as ckpt
 from repro.train import data as data_mod
 from repro.train import ep_runtime
@@ -53,6 +55,7 @@ class RunConfig:
     ep_num_ranks: int = 0           # EP ranks (0 = min(4, E) at host scale)
     seed: int = 0
     log_every: int = 10
+    profile_dir: Optional[str] = None  # jax.profiler.trace around the loop
 
 
 def build(cfg: RunConfig):
@@ -98,25 +101,52 @@ def train(cfg: RunConfig) -> Dict:
 
     hist = []
     t0 = time.time()
-    for step in range(start, cfg.steps):
-        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
-        params, opt_state, m = step_fn(params, opt_state, batch)
-        loss = float(m["loss"])
-        hist.append(loss)
-        if cfg.log_every and step % cfg.log_every == 0:
-            print(f"step {step:5d} loss {loss:.4f} "
-                  f"gnorm {float(m['grad_norm']):.3f} "
-                  f"lr {float(m['lr']):.2e} "
-                  f"({(time.time()-t0):.1f}s)", flush=True)
-        if cfg.ckpt_dir and cfg.save_every and (step + 1) % cfg.save_every == 0:
-            ckpt.save(cfg.ckpt_dir, step + 1, params, opt_state,
-                      data_state=pipe.state.to_dict())
-        if rebalancer is not None:
-            params, info = _rebalance_experts(params, rebalancer, m, step)
-            if info.get("fired") and cfg.log_every:
-                print(f"  [ep-balance] moved {info['moved_experts']} "
-                      f"experts ({info['moved_bytes']:.0f} B), "
-                      f"max/avg {info['max_avg']:.3f}", flush=True)
+    with compat.profiler_trace(cfg.profile_dir):
+        for step in range(start, cfg.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in pipe.next_batch().items()}
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            loss = float(m["loss"])
+            hist.append(loss)
+            # registry first, log lines from the snapshot — one source
+            obs_metrics.counter("train/steps").inc()
+            obs_metrics.gauge("train/loss").set(loss)
+            obs_metrics.gauge("train/grad_norm").set(float(m["grad_norm"]))
+            obs_metrics.gauge("train/lr").set(float(m["lr"]))
+            obs_metrics.gauge("train/seconds").set(time.time() - t0)
+            if cfg.log_every and step % cfg.log_every == 0:
+                s = obs_metrics.snapshot()
+                print(f"step {step:5d} loss {s['train/loss']:.4f} "
+                      f"gnorm {s['train/grad_norm']:.3f} "
+                      f"lr {s['train/lr']:.2e} "
+                      f"({s['train/seconds']:.1f}s)", flush=True)
+            if (cfg.ckpt_dir and cfg.save_every
+                    and (step + 1) % cfg.save_every == 0):
+                ckpt.save(cfg.ckpt_dir, step + 1, params, opt_state,
+                          data_state=pipe.state.to_dict())
+                obs_metrics.counter("train/checkpoints").inc()
+            if rebalancer is not None:
+                params, info = _rebalance_experts(params, rebalancer, m,
+                                                  step)
+                if info.get("fired"):
+                    obs_metrics.counter("train/ep_fires").inc()
+                    obs_metrics.counter("train/ep_moved_experts").inc(
+                        int(info["moved_experts"]))
+                    obs_metrics.counter("train/ep_moved_bytes").inc(
+                        float(info["moved_bytes"]))
+                    obs_metrics.gauge("train/ep_last_moved").set(
+                        int(info["moved_experts"]))
+                    obs_metrics.gauge("train/ep_last_bytes").set(
+                        float(info["moved_bytes"]))
+                    obs_metrics.gauge("train/ep_max_avg").set(
+                        float(info["max_avg"]))
+                    if cfg.log_every:
+                        s = obs_metrics.snapshot()
+                        print(f"  [ep-balance] moved "
+                              f"{int(s['train/ep_last_moved'])} "
+                              f"experts ({s['train/ep_last_bytes']:.0f} "
+                              f"B), max/avg {s['train/ep_max_avg']:.3f}",
+                              flush=True)
     if cfg.ckpt_dir:
         ckpt.save(cfg.ckpt_dir, cfg.steps, params, opt_state,
                   data_state=pipe.state.to_dict())
@@ -165,10 +195,13 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--remat", default="none")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap the train loop in jax.profiler.trace(DIR)")
     args = ap.parse_args()
     cfg = RunConfig(arch=args.arch, reduced=not args.full, steps=args.steps,
                     seq_len=args.seq_len, global_batch=args.batch,
-                    lr=args.lr, ckpt_dir=args.ckpt_dir, remat=args.remat)
+                    lr=args.lr, ckpt_dir=args.ckpt_dir, remat=args.remat,
+                    profile_dir=args.profile_dir)
     out = train(cfg)
     print(f"done: final loss {out['final_loss']:.4f} in {out['seconds']:.1f}s")
 

@@ -1,0 +1,30 @@
+"""Unified LB observability: scan-carried telemetry, trace export, metrics.
+
+Three legs (ISSUE 10):
+
+  * :mod:`repro.obs.telemetry` — a fixed-shape ``StepRecord`` ring buffer
+    carried through the ``lax.scan`` of every replay path, behind a
+    ``TelemetryConfig(level=off|counters|full)`` knob where ``off`` (the
+    default) provably changes nothing.
+  * :mod:`repro.obs.trace_export` — converts a recorded run into
+    Chrome-trace / Perfetto JSON (load lanes per node, LB fires and fault
+    injections as instant events, executed migrations as flow events).
+  * :mod:`repro.obs.metrics` — a tiny counters/gauges registry with a
+    ``snapshot()`` API used by the launchers instead of ad-hoc prints.
+"""
+from repro.obs.telemetry import (  # noqa: F401
+    FIELDS,
+    TelemetryConfig,
+    TelemetrySnapshot,
+    TelemetryState,
+    init_state,
+    node_loads,
+    record,
+    snapshot,
+    trigger_kind,
+)
+from repro.obs import metrics  # noqa: F401
+from repro.obs.trace_export import (  # noqa: F401
+    export_chrome_trace,
+    validate_chrome_trace,
+)

@@ -1,0 +1,210 @@
+"""Scan-safe LB telemetry: a fixed-shape StepRecord ring buffer.
+
+Every replay path (sim host/scan/sharded, PIC, serve, EP-train) accepts a
+:class:`TelemetryConfig` and, when enabled, threads a
+:class:`TelemetryState` through its step loop — a ``(ring, F)`` f32 record
+buffer plus (at ``level="full"``) a ``(ring, P)`` per-node load buffer,
+written in place with ``dynamic_update_slice`` so the carry shape is fixed
+and the whole thing stays ``lax.scan``-compatible.
+
+The contract that makes ``off`` free: a disabled config adds **nothing** to
+the traced program.  Call sites guard every telemetry expression behind a
+static Python ``if tel.enabled:`` (the same elision pattern as
+``faults=None`` in the sharded replay), so ``level="off"`` — and passing no
+config at all — is bit-for-bit identical to the pre-telemetry paths.  The
+parity suite in ``tests/test_obs.py`` asserts exactly that.
+
+Record fields (one f32 row per step, fixed order — see :data:`FIELDS`):
+step index, max/avg/p95 node load, trigger fired + which trigger kind,
+plan_rejected, diffusion sweeps actually executed, moved items, moved
+bytes (load units where the path has no byte notion), spill/deferred
+backlog, and health-mask transitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LEVELS = ("off", "counters", "full")
+
+#: StepRecord column order.  Append-only: downstream consumers
+#: (trace_export, tests, notebooks) address columns by name.
+FIELDS = (
+    "t",              # step index
+    "max_load",       # max node load after the step
+    "avg_load",       # mean node load
+    "p95_load",       # 95th-percentile node load
+    "fired",          # 0/1 — the trigger fired this step
+    "trigger_kind",   # static trigger id (see TRIGGER_KINDS)
+    "plan_rejected",  # 0/1 — a fired plan failed validate_plan
+    "sweeps",         # diffusion sweeps actually executed (PlanStats)
+    "moved_items",    # objects/particles/sessions/experts relocated
+    "moved_bytes",    # executed exchange volume (load units if byteless)
+    "deferred",       # spill/deferred backlog after the step
+    "health_changed", # nodes whose alive mask flipped this step
+)
+NF = len(FIELDS)
+
+TRIGGER_KINDS = {"every": 0, "threshold": 1, "predictive": 2, "other": 3}
+
+
+def trigger_kind(trig) -> int:
+    """Static integer id of a trigger policy (constant per run)."""
+    from repro.runtime import triggers as rt
+
+    if isinstance(trig, rt.EveryTrigger):
+        return TRIGGER_KINDS["every"]
+    if isinstance(trig, rt.ThresholdTrigger):
+        return TRIGGER_KINDS["threshold"]
+    if isinstance(trig, rt.PredictiveTrigger):
+        return TRIGGER_KINDS["predictive"]
+    return TRIGGER_KINDS["other"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Telemetry knob.  Frozen + hashable so it can join the cache key of
+    every compiled replay runner.
+
+    ``level="off"`` (default): no state, no carry, bit-for-bit identical
+    to an absent config.  ``"counters"``: the (ring, F) StepRecord buffer.
+    ``"full"``: additionally per-node loads per step — what the Chrome
+    trace's per-node lanes and migration flow events are built from.
+    """
+
+    level: str = "off"
+    ring: int = 256
+
+    def __post_init__(self):
+        if self.level not in LEVELS:
+            raise ValueError(f"telemetry level {self.level!r} not in {LEVELS}")
+        if self.ring < 1:
+            raise ValueError("telemetry ring must hold at least one record")
+
+    @property
+    def enabled(self) -> bool:
+        return self.level != "off"
+
+    @property
+    def full(self) -> bool:
+        return self.level == "full"
+
+
+def resolve(cfg: Optional[TelemetryConfig]) -> TelemetryConfig:
+    """``None`` → the default (off) config; strings allowed for CLIs."""
+    if cfg is None:
+        return TelemetryConfig()
+    if isinstance(cfg, str):
+        return TelemetryConfig(level=cfg)
+    return cfg
+
+
+class TelemetryState(NamedTuple):
+    """Scan-carried ring state: total records written + the two buffers."""
+
+    count: jax.Array    # i32 scalar — total records ever written
+    records: jax.Array  # (ring, NF) f32
+    loads: jax.Array    # (ring, P) f32 — P == 0 below level="full"
+
+
+def init_state(cfg: TelemetryConfig, num_nodes: int) -> TelemetryState:
+    """Fresh ring for a run over ``num_nodes`` nodes/shards/replicas."""
+    P = int(num_nodes) if cfg.full else 0
+    return TelemetryState(
+        count=jnp.int32(0),
+        records=jnp.zeros((cfg.ring, NF), jnp.float32),
+        loads=jnp.zeros((cfg.ring, P), jnp.float32),
+    )
+
+
+def node_loads(loads, assignment, num_nodes: int) -> jax.Array:
+    """Per-node load vector (traceable) — the full-level lane source."""
+    return jax.ops.segment_sum(
+        jnp.asarray(loads, jnp.float32),
+        jnp.asarray(assignment, jnp.int32), num_segments=num_nodes)
+
+
+def record(
+    state: TelemetryState,
+    cfg: TelemetryConfig,
+    *,
+    t,
+    node_loads,
+    fired,
+    trigger_kind: int = TRIGGER_KINDS["other"],
+    plan_rejected=0.0,
+    sweeps=0.0,
+    moved_items=0.0,
+    moved_bytes=0.0,
+    deferred=0.0,
+    health_changed=0.0,
+) -> TelemetryState:
+    """Write one StepRecord at ``count % ring`` (traceable, fixed shape).
+
+    ``node_loads`` is the per-node load vector after the step; max/avg/p95
+    derive from it here so every path records the same statistics.  Call
+    sites must guard the call behind ``if cfg.enabled:`` — this function
+    assumes an enabled config.
+    """
+    nl = jnp.asarray(node_loads, jnp.float32)
+    row = jnp.stack([
+        jnp.asarray(t, jnp.float32),
+        nl.max(),
+        nl.mean(),
+        jnp.quantile(nl, 0.95).astype(jnp.float32),
+        jnp.asarray(fired, jnp.float32),
+        jnp.float32(trigger_kind),
+        jnp.asarray(plan_rejected, jnp.float32),
+        jnp.asarray(sweeps, jnp.float32),
+        jnp.asarray(moved_items, jnp.float32),
+        jnp.asarray(moved_bytes, jnp.float32),
+        jnp.asarray(deferred, jnp.float32),
+        jnp.asarray(health_changed, jnp.float32),
+    ])
+    slot = (state.count % cfg.ring).astype(jnp.int32)
+    records = jax.lax.dynamic_update_slice(
+        state.records, row[None, :], (slot, jnp.int32(0)))
+    loads = state.loads
+    if cfg.full:
+        loads = jax.lax.dynamic_update_slice(
+            loads, nl[None, :], (slot, jnp.int32(0)))
+    return TelemetryState(state.count + jnp.int32(1), records, loads)
+
+
+@dataclasses.dataclass
+class TelemetrySnapshot:
+    """Host-side, chronological view of a recorded run."""
+
+    config: TelemetryConfig
+    records: np.ndarray                 # (N, NF) — oldest → newest
+    node_loads: Optional[np.ndarray]    # (N, P) at level="full", else None
+    steps_total: int                    # records ever written (incl dropped)
+
+    @property
+    def dropped(self) -> int:
+        """Records overwritten by ring wraparound."""
+        return max(0, self.steps_total - len(self.records))
+
+    def column(self, name: str) -> np.ndarray:
+        """One StepRecord field over time, addressed by name."""
+        return self.records[:, FIELDS.index(name)]
+
+
+def snapshot(state: TelemetryState, cfg: TelemetryConfig) -> TelemetrySnapshot:
+    """One host transfer: unroll the ring into chronological order."""
+    count = int(state.count)
+    ring = cfg.ring
+    recs = np.asarray(jax.device_get(state.records), np.float32)
+    loads = np.asarray(jax.device_get(state.loads), np.float32)
+    if count >= ring:
+        order = (np.arange(ring) + count % ring) % ring
+        recs, loads = recs[order], loads[order]
+    else:
+        recs, loads = recs[:count], loads[:count]
+    return TelemetrySnapshot(
+        config=cfg, records=recs,
+        node_loads=loads if cfg.full else None, steps_total=count)

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core import api as core_api
 from repro.core import engine as core_engine
 from repro.core import hierarchical
+from repro.obs import telemetry as obs_telemetry
 from repro.kernels.histogram.ops import histogram
 from repro.kernels.pic_push.ops import pic_push
 from repro.pic import chares as ch
@@ -113,6 +114,10 @@ class PICConfig:
     # records the backlog).  Defaults add nothing to the trace.
     faults: Optional[object] = None
     on_overflow: str = "strict"
+    # scan-carried StepRecord telemetry (obs/telemetry.py): a
+    # TelemetryConfig, a level string, or None.  Off/None adds nothing to
+    # the traced program (bit-for-bit the untelemetered driver).
+    telemetry: Optional[object] = None
     bytes_per_particle: float = 48.0
     seed: int = 0
     use_kernel: Optional[bool] = None  # None = auto (Pallas on TPU)
@@ -168,6 +173,8 @@ class PICResult:
     # spill exchange deferred on their source shard at each step
     plan_rejected: Optional[np.ndarray] = None
     deferred: Optional[np.ndarray] = None
+    # StepRecord ring snapshot when PICConfig.telemetry was enabled
+    telemetry: Optional[obs_telemetry.TelemetrySnapshot] = None
 
     def summary(self) -> Dict[str, float]:
         # mean ext/int ratio over steps with internal traffic; all-external
@@ -241,9 +248,11 @@ def run(cfg: PICConfig, cost: CostModel = CostModel()) -> PICResult:
             use_scan = core_engine.get_strategy(cfg.strategy).jittable
         except KeyError:
             use_scan = False
+    tel = obs_telemetry.resolve(cfg.telemetry)
+    tel = tel if tel.enabled else None
     if use_scan:
-        return _run_scanned(cfg, cost)
-    return _run_host(cfg, cost)
+        return _run_scanned(cfg, cost, tel)
+    return _run_host(cfg, cost, tel)
 
 
 # ------------------------------------------------------------ scanned path --
@@ -255,7 +264,7 @@ def _chunk_runner(
     lb_every: int, strategy: str, kw_items: tuple, bpp: float,
     use_kernel: Optional[bool], chunk_len: int,
     threads_per_node: Optional[int] = None,
-    trig=None,
+    trig=None, tel=None,
 ):
     """Compiled ``lax.scan`` over ``chunk_len`` device-resident PIC steps."""
     n_chares = cx * cy
@@ -264,9 +273,14 @@ def _chunk_runner(
     lb_on = strategy != "none" and not trig.never
     plan = (core_engine.get_strategy(strategy).bind(**dict(kw_items))
             if lb_on else None)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
 
     def step(carry, t):
-        x, y, vx, vy, q, chare_id, assignment, perm, tstate = carry
+        if tel:
+            x, y, vx, vy, q, chare_id, assignment, perm, tstate, \
+                obs_state = carry
+        else:
+            x, y, vx, vy, q, chare_id, assignment, perm, tstate = carry
         xn, yn, vxn, vyn = pic_push(grid_q, x, y, vx, vy, q, L=L,
                                     use_kernel=use_kernel)
         new_chare = ch.chare_of_device(xn, yn, L, cx, cy)
@@ -295,11 +309,12 @@ def _chunk_runner(
                     loads_, assignment_, L=L, cx=cx, cy=cy,
                     num_pes=num_pes, k=k, vy0=vy0, lb_period=lb_every,
                     bytes_per_particle=bpp)
-                a2, _stats = plan(problem)
-                return a2
+                a2, stats = plan(problem)
+                return a2, jnp.asarray(stats.diffusion_iters, jnp.float32)
 
-            new_assignment = jax.lax.cond(
-                do, do_plan, lambda a: a[1].astype(jnp.int32),
+            new_assignment, sweeps = jax.lax.cond(
+                do, do_plan,
+                lambda a: (a[1].astype(jnp.int32), jnp.float32(0.0)),
                 (loads, assignment))
             delta = new_assignment != assignment
             migf = jnp.where(
@@ -329,6 +344,7 @@ def _chunk_runner(
             migf = jnp.float32(0.0)
             migb = jnp.float32(0.0)
             fired = jnp.float32(0.0)
+            sweeps = jnp.float32(0.0)
 
         if threads_per_node:
             thr = hierarchical.lpt_threads(
@@ -342,6 +358,15 @@ def _chunk_runner(
             tma = jnp.float32(0.0)
 
         ys = (ma, pe_max, ext, intra, migf, migb, tma, fired)
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=jax.ops.segment_sum(loads, assignment,
+                                               num_segments=num_pes),
+                fired=fired, trigger_kind=tkind, sweeps=sweeps,
+                moved_items=migb / bpp, moved_bytes=migb)
+            return (xn, yn, vxn, vyn, q, new_chare, assignment, perm,
+                    tstate, obs_state), ys
         return (xn, yn, vxn, vyn, q, new_chare, assignment, perm,
                 tstate), ys
 
@@ -351,7 +376,7 @@ def _chunk_runner(
     return jax.jit(run_chunk)
 
 
-def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
+def _run_scanned(cfg: PICConfig, cost: CostModel, tel=None) -> PICResult:
     p = initialize(cfg.mode, cfg.L, cfg.n_particles, k=cfg.k, vy0=cfg.vy0,
                    rho=cfg.rho, seed=cfg.seed)
     x, y = jnp.asarray(p.x), jnp.asarray(p.y)
@@ -389,6 +414,8 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
     carry = (x, y, vx, vy, q, chare_id, assignment,
              jnp.arange(cfg.n_particles, dtype=jnp.int32),
              trig.init_state())
+    if tel:
+        carry = carry + (obs_telemetry.init_state(tel, cfg.num_pes),)
     ys_host = []
     t_start = time.perf_counter()
     for s in range(0, T, chunk):
@@ -396,7 +423,7 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
         runner = _chunk_runner(
             cfg.L, cfg.cx, cfg.cy, cfg.num_pes, cfg.k, cfg.vy0,
             cfg.lb_every, cfg.strategy, kw_items, cfg.bytes_per_particle,
-            cfg.use_kernel, n, cfg.threads_per_node, trig)
+            cfg.use_kernel, n, cfg.threads_per_node, trig, tel)
         carry, ys = runner(carry, jnp.arange(s, s + n))
         ys_host.append(jax.device_get(ys))   # host transfer per chunk only
     wall = time.perf_counter() - t_start
@@ -423,13 +450,15 @@ def _run_scanned(cfg: PICConfig, cost: CostModel) -> PICResult:
                      float(lb_est * lb_steps.sum()), step_s, fx, fy,
                      scanned=True, wall_seconds=wall,
                      thread_max_avg=(tma if cfg.threads_per_node else None),
-                     lb_steps=fired)
+                     lb_steps=fired,
+                     telemetry=(obs_telemetry.snapshot(carry[9], tel)
+                                if tel else None))
 
 
 # --------------------------------------------------------------- host loop --
 
 
-def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
+def _run_host(cfg: PICConfig, cost: CostModel, tel=None) -> PICResult:
     grid_q = jnp.asarray(alternating_grid(cfg.L))
     p = initialize(cfg.mode, cfg.L, cfg.n_particles, k=cfg.k, vy0=cfg.vy0,
                    rho=cfg.rho, seed=cfg.seed)
@@ -456,6 +485,9 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
     step_s = np.zeros(T)
     fired = np.zeros(T)
     lb_seconds = 0.0
+    obs_state = (obs_telemetry.init_state(tel, cfg.num_pes)
+                 if tel else None)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
 
     t_start = time.perf_counter()
     for t in range(T):
@@ -554,6 +586,15 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
                 threads_per_node=cfg.threads_per_node)
             tma[t] = float(tl.max() / (tl.mean() + 1e-30))
 
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=np.bincount(assignment, weights=loads,
+                                       minlength=cfg.num_pes),
+                fired=fired[t], trigger_kind=tkind,
+                moved_items=mig_bytes[t] / cfg.bytes_per_particle,
+                moved_bytes=mig_bytes[t])
+
         # modeled step time: slowest PE compute + boundary traffic + LB
         step_s[t] = (
             pe_loads.max() * cost.t_particle
@@ -569,4 +610,6 @@ def _run_host(cfg: PICConfig, cost: CostModel) -> PICResult:
                      fx, fy, scanned=False,
                      wall_seconds=time.perf_counter() - t_start,
                      thread_max_avg=(tma if cfg.threads_per_node else None),
-                     lb_steps=fired)
+                     lb_steps=fired,
+                     telemetry=(obs_telemetry.snapshot(obs_state, tel)
+                                if tel else None))

@@ -236,9 +236,11 @@ def migrate(owner_old, owner_new, arrays: Sequence, *, num_nodes: int,
     strict — spill semantics belong to the in-scan exchanges)."""
     if donate is None:
         donate = jax.default_backend() != "cpu"
-    out, man = _migrate_exec(int(num_nodes), bool(donate), str(method))(
-        jnp.asarray(owner_old, jnp.int32),
-        jnp.asarray(owner_new, jnp.int32), tuple(arrays))
+    with compat.named_scope("exchange/migrate"):
+        out, man = _migrate_exec(int(num_nodes), bool(donate),
+                                 str(method))(
+            jnp.asarray(owner_old, jnp.int32),
+            jnp.asarray(owner_new, jnp.int32), tuple(arrays))
     if capacity is not None:
         counts = np.diff(np.asarray(man.offsets))
         if (counts > int(capacity)).any():
@@ -397,46 +399,47 @@ def ring_exchange(owner_loc, arr_loc: Tuple, *, num_nodes: int, D: int,
         return _ring_exchange_spill(
             owner_loc, arr_loc, live=live, counts=counts,
             num_nodes=num_nodes, D=D, capacity=capacity, axis=axis, me=me)
-    bucket = counts.sum(axis=0)                         # (P,) global sizes
-    my_sizes = jax.lax.dynamic_slice(bucket, (me * rpd,), (rpd,))
-    my_base = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32),
-         jnp.cumsum(my_sizes).astype(jnp.int32)])[:rpd]  # (rpd,)
+    with compat.named_scope("exchange/ring"):
+        bucket = counts.sum(axis=0)                     # (P,) global sizes
+        my_sizes = jax.lax.dynamic_slice(bucket, (me * rpd,), (rpd,))
+        my_base = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(my_sizes).astype(jnp.int32)])[:rpd]  # (rpd,)
 
-    # payload slabs relocate on the leading axis; trailing axes ride
-    # along untouched (expert weight matrices are just bigger rows)
-    outs = tuple(jnp.zeros((capacity,) + a.shape[1:], a.dtype)
-                 for a in arr_loc)
-    out_owner = jnp.zeros((capacity,), jnp.int32)
-    buf = (owner_loc,) + tuple(arr_loc)
-    for s in range(D):
-        src = (me + s) % D
-        pe = buf[0]
-        accept = (pe // rpd) == me      # padding (pe == P) accepts nowhere
-        # items from earlier source shards land first within each bucket
-        # (source order == global index order: shards hold contiguous
-        # global ranges), preserving the stable-sort tie order
-        before = (counts * (jnp.arange(D)[:, None] < src)).sum(0)  # (P,)
-        # per-shard placement rides the shared sort-free counting-scatter
-        # op: stable within-bucket rank of the accepted items (rejected
-        # slots are masked to the padding sentinel → rank −1, unused)
-        rank, _ = mig_ops.bucket_ranks(
-            jnp.where(accept, pe, num_nodes), C=num_nodes)
-        r = jnp.clip(pe - me * rpd, 0, rpd - 1)
-        pos = jnp.where(
-            accept,
-            my_base[r] + jnp.take(before, pe, mode="clip") + rank,
-            capacity)
-        out_owner = out_owner.at[pos].set(pe, mode="drop")
-        outs = tuple(o.at[pos].set(v, mode="drop")
-                     for o, v in zip(outs, buf[1:]))
-        if s + 1 < D:
-            buf = tuple(
-                jax.lax.ppermute(
-                    b, axis, [(d, (d - 1) % D) for d in range(D)])
-                for b in buf)
-    count_me = my_sizes.sum().astype(jnp.int32)
-    return out_owner, outs, count_me
+        # payload slabs relocate on the leading axis; trailing axes ride
+        # along untouched (expert weight matrices are just bigger rows)
+        outs = tuple(jnp.zeros((capacity,) + a.shape[1:], a.dtype)
+                     for a in arr_loc)
+        out_owner = jnp.zeros((capacity,), jnp.int32)
+        buf = (owner_loc,) + tuple(arr_loc)
+        for s in range(D):
+            src = (me + s) % D
+            pe = buf[0]
+            accept = (pe // rpd) == me  # padding (pe == P) accepts nowhere
+            # items from earlier source shards land first within each
+            # bucket (source order == global index order: shards hold
+            # contiguous global ranges), preserving the stable tie order
+            before = (counts * (jnp.arange(D)[:, None] < src)).sum(0)
+            # per-shard placement rides the shared sort-free counting-
+            # scatter op: stable within-bucket rank of the accepted items
+            # (rejected slots mask to the padding sentinel → rank −1)
+            rank, _ = mig_ops.bucket_ranks(
+                jnp.where(accept, pe, num_nodes), C=num_nodes)
+            r = jnp.clip(pe - me * rpd, 0, rpd - 1)
+            pos = jnp.where(
+                accept,
+                my_base[r] + jnp.take(before, pe, mode="clip") + rank,
+                capacity)
+            out_owner = out_owner.at[pos].set(pe, mode="drop")
+            outs = tuple(o.at[pos].set(v, mode="drop")
+                         for o, v in zip(outs, buf[1:]))
+            if s + 1 < D:
+                buf = tuple(
+                    jax.lax.ppermute(
+                        b, axis, [(d, (d - 1) % D) for d in range(D)])
+                    for b in buf)
+        count_me = my_sizes.sum().astype(jnp.int32)
+        return out_owner, outs, count_me
 
 
 def _ring_exchange_spill(owner_loc, arr_loc, *, live, counts,

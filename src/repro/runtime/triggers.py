@@ -44,6 +44,7 @@ from typing import NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import compat
 from repro.runtime.cost import RuntimeCostModel
 
 
@@ -141,8 +142,9 @@ class EveryTrigger:
                total_load) -> Tuple[jax.Array, TriggerState]:
         if self.never:
             return jnp.asarray(False), state
-        do = (t > 0) & (t % self.every == 0)
-        return do, state
+        with compat.named_scope("trigger/every-decide"):
+            do = (t > 0) & (t % self.every == 0)
+            return do, state
 
     def observe(self, state: TriggerState, moved_load,
                 fired) -> TriggerState:
@@ -176,17 +178,18 @@ class ThresholdTrigger:
 
     def decide(self, state: TriggerState, t, max_load, avg_load,
                total_load) -> Tuple[jax.Array, TriggerState]:
-        ma = max_load / jnp.maximum(avg_load, 1e-30)
-        since = t - state.last_lb
-        armed = (state.armed | (ma < self.lo)
-                 | (since >= self.rearm_after))
-        do = ((t > 0) & armed & (ma > self.hi)
-              & (since >= self.min_interval))
-        return do, state._replace(
-            last_lb=jnp.where(do, jnp.asarray(t, jnp.int32),
-                              state.last_lb),
-            armed=jnp.where(do, False, armed),
-        )
+        with compat.named_scope("trigger/threshold-decide"):
+            ma = max_load / jnp.maximum(avg_load, 1e-30)
+            since = t - state.last_lb
+            armed = (state.armed | (ma < self.lo)
+                     | (since >= self.rearm_after))
+            do = ((t > 0) & armed & (ma > self.hi)
+                  & (since >= self.min_interval))
+            return do, state._replace(
+                last_lb=jnp.where(do, jnp.asarray(t, jnp.int32),
+                                  state.last_lb),
+                armed=jnp.where(do, False, armed),
+            )
 
     def observe(self, state: TriggerState, moved_load,
                 fired) -> TriggerState:
@@ -232,6 +235,11 @@ class PredictiveTrigger:
 
     def decide(self, state: TriggerState, t, max_load, avg_load,
                total_load) -> Tuple[jax.Array, TriggerState]:
+        with compat.named_scope("trigger/predictive-decide"):
+            return self._decide(state, t, max_load, avg_load, total_load)
+
+    def _decide(self, state: TriggerState, t, max_load, avg_load,
+                total_load) -> Tuple[jax.Array, TriggerState]:
         W = self.window
         excess = jnp.maximum(
             jnp.asarray(max_load, jnp.float32)

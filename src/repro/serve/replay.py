@@ -61,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comm_graph, engine
+from repro.obs import telemetry as obs_telemetry
 from repro.runtime import migrate as rt_migrate
 from repro.runtime import triggers as rt_triggers
 from repro.serve.scheduler import LOAD_FLOOR
@@ -202,6 +203,8 @@ class ServeReplayResult:
     scanned: bool = False
     sharded: bool = False
     wall_seconds: float = 0.0
+    # StepRecord ring snapshot when an enabled TelemetryConfig was passed
+    telemetry: Optional[obs_telemetry.TelemetrySnapshot] = None
 
     @property
     def final_replica_by_uid(self) -> np.ndarray:
@@ -262,11 +265,13 @@ def _make_parts(workload, trig, plan, slot_capacity, R: int, S: int,
             edges_bytes=ew, num_nodes=R)
 
     def plan_owner(uid, kv, replica, t):
-        """Effective post-spill target owners for a fired tick."""
+        """Effective post-spill target owners for a fired tick (plus the
+        planner's executed diffusion sweeps, for telemetry)."""
         ldc = jnp.maximum(workload.loads_at(t, uid),
                           jnp.float32(LOAD_FLOOR))
-        owner_new, _ = plan(_problem(uid, ldc, replica))
+        owner_new, stats = plan(_problem(uid, ldc, replica))
         owner_new = owner_new.astype(jnp.int32)
+        sweeps = jnp.asarray(stats.diffusion_iters, jnp.float32)
         if slot_capacity is not None:
             owner_new, dmask = rt_migrate.spill_owner(
                 replica, owner_new, num_nodes=R,
@@ -274,20 +279,20 @@ def _make_parts(workload, trig, plan, slot_capacity, R: int, S: int,
             deferred = dmask.sum().astype(jnp.float32)
         else:
             deferred = jnp.float32(0.0)
-        return owner_new, deferred
+        return owner_new, deferred, sweeps
 
     def fire(uid, kv, replica, t):
-        owner_new, deferred = plan_owner(uid, kv, replica, t)
+        owner_new, deferred, sweeps = plan_owner(uid, kv, replica, t)
         (uid2, kv2), man = rt_migrate.build_and_apply(
             replica, owner_new, (uid, kv), num_nodes=R)
         replica2 = jnp.take(owner_new, man.order)
         moved_n = man.moved_count.astype(jnp.float32)
         moved_kv = man.moved_sum(kv)
-        return uid2, kv2, replica2, moved_n, moved_kv, deferred
+        return uid2, kv2, replica2, moved_n, moved_kv, deferred, sweeps
 
     def nofire(uid, kv, replica, t):
         return (uid, kv, replica, jnp.float32(0.0), jnp.float32(0.0),
-                jnp.float32(0.0))
+                jnp.float32(0.0), jnp.float32(0.0))
 
     def post(uid, kv, replica, tstate, do, moved_kv, t):
         tstate = trig.observe(
@@ -332,7 +337,7 @@ def _resolve(workload, strategy, strategy_kwargs, trigger, lb_every):
 @functools.lru_cache(maxsize=64)
 def _scanned_serve_runner(workload, steps: int, strategy: str,
                           kw_items: tuple, trig, lb_every: int,
-                          slot_capacity: Optional[int]):
+                          slot_capacity: Optional[int], tel=None):
     strat = engine.get_strategy(strategy)
     plan = strat.bind(**dict(kw_items))
     S, R = workload.num_sessions, workload.num_replicas
@@ -341,21 +346,37 @@ def _scanned_serve_runner(workload, steps: int, strategy: str,
     lb_on = strategy != "none" and not trig.never
     pre, _, fire, nofire, post = _make_parts(
         workload, trig, plan, slot_capacity, R, S, lb_on, bpl)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
 
     def step(carry, t):
-        uid, kv, replica, tstate = carry
+        if tel:
+            uid, kv, replica, tstate, obs_state = carry
+        else:
+            uid, kv, replica, tstate = carry
         kv, do, tstate = pre(uid, kv, replica, tstate, t)
-        uid, kv, replica, moved_n, moved_kv, deferred = jax.lax.cond(
-            do, fire, nofire, uid, kv, replica, t)
+        uid, kv, replica, moved_n, moved_kv, deferred, sweeps = \
+            jax.lax.cond(do, fire, nofire, uid, kv, replica, t)
         tstate, (ma, ploc, occ) = post(
             uid, kv, replica, tstate, do, moved_kv, t)
-        return (uid, kv, replica, tstate), (
-            ma, do.astype(jnp.float32), moved_n, moved_kv, ploc,
-            deferred, occ)
+        ys = (ma, do.astype(jnp.float32), moved_n, moved_kv, ploc,
+              deferred, occ)
+        if tel:
+            ldc = jnp.maximum(workload.loads_at(t, uid),
+                              jnp.float32(LOAD_FLOOR))
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=obs_telemetry.node_loads(ldc, replica, R),
+                fired=do, trigger_kind=tkind, sweeps=sweeps,
+                moved_items=moved_n, moved_bytes=moved_kv,
+                deferred=deferred)
+            return (uid, kv, replica, tstate, obs_state), ys
+        return (uid, kv, replica, tstate), ys
 
     def run(uid, kv, replica):
-        return jax.lax.scan(step, (uid, kv, replica, trig.init_state()),
-                            jnp.arange(steps))
+        carry = (uid, kv, replica, trig.init_state())
+        if tel:
+            carry = carry + (obs_telemetry.init_state(tel, R),)
+        return jax.lax.scan(step, carry, jnp.arange(steps))
 
     return jax.jit(run)
 
@@ -364,7 +385,7 @@ def _scanned_serve_runner(workload, steps: int, strategy: str,
 
 
 def _host_serve_loop(workload, steps, strategy, kw, trig, lb_every,
-                     slot_capacity, *, mesh=None):
+                     slot_capacity, *, mesh=None, tel=None):
     """Eager replay: the scanned step pieces executed one tick at a time.
 
     ``mesh`` switches the fired exchange to the multi-replica-group path:
@@ -400,22 +421,26 @@ def _host_serve_loop(workload, steps, strategy, kw, trig, lb_every,
             owner_new, dmask = rt_migrate.spill_owner(
                 replica, owner_new, num_nodes=R,
                 capacity=int(slot_capacity))
-            return owner_new, dmask.sum().astype(jnp.float32)
-        return owner_new, jnp.float32(0.0)
+            return owner_new, dmask.sum().astype(jnp.float32), \
+                jnp.float32(0.0)
+        return owner_new, jnp.float32(0.0), jnp.float32(0.0)
 
     uid, kv, replica = _initial_state(workload)
     tstate = trig.init_state()
+    obs_state = (obs_telemetry.init_state(tel, R) if tel else None)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
     recs = []
     for ti in range(steps):
         t = jnp.int32(ti)
         kv, do, tstate = pre_j(uid, kv, replica, tstate, t)
         fired = bool(do)
+        sweeps = 0.0
         if not fired:
-            uid, kv, replica, moved_n, moved_kv, deferred = nofire_j(
-                uid, kv, replica, t)
+            uid, kv, replica, moved_n, moved_kv, deferred, sweeps = \
+                nofire_j(uid, kv, replica, t)
         elif mesh is not None or plan_owner_j is None:
             getter = plan_owner_j or host_plan_owner
-            owner_new, deferred = getter(uid, kv, replica, t)
+            owner_new, deferred, sweeps = getter(uid, kv, replica, t)
             moved = jnp.asarray(owner_new) != replica
             moved_n = moved.sum().astype(jnp.float32)
             moved_kv = jnp.where(moved, kv, 0.0).sum()
@@ -438,14 +463,23 @@ def _host_serve_loop(workload, steps, strategy, kw, trig, lb_every,
                 replica = jnp.asarray(np.asarray(owner_out)[keep],
                                       jnp.int32)
         else:
-            uid, kv, replica, moved_n, moved_kv, deferred = fire_j(
-                uid, kv, replica, t)
+            uid, kv, replica, moved_n, moved_kv, deferred, sweeps = \
+                fire_j(uid, kv, replica, t)
         tstate, (ma, ploc, occ) = post_j(
             uid, kv, replica, tstate, do, moved_kv, t)
+        if tel:
+            ldc = jnp.maximum(workload.loads_at(t, uid),
+                              jnp.float32(LOAD_FLOOR))
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=obs_telemetry.node_loads(ldc, replica, R),
+                fired=fired, trigger_kind=tkind, sweeps=sweeps,
+                moved_items=moved_n, moved_bytes=moved_kv,
+                deferred=deferred)
         recs.append((float(ma), 1.0 if fired else 0.0, float(moved_n),
                      float(moved_kv), float(ploc), float(deferred),
                      float(occ)))
-    return uid, kv, replica, recs
+    return uid, kv, replica, recs, obs_state
 
 
 # ------------------------------------------------------------- the entry --
@@ -463,6 +497,7 @@ def run_serve_replay(
     scan: Optional[bool] = None,
     num_shards: Optional[int] = None,
     mesh=None,
+    telemetry=None,
 ) -> ServeReplayResult:
     """Replay ``steps`` serving ticks with executed KV-cache migration.
 
@@ -477,6 +512,8 @@ def run_serve_replay(
     divide the shard count."""
     strat, kw, trig, _bpl, _lb_on = _resolve(
         workload, strategy, strategy_kwargs, trigger, lb_every)
+    tel = obs_telemetry.resolve(telemetry)
+    tel = tel if tel.enabled else None
     sharded = mesh is not None or num_shards is not None
     if sharded:
         if scan:
@@ -501,16 +538,18 @@ def run_serve_replay(
         runner = _scanned_serve_runner(
             workload, int(steps), strategy, tuple(sorted(kw.items())),
             trig, int(lb_every),
-            None if slot_capacity is None else int(slot_capacity))
-        (uid, kv, replica, _), ys = runner(*_initial_state(workload))
+            None if slot_capacity is None else int(slot_capacity), tel)
+        final, ys = runner(*_initial_state(workload))
+        uid, kv, replica = final[0], final[1], final[2]
+        obs_state = final[4] if tel else None
         ma, fired, moved_n, moved_kv, ploc, deferred, occ = jax.device_get(ys)
         recs = np.stack([ma, fired, moved_n, moved_kv, ploc, deferred,
                          occ], axis=1)
     else:
-        uid, kv, replica, rec_list = _host_serve_loop(
+        uid, kv, replica, rec_list, obs_state = _host_serve_loop(
             workload, int(steps), strategy, kw, trig, int(lb_every),
             None if slot_capacity is None else int(slot_capacity),
-            mesh=mesh)
+            mesh=mesh, tel=tel)
         recs = np.asarray(rec_list, np.float64).reshape(int(steps), 7)
     return ServeReplayResult(
         max_avg=np.asarray(recs[:, 0], np.float64),
@@ -524,4 +563,6 @@ def run_serve_replay(
         final_replica=np.asarray(replica, np.int32),
         final_kv=np.asarray(kv, np.float32),
         scanned=bool(scan), sharded=bool(sharded),
-        wall_seconds=time.perf_counter() - t0)
+        wall_seconds=time.perf_counter() - t0,
+        telemetry=(obs_telemetry.snapshot(obs_state, tel)
+                   if tel else None))

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api, comm_graph, engine, hierarchical, metrics
+from repro.obs import telemetry as obs_telemetry
 from repro.runtime import migrate as rt_migrate
 from repro.runtime import triggers as rt_triggers
 
@@ -118,6 +119,9 @@ class SeriesResult:
     # rolled back); only recorded by the resilient sharded replay paths
     # (``faults`` / ``guard``), None everywhere else
     plan_rejected: Optional[np.ndarray] = None
+    # scan-carried StepRecord ring (obs/telemetry.py) — only when the
+    # replay was passed an enabled TelemetryConfig, None otherwise
+    telemetry: Optional[obs_telemetry.TelemetrySnapshot] = None
 
 
 def run_series(
@@ -131,6 +135,7 @@ def run_series(
     scan: Optional[bool] = None,
     threads_per_node: Optional[int] = None,
     trigger=None,
+    telemetry=None,
 ) -> SeriesResult:
     """Replay ``steps`` of a workload with trigger-policed rebalancing.
 
@@ -160,8 +165,15 @@ def run_series(
     :func:`run_series_sharded` is the mesh-sharded sibling: the same
     scanned loop (same knobs, bit-for-bit the same ``SeriesResult``)
     executed inside one ``shard_map`` over the 1-D ``"lb"`` device mesh
-    with the planner's diffusion stage running as ring halo exchanges."""
+    with the planner's diffusion stage running as ring halo exchanges.
+
+    ``telemetry`` (a :class:`repro.obs.telemetry.TelemetryConfig`, a level
+    string, or ``None``) opts the replay into the scan-carried StepRecord
+    ring; ``level="off"`` / ``None`` adds nothing to the traced program
+    and is bit-for-bit identical to the pre-telemetry replay."""
     strategy_kwargs = strategy_kwargs or {}
+    tel = obs_telemetry.resolve(telemetry)
+    tel = tel if tel.enabled else None
     trig = rt_triggers.resolve_for_strategy(trigger, lb_every=lb_every,
                                             strategy=strategy)
     if scan:
@@ -181,11 +193,11 @@ def run_series(
         return _run_series_scanned(
             initial, evolve, steps=steps, lb_every=lb_every,
             strategy=strategy, strategy_kwargs=strategy_kwargs,
-            threads_per_node=threads_per_node, trig=trig)
+            threads_per_node=threads_per_node, trig=trig, tel=tel)
     return _run_series_host(
         initial, evolve, steps=steps, lb_every=lb_every,
         strategy=strategy, strategy_kwargs=strategy_kwargs,
-        threads_per_node=threads_per_node, trig=trig)
+        threads_per_node=threads_per_node, trig=trig, tel=tel)
 
 
 def run_series_sharded(initial, evolve, **kwargs):
@@ -205,13 +217,16 @@ def run_series_sharded(initial, evolve, **kwargs):
 
 def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
                      strategy_kwargs, threads_per_node=None,
-                     trig=None) -> SeriesResult:
+                     trig=None, tel=None) -> SeriesResult:
     trig = trig or rt_triggers.resolve(None, lb_every=lb_every)
     t_start = time.perf_counter()
     problem = initial
     ma, ei, mig, tma = [], [], [], []
     fired, mxl, migl = [], [], []
     plan_s = 0.0
+    obs_state = (obs_telemetry.init_state(tel, initial.num_nodes)
+                 if tel else None)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
     lb_on = strategy != "none" and not trig.never
     # the fixed cadence ignores the load stats: keep the legacy pure-
     # Python predicate (bit-identical) instead of a per-step device trip
@@ -233,10 +248,14 @@ def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
                     problem.num_nodes)
                 d, tstate = trig.decide(tstate, jnp.int32(t), mx, av, tot)
                 do = bool(d)
+        moved_n = 0.0
+        sweeps = 0.0
         if do:
             plan = api.run_strategy(strategy, problem, **strategy_kwargs)
             delta = plan.assignment != np.asarray(problem.assignment)
             moved = float(np.mean(delta))
+            moved_n = float(np.sum(delta))
+            sweeps = float(plan.info.get("diffusion_iters", 0.0))
             migl.append(float(jnp.where(
                 jnp.asarray(delta),
                 jnp.asarray(problem.loads, jnp.float32), 0.0).sum()))
@@ -261,6 +280,13 @@ def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
             tma.append(float(_thread_max_avg(
                 problem.loads, problem.assignment,
                 problem.num_nodes, threads_per_node)))
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=obs_telemetry.node_loads(
+                    problem.loads, problem.assignment, problem.num_nodes),
+                fired=fired[-1], trigger_kind=tkind, sweeps=sweeps,
+                moved_items=moved_n, moved_bytes=migl[-1])
     return SeriesResult(np.array(ma), np.array(ei), np.array(mig), plan_s,
                         scanned=False,
                         wall_seconds=time.perf_counter() - t_start,
@@ -269,7 +295,9 @@ def _run_series_host(initial, evolve, *, steps, lb_every, strategy,
                         lb_fired=np.array(fired), max_load=np.array(mxl),
                         migrated_load=np.array(migl),
                         final_assignment=np.asarray(problem.assignment,
-                                                    np.int32))
+                                                    np.int32),
+                        telemetry=(obs_telemetry.snapshot(obs_state, tel)
+                                   if tel else None))
 
 
 # ---------------------------------------------------------- scanned path --
@@ -291,27 +319,35 @@ def _thread_max_avg(loads, assignment, num_nodes: int,
 @functools.lru_cache(maxsize=64)
 def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
                     kw_items: tuple, threads_per_node: Optional[int] = None,
-                    trig=None):
+                    trig=None, tel=None):
     """Compile-once scan over the whole replay.
 
     Cache key: the evolve closure (identity), the static replay shape,
-    the strategy binding and the trigger policy (triggers are frozen
-    dataclasses) — re-running the same scenario/strategy/trigger reuses
-    the compiled executable."""
+    the strategy binding, the trigger policy and the telemetry config
+    (all frozen dataclasses) — re-running the same scenario/strategy/
+    trigger reuses the compiled executable.  ``tel=None`` (telemetry off)
+    adds nothing to the trace: the carry and every expression below are
+    identical to the pre-telemetry runner."""
     strat = engine.get_strategy(strategy)
     plan = strat.bind(**dict(kw_items))
     trig = trig or rt_triggers.resolve(None, lb_every=lb_every)
     do_lb_at_all = strategy != "none" and not trig.never
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
 
     def step(carry, t):
-        problem, tstate = carry
+        if tel:
+            problem, tstate, obs_state = carry
+        else:
+            problem, tstate = carry
         problem = evolve(problem, t)
         prev = problem.assignment
+        sweeps = jnp.float32(0.0)
+        moved_n = jnp.float32(0.0)
         if do_lb_at_all:
             mx, av, tot = rt_triggers.load_stats(
                 problem.loads, problem.assignment, problem.num_nodes)
             do, tstate = trig.decide(tstate, t, mx, av, tot)
-            new_assignment, _stats = jax.lax.cond(
+            new_assignment, stats = jax.lax.cond(
                 do,
                 plan,
                 lambda p: (p.assignment.astype(jnp.int32),
@@ -331,6 +367,9 @@ def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
             tstate = trig.observe(tstate, migrated_load, do)
             fired = do.astype(jnp.float32)
             problem = problem.with_assignment(new_assignment)
+            if tel:
+                sweeps = jnp.asarray(stats.diffusion_iters, jnp.float32)
+                moved_n = delta.sum().astype(jnp.float32)
         else:
             moved = jnp.float32(0.0)
             migrated_load = jnp.float32(0.0)
@@ -341,12 +380,24 @@ def _scanned_runner(evolve, steps: int, lb_every: int, strategy: str,
                                   problem.num_nodes, threads_per_node)
         else:
             tma = jnp.float32(0.0)
-        return (problem, tstate), (m.max_avg_load, m.ext_int_comm, moved,
-                                   tma, fired, m.max_load, migrated_load)
+        ys = (m.max_avg_load, m.ext_int_comm, moved,
+              tma, fired, m.max_load, migrated_load)
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=obs_telemetry.node_loads(
+                    problem.loads, problem.assignment, problem.num_nodes),
+                fired=fired, trigger_kind=tkind, sweeps=sweeps,
+                moved_items=moved_n, moved_bytes=migrated_load)
+            return (problem, tstate, obs_state), ys
+        return (problem, tstate), ys
 
     def run(problem):
-        return jax.lax.scan(step, (problem, trig.init_state()),
-                            jnp.arange(steps))
+        carry = (problem, trig.init_state())
+        if tel:
+            carry = carry + (obs_telemetry.init_state(
+                tel, problem.num_nodes),)
+        return jax.lax.scan(step, carry, jnp.arange(steps))
 
     return jax.jit(run)
 
@@ -546,10 +597,10 @@ def run_series_batch(
 
 def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,
                         strategy_kwargs, threads_per_node=None,
-                        trig=None) -> SeriesResult:
+                        trig=None, tel=None) -> SeriesResult:
     runner = _scanned_runner(
         evolve, steps, lb_every, strategy,
-        tuple(sorted(strategy_kwargs.items())), threads_per_node, trig)
+        tuple(sorted(strategy_kwargs.items())), threads_per_node, trig, tel)
     t_start = time.perf_counter()
     try:
         final, ys = runner(_canonical(initial))
@@ -571,4 +622,6 @@ def _run_series_scanned(initial, evolve, *, steps, lb_every, strategy,
                         max_load=np.asarray(mxl, np.float64),
                         migrated_load=np.asarray(migl, np.float64),
                         final_assignment=np.asarray(final[0].assignment,
-                                                    np.int32))
+                                                    np.int32),
+                        telemetry=(obs_telemetry.snapshot(final[2], tel)
+                                   if tel else None))

@@ -56,6 +56,7 @@ import numpy as np
 from repro.core import comm_graph, engine
 from repro.distributed import ep_balance
 from repro.models import moe as moe_mod
+from repro.obs import telemetry as obs_telemetry
 from repro.runtime import migrate as rt_migrate
 from repro.runtime import triggers as rt_triggers
 
@@ -172,6 +173,8 @@ class EPReplayResult:
     scanned: bool = False
     sharded: bool = False
     wall_seconds: float = 0.0
+    # StepRecord ring snapshot when an enabled TelemetryConfig was passed
+    telemetry: Optional[obs_telemetry.TelemetrySnapshot] = None
 
     @property
     def total_moved_bytes(self) -> float:
@@ -237,23 +240,25 @@ def _make_parts(workload, trig, plan, R: int, E: int, lb_on: bool,
             edges_bytes=ew.astype(jnp.float32), num_nodes=R)
 
     def plan_placement(placement, tokens, coact):
-        """Capacity-exact new logical placement for a fired step."""
-        new, _ = plan(_problem(placement, tokens, coact))
+        """Capacity-exact new logical placement for a fired step (plus
+        the planner's executed diffusion sweeps, for telemetry)."""
+        new, stats = plan(_problem(placement, tokens, coact))
         return ep_balance.repair_capacity(
-            new.astype(jnp.int32), tokens, num_ranks=R, cap=cap)
+            new.astype(jnp.int32), tokens, num_ranks=R, cap=cap), \
+            jnp.asarray(stats.diffusion_iters, jnp.float32)
 
     def fire(slot_expert, wsig, placement, tokens, coact, t):
-        newp = plan_placement(placement, tokens, coact)
+        newp, sweeps = plan_placement(placement, tokens, coact)
         oo = jnp.take(placement, slot_expert)      # == slot // cap
         on = jnp.take(newp, slot_expert)
         (se2, ws2), man = rt_migrate.build_and_apply(
             oo, on, (slot_expert, wsig), num_nodes=R)
         moved_n = man.moved_count.astype(jnp.float32)
-        return se2, ws2, newp, moved_n, man.moved_bytes(bpe)
+        return se2, ws2, newp, moved_n, man.moved_bytes(bpe), sweeps
 
     def nofire(slot_expert, wsig, placement, tokens, coact, t):
         return (slot_expert, wsig, placement, jnp.float32(0.0),
-                jnp.float32(0.0))
+                jnp.float32(0.0), jnp.float32(0.0))
 
     def post(placement, tokens, tstate, do, moved_b, t):
         tstate = trig.observe(
@@ -295,7 +300,8 @@ def _resolve(workload, strategy, strategy_kwargs, trigger, lb_every):
 
 @functools.lru_cache(maxsize=64)
 def _scanned_ep_runner(workload, steps: int, strategy: str,
-                       kw_items: tuple, trig, lb_every: int, ema: float):
+                       kw_items: tuple, trig, lb_every: int, ema: float,
+                       tel=None):
     strat = engine.get_strategy(
         ep_balance._ALIASES.get(strategy, strategy))
     plan = strat.bind(**dict(kw_items))
@@ -305,21 +311,35 @@ def _scanned_ep_runner(workload, steps: int, strategy: str,
     lb_on = strategy != "none" and not trig.never
     pre, _, fire, nofire, post = _make_parts(
         workload, trig, plan, R, E, lb_on, bpl, ema)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
 
     def step(carry, t):
-        se, ws, placement, tokens, coact, tstate = carry
+        if tel:
+            se, ws, placement, tokens, coact, tstate, obs_state = carry
+        else:
+            se, ws, placement, tokens, coact, tstate = carry
         tokens, coact, do, tstate = pre(
             se, ws, placement, tokens, coact, tstate, t)
-        se, ws, placement, moved_n, moved_b = jax.lax.cond(
+        se, ws, placement, moved_n, moved_b, sweeps = jax.lax.cond(
             do, fire, nofire, se, ws, placement, tokens, coact, t)
         tstate, ma = post(placement, tokens, tstate, do, moved_b, t)
-        return (se, ws, placement, tokens, coact, tstate), (
-            ma, do.astype(jnp.float32), moved_n, moved_b)
+        ys = (ma, do.astype(jnp.float32), moved_n, moved_b)
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=obs_telemetry.node_loads(
+                    jnp.maximum(tokens, LOAD_FLOOR), placement, R),
+                fired=do, trigger_kind=tkind, sweeps=sweeps,
+                moved_items=moved_n, moved_bytes=moved_b)
+            return (se, ws, placement, tokens, coact, tstate,
+                    obs_state), ys
+        return (se, ws, placement, tokens, coact, tstate), ys
 
     def run(se, ws, placement, tokens, coact):
-        return jax.lax.scan(
-            step, (se, ws, placement, tokens, coact, trig.init_state()),
-            jnp.arange(steps))
+        carry = (se, ws, placement, tokens, coact, trig.init_state())
+        if tel:
+            carry = carry + (obs_telemetry.init_state(tel, R),)
+        return jax.lax.scan(step, carry, jnp.arange(steps))
 
     return jax.jit(run)
 
@@ -327,7 +347,8 @@ def _scanned_ep_runner(workload, steps: int, strategy: str,
 # ------------------------------------------------------------ host paths --
 
 
-def _host_ep_loop(workload, steps, strategy, kw, trig, ema, *, mesh=None):
+def _host_ep_loop(workload, steps, strategy, kw, trig, ema, *, mesh=None,
+                  tel=None):
     """Eager replay: the scanned step pieces executed one step at a time.
 
     ``mesh`` switches the fired exchange to ``migrate.migrate_sharded``
@@ -360,23 +381,26 @@ def _host_ep_loop(workload, steps, strategy, kw, trig, ema, *, mesh=None):
         new, _ = ep_balance.plan_placement(
             stats, np.asarray(placement), R,
             strategy=strategy, **({"k": kw["k"]} if "k" in kw else {}))
-        return jnp.asarray(new, jnp.int32)
+        return jnp.asarray(new, jnp.int32), jnp.float32(0.0)
 
     se, ws, placement, tokens, coact = _initial_state(workload)
     tstate = trig.init_state()
+    obs_state = (obs_telemetry.init_state(tel, R) if tel else None)
+    tkind = obs_telemetry.trigger_kind(trig) if tel else 0
     recs = []
     for ti in range(steps):
         t = jnp.int32(ti)
         tokens, coact, do, tstate = pre_j(
             se, ws, placement, tokens, coact, tstate, t)
         fired = bool(do)
+        sweeps = 0.0
         if not fired:
-            se, ws, placement, moved_n, moved_b = nofire_j(
+            se, ws, placement, moved_n, moved_b, sweeps = nofire_j(
                 se, ws, placement, tokens, coact, t)
         elif mesh is not None or plan_j is None:
             getter = plan_j or host_plan
-            newp = jnp.asarray(getter(placement, tokens, coact),
-                               jnp.int32)
+            newp, sweeps = getter(placement, tokens, coact)
+            newp = jnp.asarray(newp, jnp.int32)
             oo = jnp.take(placement, se)
             on = jnp.take(newp, se)
             moved = on != oo
@@ -396,12 +420,19 @@ def _host_ep_loop(workload, steps, strategy, kw, trig, ema, *, mesh=None):
                 ws = jnp.asarray(ws, jnp.float32)
             placement = newp
         else:
-            se, ws, placement, moved_n, moved_b = fire_j(
+            se, ws, placement, moved_n, moved_b, sweeps = fire_j(
                 se, ws, placement, tokens, coact, t)
         tstate, ma = post_j(placement, tokens, tstate, do, moved_b, t)
+        if tel:
+            obs_state = obs_telemetry.record(
+                obs_state, tel, t=t,
+                node_loads=obs_telemetry.node_loads(
+                    jnp.maximum(tokens, LOAD_FLOOR), placement, R),
+                fired=fired, trigger_kind=tkind, sweeps=sweeps,
+                moved_items=moved_n, moved_bytes=moved_b)
         recs.append((float(ma), 1.0 if fired else 0.0, float(moved_n),
                      float(moved_b)))
-    return se, ws, placement, recs
+    return se, ws, placement, recs, obs_state
 
 
 # ------------------------------------------------------------- the entry --
@@ -419,6 +450,7 @@ def run_ep_replay(
     scan: Optional[bool] = None,
     num_shards: Optional[int] = None,
     mesh=None,
+    telemetry=None,
 ) -> EPReplayResult:
     """Replay ``steps`` training steps of live expert rebalancing.
 
@@ -433,6 +465,8 @@ def run_ep_replay(
     shard count."""
     strat, kw, trig, _bpl, _lb_on = _resolve(
         workload, strategy, strategy_kwargs, trigger, lb_every)
+    tel = obs_telemetry.resolve(telemetry)
+    tel = tel if tel.enabled else None
     E, R = int(workload.num_experts), int(workload.num_ranks)
     if E % R:
         raise ValueError(f"num_experts={E} must divide num_ranks={R}")
@@ -457,15 +491,16 @@ def run_ep_replay(
     if scan:
         runner = _scanned_ep_runner(
             workload, int(steps), strategy, tuple(sorted(kw.items())),
-            trig, int(lb_every), float(ema))
-        (se, ws, placement, _, _, _), ys = runner(
-            *_initial_state(workload))
+            trig, int(lb_every), float(ema), tel)
+        final, ys = runner(*_initial_state(workload))
+        se, ws, placement = final[0], final[1], final[2]
+        obs_state = final[6] if tel else None
         ma, fired, moved_n, moved_b = jax.device_get(ys)
         recs = np.stack([ma, fired, moved_n, moved_b], axis=1)
     else:
-        se, ws, placement, rec_list = _host_ep_loop(
+        se, ws, placement, rec_list, obs_state = _host_ep_loop(
             workload, int(steps), strategy, kw, trig, float(ema),
-            mesh=mesh)
+            mesh=mesh, tel=tel)
         recs = np.asarray(rec_list, np.float64).reshape(int(steps), 4)
     return EPReplayResult(
         max_avg=np.asarray(recs[:, 0], np.float64),
@@ -476,7 +511,9 @@ def run_ep_replay(
         final_slot_expert=np.asarray(se, np.int32),
         final_wsig=np.asarray(ws, np.float32),
         scanned=bool(scan), sharded=bool(sharded),
-        wall_seconds=time.perf_counter() - t0)
+        wall_seconds=time.perf_counter() - t0,
+        telemetry=(obs_telemetry.snapshot(obs_state, tel)
+                   if tel else None))
 
 
 # ------------------------------------------- real-weight execution layer --

@@ -1,0 +1,340 @@
+"""Observability contracts (obs/telemetry, obs/metrics, obs/trace_export).
+
+The load-bearing guarantees:
+
+  * **Off is free** — on every replay path, passing ``telemetry="off"``
+    (or no config at all) leaves the replay **bit-for-bit** identical to
+    the pre-telemetry path and attaches no snapshot.  The off/absent
+    configs normalize to the same runner-cache key, so the compiled
+    program is literally the same executable.
+  * **Recording is passive** — ``level="full"`` changes no replay output
+    either; it only adds the scan-carried StepRecord ring.
+  * The ring wraps correctly (keeps the *last* ``ring`` records in
+    chronological order, counts drops), counters are monotone, and the
+    exported Chrome trace passes the shared format validator that the
+    CI observability step runs.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import telemetry as obs
+from repro.obs import trace_export
+from repro.pic import driver
+from repro.serve import replay as serve_replay
+from repro.sim import scenarios, simulator
+from repro.train import ep_runtime
+
+SERIES_FIELDS = ("max_avg", "ext_int", "migrations", "lb_fired",
+                 "max_load", "migrated_load", "final_assignment")
+PIC_FIELDS = ("max_avg", "ext_bytes", "int_bytes", "migrations",
+              "migrated_bytes", "lb_steps", "final_x", "final_y")
+SERVE_FIELDS = ("max_avg", "lb_fired", "moved_sessions", "moved_kv_bytes",
+                "prefix_local", "deferred", "occ_max", "final_uid",
+                "final_replica", "final_kv")
+EP_FIELDS = ("max_avg", "lb_fired", "moved_experts", "moved_bytes",
+             "final_placement", "final_slot_expert", "final_wsig")
+
+
+def _assert_bitwise(ref, got, fields):
+    for f in fields:
+        a, b = getattr(ref, f), getattr(got, f)
+        if a is None and b is None:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"telemetry changed replay output {f}")
+
+
+def _sim_case():
+    prob, evolve = scenarios.get("stencil-wave").instantiate(
+        grid=8, num_nodes=4)
+    kw = dict(steps=14, lb_every=4, strategy="diff-comm",
+              strategy_kwargs=dict(k=2))
+    return prob, evolve, kw
+
+
+# --------------------------------------- off-parity: every replay path --
+
+
+@pytest.mark.parametrize("scan", [True, False])
+def test_sim_off_parity(scan):
+    prob, evolve, kw = _sim_case()
+    base = simulator.run_series(prob, evolve, scan=scan, **kw)
+    off = simulator.run_series(prob, evolve, scan=scan, telemetry="off",
+                               **kw)
+    absent = simulator.run_series(prob, evolve, scan=scan, telemetry=None,
+                                  **kw)
+    assert off.telemetry is None and absent.telemetry is None
+    _assert_bitwise(base, off, SERIES_FIELDS)
+    _assert_bitwise(base, absent, SERIES_FIELDS)
+
+
+def test_sim_sharded_off_parity():
+    prob, evolve, kw = _sim_case()
+    base = simulator.run_series_sharded(prob, evolve, **kw)
+    off = simulator.run_series_sharded(prob, evolve, telemetry="off", **kw)
+    assert off.telemetry is None
+    _assert_bitwise(base, off, SERIES_FIELDS)
+
+
+def _pic_cfg(**kw):
+    base = dict(L=100, n_particles=2000, steps=12, k=1, rho=0.9, cx=10,
+                cy=10, num_pes=4, mapping="striped", lb_every=4,
+                strategy="diff-comm", strategy_kwargs=dict(k=2), seed=0)
+    base.update(kw)
+    return driver.PICConfig(**base)
+
+
+@pytest.mark.parametrize("path_kw", [dict(scan=True),
+                                     dict(sharded_replay=True)])
+def test_pic_off_parity(path_kw):
+    base = driver.run(_pic_cfg(**path_kw))
+    off = driver.run(_pic_cfg(telemetry="off", **path_kw))
+    assert off.telemetry is None
+    _assert_bitwise(base, off, PIC_FIELDS)
+
+
+def test_serve_off_parity():
+    w = serve_replay.ServeWorkload(num_sessions=32, num_replicas=4)
+    kw = dict(steps=16, lb_every=4)
+    base = serve_replay.run_serve_replay(w, **kw)
+    off = serve_replay.run_serve_replay(w, telemetry="off", **kw)
+    assert off.telemetry is None
+    _assert_bitwise(base, off, SERVE_FIELDS)
+
+
+def test_ep_off_parity():
+    w = ep_runtime.RoutingWorkload(num_experts=16, num_ranks=4)
+    kw = dict(steps=12, lb_every=4)
+    base = ep_runtime.run_ep_replay(w, **kw)
+    off = ep_runtime.run_ep_replay(w, telemetry="off", **kw)
+    assert off.telemetry is None
+    _assert_bitwise(base, off, EP_FIELDS)
+
+
+# ------------------------------------ recording is passive + complete --
+
+
+@pytest.mark.parametrize("level", ["counters", "full"])
+def test_sim_full_recording_is_passive(level):
+    prob, evolve, kw = _sim_case()
+    base = simulator.run_series(prob, evolve, scan=True, **kw)
+    rec = simulator.run_series(prob, evolve, scan=True, telemetry=level,
+                               **kw)
+    _assert_bitwise(base, rec, SERIES_FIELDS)
+    snap = rec.telemetry
+    assert snap is not None and snap.config.level == level
+    assert snap.steps_total == kw["steps"] and snap.dropped == 0
+    assert snap.records.shape == (kw["steps"], len(obs.FIELDS))
+    np.testing.assert_array_equal(snap.column("t"),
+                                  np.arange(kw["steps"]))
+    np.testing.assert_array_equal(snap.column("fired"),
+                                  np.asarray(base.lb_fired, np.float32))
+    if level == "full":
+        assert snap.node_loads.shape == (kw["steps"], prob.num_nodes)
+        # per-node lanes sum to the workload the aggregates describe
+        avg = snap.node_loads.mean(axis=1)
+        np.testing.assert_allclose(avg, snap.column("avg_load"),
+                                   rtol=1e-5)
+    else:
+        assert snap.node_loads is None
+
+
+def test_sharded_full_matches_scanned_records():
+    prob, evolve, kw = _sim_case()
+    ref = simulator.run_series(prob, evolve, scan=True, telemetry="full",
+                               **kw)
+    sh = simulator.run_series_sharded(prob, evolve, telemetry="full", **kw)
+    np.testing.assert_array_equal(ref.telemetry.records,
+                                  sh.telemetry.records)
+    np.testing.assert_array_equal(ref.telemetry.node_loads,
+                                  sh.telemetry.node_loads)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: serve_replay.run_serve_replay(
+        serve_replay.ServeWorkload(num_sessions=32, num_replicas=4),
+        steps=16, lb_every=4, telemetry="full"),
+    lambda: ep_runtime.run_ep_replay(
+        ep_runtime.RoutingWorkload(num_experts=16, num_ranks=4,
+                                   hot_amp=6.0, drift_period=4,
+                                   alpha=1.5),
+        steps=20, lb_every=3, telemetry="full"),
+    lambda: driver.run(_pic_cfg(scan=True, telemetry="full")),
+])
+def test_full_snapshot_on_other_paths(make):
+    res = make()
+    snap = res.telemetry
+    assert snap is not None and snap.dropped == 0
+    fired = (res.lb_fired if hasattr(res, "lb_fired")
+             else res.lb_steps)
+    assert snap.column("fired").sum() == np.asarray(fired).sum() > 0
+    assert (snap.column("moved_items") > 0).any()
+
+
+# ------------------------------------------------- config resolution --
+
+
+def test_resolve_levels():
+    assert not obs.resolve(None).enabled
+    assert not obs.resolve("off").enabled
+    c = obs.resolve("counters")
+    assert c.enabled and not c.full
+    f = obs.resolve("full")
+    assert f.enabled and f.full
+    cfg = obs.TelemetryConfig(level="full", ring=7)
+    assert obs.resolve(cfg) is cfg
+    with pytest.raises(ValueError):
+        obs.resolve("verbose")
+    with pytest.raises(ValueError):
+        obs.TelemetryConfig(level="full", ring=0)
+
+
+# --------------------------------------------- ring wraparound (prop) --
+
+
+@settings(max_examples=30, deadline=None)
+@given(steps=st.integers(min_value=1, max_value=40),
+       ring=st.integers(min_value=1, max_value=17))
+def test_ring_keeps_last_records_chronologically(steps, ring):
+    cfg = obs.TelemetryConfig(level="full", ring=ring)
+    P = 3
+    state = obs.init_state(cfg, P)
+    for t in range(steps):
+        state = obs.record(
+            state, cfg, t=jnp.int32(t),
+            node_loads=jnp.arange(P, dtype=jnp.float32) + t,
+            fired=jnp.float32(t % 2), sweeps=jnp.float32(t))
+    snap = obs.snapshot(state, cfg)
+    kept = min(steps, ring)
+    assert snap.steps_total == steps
+    assert snap.dropped == max(0, steps - ring)
+    assert snap.records.shape == (kept, len(obs.FIELDS))
+    expect_t = np.arange(steps)[-kept:]
+    np.testing.assert_array_equal(snap.column("t"), expect_t)
+    np.testing.assert_array_equal(snap.column("sweeps"), expect_t)
+    # node-load lanes wrap with the same chronology
+    np.testing.assert_array_equal(
+        snap.node_loads[:, 0], expect_t.astype(np.float32))
+
+
+# ------------------------------------------------- metrics registry --
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(min_value=1, max_value=50),
+       inc=st.integers(min_value=0, max_value=9))
+def test_counter_monotone(n, inc):
+    reg = obs_metrics.MetricsRegistry()
+    c = reg.counter("x")
+    prev = c.value
+    assert prev == 0
+    for _ in range(n):
+        c.inc(inc)
+        assert c.value >= prev        # monotone under any inc sequence
+        prev = c.value
+    assert c.value == n * inc
+
+
+def test_counter_rejects_negative_and_gauge_does_not():
+    reg = obs_metrics.MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("x").inc(-1)
+    reg.gauge("g").set(-5.0)
+    assert reg.snapshot()["g"] == -5.0
+
+
+def test_registry_snapshot_and_reset():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2)           # same name → same counter
+    reg.gauge("b").set(1.5)
+    assert reg.snapshot() == {"a": 3, "b": 1.5}
+    reg.reset()
+    assert reg.snapshot() == {}
+
+
+def test_default_registry_helpers():
+    obs_metrics.reset()
+    obs_metrics.counter("t/c").inc(4)
+    obs_metrics.gauge("t/g").set(2.0)
+    snap = obs_metrics.snapshot()
+    assert snap["t/c"] == 4 and snap["t/g"] == 2.0
+    obs_metrics.reset()
+    assert "t/c" not in obs_metrics.snapshot()
+
+
+# ----------------------------------------------------- trace export --
+
+
+def _full_snapshot():
+    prob, evolve, kw = _sim_case()
+    res = simulator.run_series(prob, evolve, scan=True, telemetry="full",
+                               **kw)
+    assert res.lb_fired.sum() > 0
+    return res
+
+
+def test_chrome_trace_valid_and_complete(tmp_path):
+    res = _full_snapshot()
+    path = tmp_path / "trace.json"
+    trace = trace_export.export_chrome_trace(res.telemetry,
+                                             path=str(path),
+                                             label="test-replay")
+    assert trace_export.validate_chrome_trace(trace) == []
+    reread = json.loads(path.read_text())
+    assert trace_export.validate_chrome_trace(reread) == []
+
+    ev = trace["traceEvents"]
+    names = [e["name"] for e in ev]
+    # per-node load lanes (full level), fire instants, step slices
+    assert "node/000 load" in names and "node/003 load" in names
+    fires = [e for e in ev if e["name"] == "lb-fire"]
+    assert len(fires) == int(res.lb_fired.sum())
+    slices = [e for e in ev if e["ph"] == "X" and
+              e["name"].startswith("step ")]
+    assert len(slices) == len(res.telemetry.records)
+    # migrations exported as matched flow pairs
+    starts = [e for e in ev if e["ph"] == "s"]
+    finishes = [e for e in ev if e["ph"] == "f"]
+    assert len(starts) == len(finishes) > 0
+    assert trace["otherData"]["telemetry_level"] == "full"
+    assert trace["otherData"]["dropped"] == 0
+
+
+def test_counters_level_trace_uses_aggregate_lanes():
+    prob, evolve, kw = _sim_case()
+    res = simulator.run_series(prob, evolve, scan=True,
+                               telemetry="counters", **kw)
+    trace = trace_export.export_chrome_trace(res.telemetry)
+    assert trace_export.validate_chrome_trace(trace) == []
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert "max_load" in names and "p95_load" in names
+    assert not any(n.startswith("node/") for n in names)
+
+
+def test_validator_flags_corruption():
+    res = _full_snapshot()
+    trace = trace_export.export_chrome_trace(res.telemetry)
+
+    bad = json.loads(json.dumps(trace))
+    del [e for e in bad["traceEvents"] if e["ph"] != "M"][0]["ts"]
+    assert any("missing 'ts'" in e for e in
+               trace_export.validate_chrome_trace(bad))
+
+    bad = json.loads(json.dumps(trace))
+    bad["traceEvents"].append({"name": "migration", "ph": "s",
+                               "id": 999_999, "pid": 0, "tid": 1,
+                               "ts": bad["traceEvents"][-1]["ts"]})
+    assert any("flow id 999999" in e for e in
+               trace_export.validate_chrome_trace(bad))
+
+    assert trace_export.validate_chrome_trace({}) != []
+    assert trace_export.validate_chrome_trace(
+        {"traceEvents": []}) != []
